@@ -1,0 +1,29 @@
+"""Benchmark harness helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (the repo-wide
+contract) and returns them for benchmarks/run.py aggregation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw):
+    """Median wall time (µs) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows

@@ -1,0 +1,41 @@
+"""Pallas kernels vs their jnp oracles (XLA-fused) — wall time on CPU is
+interpret-mode (not meaningful); what matters here is correctness parity
+and the FLOP counts used by the roofline. On TPU the same harness times
+Mosaic-compiled kernels.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from .common import emit, time_call
+
+RNG = np.random.default_rng(0)
+
+
+def kernels():
+    rows = []
+    x = jnp.asarray(RNG.normal(size=(4096, 16)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(8, 16)), jnp.float32)
+
+    t = time_call(lambda: ref.fused_summary_ref(x), iters=2)
+    rows.append(("kern/fused_summary/xla_ref", t,
+                 f"flops={4096*16*6:.2e}"))
+    t = time_call(lambda: ref.gram_ref(x), iters=2)
+    rows.append(("kern/gram/xla_ref", t, f"flops={2*4096*16*16:.2e}"))
+    t = time_call(lambda: ref.kmeans_assign_ref(x, c), iters=2)
+    rows.append(("kern/kmeans_assign/xla_ref", t,
+                 f"flops={2*4096*16*8:.2e}"))
+    q = jnp.asarray(RNG.normal(size=(4, 256, 64)), jnp.float32)
+    t = time_call(lambda: ref.attention_ref(q, q, q), iters=2)
+    rows.append(("kern/attention/xla_ref", t,
+                 f"flops={4*4*256*256*64:.2e}"))
+    # interpret-mode parity check (correctness, not speed)
+    o = ops.gram(x, block_rows=512)
+    err = float(jnp.abs(o - ref.gram_ref(x)).max())
+    rows.append(("kern/gram/pallas_interpret_maxerr", err, "parity"))
+    return emit(rows)
+
+
+ALL = [kernels]

@@ -1,0 +1,47 @@
+"""Out-of-core k-means at "billion-scale" proportions (scaled to CPU).
+
+    PYTHONPATH=src python examples/kmeans_ooc.py
+
+The paper's MixGaussian-1B experiment in miniature: a mixture-of-Gaussians
+dataset that lives on the slow tier (host numpy = the SSD stand-in) is
+clustered without ever materializing it on the device tier.  Each Lloyd
+iteration is ONE fused streaming pass (distances → argmin → groupby sinks),
+and the compiled plan is reused across iterations (plan cache).
+"""
+import time
+
+import numpy as np
+
+from repro.core import fm
+from repro.algorithms import kmeans
+
+rng = np.random.default_rng(42)
+k, p = 10, 32
+n = 1_000_000                       # paper: 1B rows; CPU example: 1M
+
+print(f"sampling MixGaussian-{n/1e6:.0f}M ({n}x{p}, {n*p*4/2**20:.0f} MiB) "
+      "on the out-of-core tier...")
+means = rng.normal(size=(k, p)) * 8
+X_host = np.empty((n, p), np.float32)
+sizes = np.full(k, n // k)
+sizes[: n % k] += 1
+ofs = 0
+for j in range(k):
+    X_host[ofs:ofs + sizes[j]] = means[j] + rng.normal(size=(sizes[j], p))
+    ofs += sizes[j]
+rng.shuffle(X_host)
+
+X = fm.conv_R2FM(X_host, host=True)          # stays on the slow tier
+
+t0 = time.perf_counter()
+res = kmeans(X, k=k, max_iter=15, seed=0)
+dt = time.perf_counter() - t0
+
+d = np.linalg.norm(res.centers[:, None] - means[None], axis=-1)
+print(f"done in {dt:.1f}s ({res.iters} iterations, "
+      f"{n * p * 4 * res.iters / dt / 2**30:.2f} GiB/s streamed)")
+print(f"wss = {res.wss:.3e}")
+print(f"recovered centers within {d.min(1).max():.3f} of truth "
+      f"({(d.min(1) < 0.5).sum()}/{k} exact)")
+assert (d.min(1) < 1.0).all(), "failed to recover mixture centers"
+print("OK")

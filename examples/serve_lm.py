@@ -1,0 +1,15 @@
+"""Batched serving example across architecture families (deliverable b).
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Prefill + greedy decode on three different cache machineries:
+  * dense GQA KV cache        (llama family)
+  * SSM state + conv window   (mamba2 — O(1) memory per token)
+  * hybrid shared-block KV    (zamba2)
+"""
+from repro.launch import serve
+
+for arch in ("llama3.2-3b", "mamba2-1.3b", "zamba2-7b"):
+    print(f"\n=== {arch} (reduced config) ===")
+    serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "12"])

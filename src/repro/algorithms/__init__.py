@@ -1,0 +1,11 @@
+"""The paper's evaluation algorithms (§IV-A), written on the R-like GenOps
+API — FlashMatrix "executes the R implementations in parallel and out of
+core automatically"; these modules are those R programs, line for line where
+practical."""
+from .summary import summary
+from .correlation import correlation
+from .svd import svd_tall
+from .kmeans import kmeans
+from .gmm import gmm
+
+__all__ = ["summary", "correlation", "svd_tall", "kmeans", "gmm"]

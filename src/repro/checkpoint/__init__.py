@@ -1,0 +1,3 @@
+"""Atomic, async, sharded, elastic checkpointing."""
+from . import checkpoint
+from .checkpoint import Checkpointer

@@ -1,0 +1,20 @@
+"""Assigned architecture configs (--arch <id>) + the paper's own workloads."""
+from . import base
+from .base import ArchConfig, SHAPES, ShapeSpec, reduced_for_smoke
+
+ARCH_IDS = [
+    "paligemma-3b", "llama3.2-3b", "granite-8b", "qwen2-72b", "qwen2-0.5b",
+    "arctic-480b", "qwen3-moe-30b-a3b", "mamba2-1.3b", "zamba2-7b",
+    "whisper-medium",
+]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    import importlib
+    mod = importlib.import_module(
+        f"repro.configs.{arch_id.replace('-', '_').replace('.', '_')}")
+    return mod.CONFIG
+
+
+__all__ = ["base", "ArchConfig", "SHAPES", "ShapeSpec", "reduced_for_smoke",
+           "ARCH_IDS", "get_config"]

@@ -1,0 +1,14 @@
+"""FlashMatrix/FlashR core: GenOps, lazy DAG, fusion, streaming materialization.
+
+Public surface:
+  * `repro.core.fm` — the R-like namespace (paper's programming interface)
+  * `repro.core.genops` — raw GenOps (paper Table I)
+  * `repro.core.vudf` — VUDF registry (extend with register_*)
+  * `repro.core.matrix` — FMMatrix handles + partition policy
+"""
+from . import dtypes, vudf, matrix, dag, genops, fusion, materialize
+from . import rlike as fm
+from .matrix import FMMatrix
+
+__all__ = ["dtypes", "vudf", "matrix", "dag", "genops", "fusion",
+           "materialize", "fm", "FMMatrix"]

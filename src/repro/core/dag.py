@@ -1,0 +1,457 @@
+"""Expression DAG for lazy evaluation (paper §III-E).
+
+A lazily evaluated GenOp outputs a *virtual matrix* capturing the
+computation and references to its input matrices.  The DAG has two node
+classes, exactly as the paper's Fig. 5 distinguishes:
+
+* **row-local nodes** ("the first type ... generates matrices with the same
+  long dimension size as the input matrices") — sapply/mapply/mapply.row/
+  mapply.col/agg.row-on-tall/cbind/inner-product-with-a-small-matrix.
+  These fuse: partition *i* of the output needs only partitions *i* of the
+  parents, so an entire chain streams through the fast tier one partition at
+  a time.
+* **sink nodes** ("the second type ... generates matrices with different
+  long dimension sizes") — agg/agg.col-on-tall/groupby.row/inner-product
+  contracting the long dimension.  Sinks produce per-partition *partials*
+  merged with the aggregation VUDF's ``combine`` (paper §III-F: "each thread
+  computes partial aggregation results independently ... in the end,
+  FlashMatrix merges the partial aggregation results").
+
+Classification is by actual long-dimension algebra, not by operator name:
+``fm.agg.row`` on a tall matrix keeps the long dimension (an n-vector), so
+it is row-local and fusable; ``fm.agg.col`` on the same matrix contracts the
+long dimension and is a sink.
+
+All virtual matrices in one DAG share the same long dimension (paper
+§III-E), which `fusion.Plan` validates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dtypes, vudf as vudf_mod
+from .matrix import FMMatrix, DenseStore
+
+_ids = itertools.count()
+
+
+# ---------------------------------------------------------------------------
+# Operands
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Small:
+    """A broadcast operand: a scalar or a small physical array that is
+    replicated to every partition (the paper's computation-node "immutable
+    computation state, such as scalar variables and small matrices")."""
+
+    value: Any  # python scalar or jnp array
+
+    @property
+    def dtype(self):
+        if hasattr(self.value, "dtype"):
+            return dtypes.canon(self.value.dtype)
+        if isinstance(self.value, bool):
+            return jnp.dtype(jnp.bool_)
+        if isinstance(self.value, int):
+            return jnp.dtype(jnp.int64)
+        return jnp.dtype(jnp.float32)
+
+
+Operand = Union["Node", Small]
+
+
+# ---------------------------------------------------------------------------
+# Nodes
+# ---------------------------------------------------------------------------
+
+class Node:
+    """Base DAG node.  ``shape`` is the logical (nrow, ncol) of the output;
+    row-local nodes always have nrow == the DAG's long dimension."""
+
+    kind: str = "?"
+
+    def __init__(self, shape, dtype, parents: Sequence[Operand], name=""):
+        self.id = next(_ids)
+        self.shape = (int(shape[0]), int(shape[1]))
+        self.dtype = dtypes.canon(dtype)
+        self.parents = list(parents)
+        self.name = name or f"{self.kind}#{self.id}"
+        # Materialization control (paper: fm.set.mate.level / write-through
+        # cache).  None = stay virtual; 'device' | 'host' = persist the
+        # materialized partitions during the next DAG execution.
+        self.save: Optional[str] = None
+
+    # Row-local nodes implement block_eval; sinks implement the
+    # identity/update/combine/finalize quartet.
+    @property
+    def is_sink(self) -> bool:
+        return False
+
+    @property
+    def nrow(self):
+        return self.shape[0]
+
+    @property
+    def ncol(self):
+        return self.shape[1]
+
+    def parent_nodes(self):
+        return [p for p in self.parents if isinstance(p, Node)]
+
+    def flops_per_row(self) -> float:
+        """FLOPs per long-dim element — feeds the complexity/roofline counters."""
+        return 0.0
+
+    def __repr__(self):
+        return f"<{self.kind} {self.name} {self.shape} {self.dtype.name}>"
+
+
+class LeafNode(Node):
+    kind = "leaf"
+
+    def __init__(self, mat: FMMatrix):
+        super().__init__(mat.shape, mat.dtype, [], name=mat.name or None)
+        self.mat = mat
+
+    def block_eval(self, blocks, offset):
+        raise AssertionError("leaves are sliced by the executor, not evaluated")
+
+
+class MapNode(Node):
+    """Row-local computation node.  ``op`` dispatches the eval rule."""
+
+    def __init__(self, op: str, shape, dtype, parents, fn_info, name=""):
+        self.kind = op
+        super().__init__(shape, dtype, parents, name)
+        self.fn_info = fn_info  # op-specific payload (VUDFs, axes, ...)
+
+    def flops_per_row(self) -> float:
+        info = self.fn_info
+        op = self.kind
+        if op in ("sapply", "mapply", "mapply_row", "mapply_col"):
+            return info["vudf"].flops * self.ncol
+        if op == "agg_row":
+            return info["vudf"].flops * self.parents[0].shape[1]
+        if op == "matmul_small":
+            k = self.parents[0].shape[1]
+            return 2.0 * k * self.ncol  # f1+f2 per (col, k)
+        if op == "groupby_col":
+            return self.parents[0].shape[1]
+        return 0.0
+
+    # -- evaluation ----------------------------------------------------------
+    def block_eval(self, blocks, offset):
+        """blocks: list of per-parent partition arrays (Small operands appear
+        as their raw values).  offset: global row offset of this partition."""
+        op = self.kind
+        info = self.fn_info
+        if op == "sapply":
+            return info["vudf"].fn(blocks[0])
+        if op == "mapply":
+            return info["vudf"].fn(blocks[0], blocks[1])
+        if op == "mapply_row":
+            # CC_ij = f(AA_ij, B_j): vector indexed by column -> broadcast row.
+            v = blocks[1]
+            v = v.reshape(1, -1)
+            return info["vudf"].fn(blocks[0], v)
+        if op == "mapply_col":
+            # CC_ij = f(AA_ij, B_i): vector indexed by row -> partitioned
+            # alongside the matrix (a one-column long operand).
+            v = blocks[1]
+            v = v.reshape(-1, 1)
+            return info["vudf"].fn(blocks[0], v)
+        if op == "agg_row":
+            agg = info["vudf"]
+            part = agg.aggregate(blocks[0], 1, 0)
+            out = agg.finalize(part)
+            return out.reshape(-1, 1)
+        if op == "cbind":
+            cols = [b if b.ndim == 2 else b.reshape(-1, 1) for b in blocks]
+            return jnp.concatenate(cols, axis=1)
+        if op == "matmul_small":
+            return _inner_prod_block(blocks[0], blocks[1],
+                                     info["mul"], info["add"], self.dtype)
+        if op == "groupby_col":
+            # CC_{i,k} = agg over columns j with labels[j]==k; row-local.
+            agg_name = info["vudf"].name
+            labels = blocks[1].reshape(-1).astype(jnp.int32)
+            k = info["num_groups"]
+            onehot = jax.nn.one_hot(labels, k, dtype=blocks[0].dtype)
+            if agg_name in ("sum", "count", "count_nonzero"):
+                base = blocks[0]
+                if agg_name == "count":
+                    base = jnp.ones_like(base)
+                elif agg_name == "count_nonzero":
+                    base = (base != 0).astype(base.dtype)
+                return base @ onehot
+            raise NotImplementedError(
+                f"groupby_col with agg {agg_name!r}; supported: sum/count")
+        raise AssertionError(f"unknown map op {op}")
+
+
+def _inner_prod_block(a_blk, b_small, mul: vudf_mod.BinaryVUDF,
+                      add: vudf_mod.AggVUDF, out_dtype):
+    """inner.prod(tall, small): t = f1(A_ik, B_kj); C_ij = f2-reduce_k t.
+
+    Paper §III-C: for the (mul, sum) semiring on floating types use BLAS —
+    our analog is the MXU via jnp.matmul.  General semirings evaluate f1 on a
+    broadcast (rows, k, ncol_out) tile; k and ncol_out are small by
+    definition of this GenOp so the tile stays cache/VMEM-resident.
+    """
+    if mul.name == "mul" and add.name == "sum" and dtypes.is_floating(out_dtype):
+        return jnp.matmul(a_blk, b_small).astype(out_dtype)
+    t = mul.fn(a_blk[:, :, None], b_small[None, :, :])
+    part = add.aggregate(t, 1, 0)
+    return add.finalize(part).astype(out_dtype)
+
+
+class SinkNode(Node):
+    """Long-dimension-contracting node: evaluated as identity → per-partition
+    update → pairwise combine → finalize."""
+
+    @property
+    def is_sink(self) -> bool:
+        return True
+
+    def identity(self):
+        raise NotImplementedError
+
+    def block_update(self, acc, blocks, offset):
+        raise NotImplementedError
+
+    def combine(self, a, b):
+        raise NotImplementedError
+
+    def finalize(self, acc):
+        return acc
+
+
+class AggFullNode(SinkNode):
+    kind = "agg"
+
+    def __init__(self, parent: Node, agg: vudf_mod.AggVUDF):
+        out_dt = agg.out_dtype(parent.dtype)
+        super().__init__((1, 1), out_dt, [parent], name=f"agg[{agg.name}]")
+        self.agg = agg
+        self.acc_dtype = _acc_dtype(agg, parent.dtype)
+
+    def flops_per_row(self) -> float:
+        return self.agg.flops * self.parents[0].shape[1]
+
+    def identity(self):
+        return self.agg.identity((), self.acc_dtype)
+
+    def block_update(self, acc, blocks, offset):
+        part = self.agg.aggregate(blocks[0], None, offset)
+        return self.agg.combine(acc, part)
+
+    def combine(self, a, b):
+        return self.agg.combine(a, b)
+
+    def finalize(self, acc):
+        out = self.agg.finalize(acc)
+        return jnp.asarray(out).reshape(1, 1)
+
+
+class AggColNode(SinkNode):
+    """Per-column aggregation over the long (row) dimension: C_j."""
+
+    kind = "agg_col"
+
+    def __init__(self, parent: Node, agg: vudf_mod.AggVUDF):
+        out_dt = agg.out_dtype(parent.dtype)
+        super().__init__((1, parent.ncol), out_dt, [parent],
+                         name=f"agg.col[{agg.name}]")
+        self.agg = agg
+        self.acc_dtype = _acc_dtype(agg, parent.dtype)
+
+    def flops_per_row(self) -> float:
+        return self.agg.flops * self.parents[0].shape[1]
+
+    def identity(self):
+        return self.agg.identity((self.ncol,), self.acc_dtype)
+
+    def block_update(self, acc, blocks, offset):
+        part = self.agg.aggregate(blocks[0], 0, offset)
+        return self.agg.combine(acc, part)
+
+    def combine(self, a, b):
+        return self.agg.combine(a, b)
+
+    def finalize(self, acc):
+        return self.agg.finalize(acc).reshape(1, -1)
+
+
+class GroupByRowNode(SinkNode):
+    """fm.groupby.row: CC_{k,j} = agg over rows i with labels[i]==k.
+
+    The clustering/classification workhorse (paper §III-C) — and, in the LM
+    stack, the combine path of MoE expert dispatch (DESIGN.md §1.4).
+    """
+
+    kind = "groupby_row"
+
+    _AT_OPS = {"sum": "add", "count": "add", "count_nonzero": "add",
+               "min": "min", "max": "max"}
+
+    def __init__(self, parent: Node, labels: Node, agg: vudf_mod.AggVUDF,
+                 num_groups: int):
+        if agg.name not in self._AT_OPS:
+            raise NotImplementedError(
+                f"groupby.row supports {sorted(self._AT_OPS)} aggregation, "
+                f"got {agg.name!r}")
+        out_dt = agg.out_dtype(parent.dtype)
+        super().__init__((num_groups, parent.ncol), out_dt, [parent, labels],
+                         name=f"groupby.row[{agg.name}]")
+        self.agg = agg
+        self.num_groups = num_groups
+        self.acc_dtype = _acc_dtype(agg, parent.dtype)
+
+    def flops_per_row(self) -> float:
+        return self.parents[0].shape[1]
+
+    def identity(self):
+        return self.agg.identity((self.num_groups, self.ncol), self.acc_dtype)
+
+    def block_update(self, acc, blocks, offset):
+        vals, labels = blocks[0], blocks[1].reshape(-1).astype(jnp.int32)
+        if self.agg.name == "count":
+            vals = jnp.ones_like(vals, self.acc_dtype)
+        elif self.agg.name == "count_nonzero":
+            vals = (vals != 0).astype(self.acc_dtype)
+        else:
+            vals = vals.astype(self.acc_dtype)
+        ref = acc.at[labels]
+        part = getattr(ref, self._AT_OPS[self.agg.name])(
+            vals, mode="drop", unique_indices=False)
+        return part
+
+    def combine(self, a, b):
+        return self.agg.combine(a, b)
+
+    def finalize(self, acc):
+        return self.agg.finalize(acc)
+
+
+class InnerProdContractNode(SinkNode):
+    """inner.prod contracting the long dimension: C = f2-reduce_i f1(tA_i, B_i).
+
+    This is ``fm.inner.prod(wide, tall)`` with the wide matrix expressed as
+    the lazy transpose of a long-aligned operand (the common R form
+    ``t(X) %*% Y``, e.g. Gram matrices for correlation/SVD and t(R) %*% X in
+    the GMM M-step).  Per partition: partial = f2-reduce over the partition's
+    rows; partials combine with f2 — the exact paper decomposition, and the
+    pattern the `kernels/gram.py` Pallas kernel implements on TPU.
+    """
+
+    kind = "inner_prod"
+
+    def __init__(self, left: Node, right: Node, mul: vudf_mod.BinaryVUDF,
+                 add: vudf_mod.AggVUDF):
+        out_dt = add.out_dtype(mul.out_dtype(left.dtype, right.dtype))
+        super().__init__((left.ncol, right.ncol), out_dt, [left, right],
+                         name=f"inner[{mul.name},{add.name}]")
+        self.mul, self.add = mul, add
+        self.acc_dtype = _acc_dtype(add, mul.out_dtype(left.dtype, right.dtype))
+
+    def flops_per_row(self) -> float:
+        return 2.0 * self.shape[0] * self.shape[1]
+
+    def identity(self):
+        return self.add.identity(self.shape, self.acc_dtype)
+
+    def block_update(self, acc, blocks, offset):
+        a_blk, b_blk = blocks  # both (rows, p) row-aligned
+        if (self.mul.name == "mul" and self.add.name == "sum"
+                and dtypes.is_floating(self.acc_dtype)):
+            part = jnp.matmul(a_blk.T.astype(self.acc_dtype),
+                              b_blk.astype(self.acc_dtype))
+            return self.add.combine(acc, part)
+        t = self.mul.fn(a_blk[:, :, None], b_blk[:, None, :])
+        part = self.add.aggregate(t, 0, offset)
+        return self.add.combine(acc, part)
+
+    def combine(self, a, b):
+        return self.add.combine(a, b)
+
+    def finalize(self, acc):
+        return self.add.finalize(acc).astype(self.dtype)
+
+
+def _acc_dtype(agg: vudf_mod.AggVUDF, in_dtype):
+    """Accumulator dtype: widen low-precision floats so long streaming
+    reductions keep precision (bf16 inputs accumulate in f32) — the TPU
+    analog of the paper accumulating in registers wider than the data."""
+    out = agg.out_dtype(in_dtype)
+    if out == jnp.dtype(jnp.bfloat16):
+        return jnp.dtype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Graph utilities
+# ---------------------------------------------------------------------------
+
+def as_node(mat_or_node) -> Node:
+    if isinstance(mat_or_node, Node):
+        return mat_or_node
+    if isinstance(mat_or_node, FMMatrix):
+        if mat_or_node.is_virtual:
+            return mat_or_node.node
+        return LeafNode(mat_or_node)
+    raise TypeError(type(mat_or_node))
+
+
+def wrap(node: Node, name: str = "") -> FMMatrix:
+    """Wrap a node as a virtual FMMatrix handle."""
+    return FMMatrix(node.shape, node.dtype, node=node, name=name or node.name)
+
+
+def toposort(roots: Sequence[Node]) -> list[Node]:
+    seen: dict[int, Node] = {}
+    order: list[Node] = []
+
+    def visit(n: Node):
+        if n.id in seen:
+            return
+        seen[n.id] = n
+        for p in n.parent_nodes():
+            visit(p)
+        order.append(n)
+
+    for r in roots:
+        visit(r)
+    return order
+
+
+def long_dim_of(roots: Sequence[Node]) -> int:
+    """All matrices in a DAG share one streaming dimension (paper §III-E).
+
+    The partition axis is uniformly ROWS (shape[0]) — wide matrices are
+    simply short streams (the paper handles them as transposed-tall groups;
+    our lazy transpose feeds `inner_prod` the tall orientation, so by the
+    time a node is in a DAG its rows are the stream)."""
+    dims = set()
+    for n in toposort(roots):
+        if isinstance(n, LeafNode):
+            if max(n.shape) > 1:
+                dims.add(n.shape[0])
+        elif not n.is_sink:
+            dims.add(n.shape[0])
+        else:
+            for p in n.parent_nodes():
+                if not p.is_sink:
+                    dims.add(p.shape[0])
+    dims.discard(1)
+    if len(dims) > 1:
+        raise ValueError(
+            f"all matrices in one DAG must share the streaming (row) "
+            f"dimension; got {sorted(dims)}")
+    return dims.pop() if dims else 1

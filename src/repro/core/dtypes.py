@@ -1,0 +1,98 @@
+"""Element-type lattice and promotion rules.
+
+FlashMatrix supports a small set of primitive element types and performs
+*lazy* type casts (paper §III-D: "If a GenOp gets two matrices with different
+element types, it first casts the element type of one matrix to match the
+other. Type casting operations are implemented with fm.sapply and are
+performed lazily.").
+
+We mirror that: a total order (lattice) over the supported dtypes, a
+``promote`` rule, and a ``cast`` VUDF factory used by the DAG builder to
+insert lazy sapply-cast nodes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# The promotion lattice, weakest to strongest.  Mirrors R's logical <
+# integer < double ordering, extended with the narrower machine types the
+# paper supports for storage efficiency.
+_LATTICE = (
+    jnp.dtype(jnp.bool_),
+    jnp.dtype(jnp.int8),
+    jnp.dtype(jnp.int16),
+    jnp.dtype(jnp.int32),
+    jnp.dtype(jnp.int64),
+    jnp.dtype(jnp.bfloat16),
+    jnp.dtype(jnp.float32),
+    jnp.dtype(jnp.float64),
+)
+
+_RANK = {dt: i for i, dt in enumerate(_LATTICE)}
+
+SUPPORTED = frozenset(_LATTICE)
+
+
+def _x64() -> bool:
+    import jax
+    return bool(jax.config.jax_enable_x64)
+
+
+def canon(dtype) -> jnp.dtype:
+    """Canonicalize a user-supplied dtype to a supported lattice member.
+
+    When JAX runs with x64 disabled (the default), 64-bit members degrade to
+    their 32-bit counterparts so accumulator identities stay representable.
+    """
+    dt = jnp.dtype(dtype)
+    if not _x64():
+        if dt == jnp.dtype("int64"):
+            dt = jnp.dtype(jnp.int32)
+        elif dt == jnp.dtype("float64"):
+            dt = jnp.dtype(jnp.float32)
+    if dt in _RANK:
+        return dt
+    # Map unsupported widths onto the nearest supported member.
+    if dt.kind == "f":
+        return jnp.dtype(jnp.float32) if dt.itemsize <= 4 else jnp.dtype(jnp.float64)
+    if dt.kind in ("i", "u"):
+        return jnp.dtype(jnp.int32) if dt.itemsize <= 4 else jnp.dtype(jnp.int64)
+    if dt.kind == "b":
+        return jnp.dtype(jnp.bool_)
+    raise TypeError(f"unsupported element type: {dtype!r}")
+
+
+def rank(dtype) -> int:
+    return _RANK[canon(dtype)]
+
+
+def promote(a, b) -> jnp.dtype:
+    """Binary promotion: the stronger of the two lattice members."""
+    ca, cb = canon(a), canon(b)
+    return ca if _RANK[ca] >= _RANK[cb] else cb
+
+
+def is_floating(dtype) -> bool:
+    return canon(dtype).kind == "f"
+
+
+def to_floating(dtype) -> jnp.dtype:
+    """The dtype arithmetic means (e.g. division) promotes to."""
+    dt = canon(dtype)
+    if dt.kind == "f":
+        return dt
+    return jnp.dtype(jnp.float64) if dt == jnp.dtype(jnp.int64) else jnp.dtype(jnp.float32)
+
+
+def nbytes(dtype) -> int:
+    return canon(dtype).itemsize
+
+
+def np_equiv(dtype) -> np.dtype:
+    """numpy equivalent for host-side (out-of-core) staging buffers."""
+    dt = canon(dtype)
+    if dt == jnp.dtype(jnp.bfloat16):
+        # numpy has no bfloat16; stage as float32 and cast on device.
+        return np.dtype(np.float32)
+    return np.dtype(dt.name)

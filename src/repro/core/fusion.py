@@ -1,0 +1,242 @@
+"""Fusion optimizer: turn a DAG cut into a single partition-streaming program.
+
+Paper §III-E/F: FlashMatrix "evaluates expressions lazily and fuses
+operations aggressively in a single parallel execution job", materializing
+multiple sinks together and streaming one partition through the *entire*
+fused chain before touching the next partition ("After materializing a
+CPU-level partition, the thread passes the partition to the subsequent
+operation in the DAG, instead of materializing the next CPU-level partition
+in the same matrix").
+
+`Plan` compiles the induced subgraph of the requested outputs into
+
+    step(accs, source_blocks, offset) -> (accs', row_local_outputs)
+
+which the materializer invokes once per I/O-level partition (stream mode /
+out-of-core) or once for the whole matrix (whole mode — XLA then performs
+the cache-level fusion the paper implements by hand).  Because ``step`` is a
+single traced function, every intermediate virtual matrix lives only as a
+value inside one XLA computation: the analog of never writing intermediates
+to SSD/DRAM.
+
+The plan cuts the DAG at nodes that were previously persisted
+(`fm.set.mate.level` → ``node.cached_store``), mirroring the paper's
+materialization of non-sink matrices reused across iterations.
+
+The plan also exposes the cost counters (FLOPs, bytes in/out) that feed
+benchmarks/complexity.py and the roofline analysis.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from . import dtypes
+from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of)
+from .matrix import FMMatrix, io_partition_rows
+
+
+class Plan:
+    """A fused execution plan over one DAG cut."""
+
+    def __init__(self, outputs: Sequence[FMMatrix], *, fuse: bool = True):
+        self.requested = [as_node(o) for o in outputs]
+        self.fuse = fuse
+
+        self.order = self._cut_toposort(list(self.requested))
+        self.sinks: list[SinkNode] = [n for n in self.order if n.is_sink]
+        self.row_local_roots: list[Node] = [
+            n for n in self.requested
+            if not n.is_sink and not self._is_source(n)]
+        # Nodes flagged fm.set.mate.level persist during this execution
+        # (paper's write-through materialization of non-sink matrices).
+        self.saves: list[Node] = [
+            n for n in self.order
+            if n.save is not None and not n.is_sink and not self._is_source(n)
+            and n not in self.row_local_roots]
+
+        # Sources = physical leaves + previously-persisted cut points.
+        self.sources: list[tuple[Node, FMMatrix]] = []
+        for n in self.order:
+            if isinstance(n, LeafNode):
+                self.sources.append((n, n.mat))
+            elif getattr(n, "cached_store", None) is not None:
+                self.sources.append((n, n.cached_store))
+
+        self.long_dim = long_dim_of(self.order)
+        for node, mat in self.sources:
+            if mat.shape[0] != self.long_dim and max(mat.shape) != 1:
+                raise ValueError(
+                    f"source {node.name} shape {mat.shape} rows are not "
+                    f"aligned with the streaming dimension {self.long_dim}")
+
+        # I/O-level partition size: budget divided by the number of live
+        # long-aligned matrices in the fused group (paper §III-F chooses "a
+        # relatively small partition size to balance the overhead of
+        # accessing a partition, skew and memory consumption").
+        n_live = max(1, len(self.sources) + len(self.row_local_roots) + len(self.saves))
+        widths = [1]
+        for node, mat in self.sources:
+            widths.append(mat.ncol)
+        for n in self.order:
+            if not self._is_source(n) and not n.is_sink:
+                widths.append(n.ncol)
+        widest_dtype = max((n.dtype for n in self.order), key=dtypes.rank)
+        self.partition_rows = io_partition_rows(max(widths), widest_dtype, n_live)
+
+        # Small (broadcast) operands are runtime ARGUMENTS of the compiled
+        # step, not baked constants — that is what lets a structurally
+        # identical plan (k-means iteration N+1 with new centers) reuse the
+        # compiled executable instead of retracing (see materialize._PLANS).
+        self.smalls: list[Small] = []
+        self._small_pos: dict[int, int] = {}
+        for n in self.order:
+            if self._is_source(n):
+                continue  # cut points: parents live outside this plan
+            for p in n.parents:
+                if isinstance(p, Small) and id(p) not in self._small_pos:
+                    self._small_pos[id(p)] = len(self.smalls)
+                    self.smalls.append(p)
+
+        self._jit_step = jax.jit(self._step)
+        self._jit_step_donated = jax.jit(self._step, donate_argnums=(0, 1))
+        self._jit_combine = jax.jit(self._combine)
+
+    def signature(self) -> str:
+        """Structural identity: two DAG cuts with the same signature can
+        share one compiled plan (the compile-once/stream-many contract)."""
+        import numpy as _np
+        parts = [f"L{self.long_dim}"]
+        pos = {n.id: i for i, n in enumerate(self.order)}
+        for n in self.order:
+            ps = []
+            # sources are cut points: their parents are outside this plan
+            parents = [] if self._is_source(n) else n.parents
+            for p in parents:
+                if isinstance(p, Small):
+                    v = p.value
+                    shape = getattr(v, "shape", ())
+                    dt = getattr(v, "dtype", type(v).__name__)
+                    ps.append(f"S{shape}:{dt}")
+                else:
+                    ps.append(f"N{pos[p.id]}")
+            fn_info = getattr(n, "fn_info", None)
+            fname = ""
+            if fn_info:
+                for key in ("vudf", "mul", "add"):
+                    if key in fn_info:
+                        fname += f":{fn_info[key].name}"
+                if "num_groups" in fn_info:
+                    fname += f":g{fn_info['num_groups']}"
+            extra = ""
+            for attr in ("agg", "mul", "add"):
+                v = getattr(n, attr, None)
+                if v is not None:
+                    extra += f":{v.name}"
+            ng = getattr(n, "num_groups", "")
+            role = "q" if self._is_source(n) else ("s" if n.is_sink else "m")
+            sv = n.save or ""
+            parts.append(f"{role}|{n.kind}|{n.shape}|{n.dtype.name}|{fname}"
+                         f"|{extra}|{ng}|{sv}|{','.join(ps)}")
+        return ";".join(parts)
+
+    def result_nodes(self):
+        """Deterministic result slots (sinks + requested + saves)."""
+        return list(self.sinks) + self.row_local_roots + self.saves
+
+    def small_values(self):
+        return [jnp.asarray(s.value) if hasattr(s.value, "shape")
+                else s.value for s in self.smalls]
+
+    # -- DAG walking -----------------------------------------------------------
+    @staticmethod
+    def _is_source(n: Node) -> bool:
+        return isinstance(n, LeafNode) or getattr(n, "cached_store", None) is not None
+
+    @classmethod
+    def _cut_toposort(cls, roots):
+        """toposort that cuts at nodes previously persisted via save flags."""
+        seen, order = {}, []
+
+        def visit(n: Node):
+            if n.id in seen:
+                return
+            seen[n.id] = n
+            if not cls._is_source(n) or isinstance(n, LeafNode):
+                if getattr(n, "cached_store", None) is None:
+                    for p in n.parent_nodes():
+                        visit(p)
+            order.append(n)
+
+        for r in roots:
+            visit(r)
+        return order
+
+    # -- traced step -----------------------------------------------------------
+    def _step(self, accs, source_blocks, smalls, offset):
+        """One partition through the whole fused DAG.
+
+        ``source_blocks``: dict node-id -> partition array for every source.
+        ``smalls``: runtime values for broadcast operands, positionally
+        aligned with self.smalls.  ``offset``: global index of the
+        partition's first row (makes indexed aggregations like which.min
+        absolute across partitions).
+        """
+        values = dict(source_blocks)
+        outputs = {}
+        for n in self.order:
+            if self._is_source(n):
+                continue
+            blocks = []
+            for p in n.parents:
+                blocks.append(smalls[self._small_pos[id(p)]]
+                              if isinstance(p, Small) else values[p.id])
+            if n.is_sink:
+                accs = dict(accs)
+                accs[n.id] = n.block_update(accs[n.id], blocks, offset)
+            else:
+                values[n.id] = n.block_eval(blocks, offset)
+        for n in self.row_local_roots + self.saves:
+            outputs[n.id] = values[n.id]
+        return accs, outputs
+
+    def _combine(self, a, b):
+        by_id = self.sinks_by_id
+        return {nid: by_id[nid].combine(a[nid], b[nid]) for nid in a}
+
+    @property
+    def sinks_by_id(self):
+        return {n.id: n for n in self.sinks}
+
+    def init_accs(self):
+        return {n.id: n.identity() for n in self.sinks}
+
+    def finalize_accs(self, accs):
+        return {n.id: n.finalize(accs[n.id]) for n in self.sinks}
+
+    # -- cost counters (feed complexity + roofline reports) -----------------------
+    def flop_count(self) -> float:
+        return float(sum(n.flops_per_row() * self.long_dim
+                         for n in self.order if not self._is_source(n)))
+
+    def bytes_in(self) -> int:
+        return int(sum(mat.nbytes() for _, mat in self.sources))
+
+    def bytes_out(self) -> int:
+        total = 0
+        for n in self.row_local_roots + self.saves + list(self.sinks):
+            total += n.nrow * n.ncol * dtypes.nbytes(n.dtype)
+        return int(total)
+
+    def describe(self) -> str:
+        lines = [f"Plan(long_dim={self.long_dim}, partition_rows={self.partition_rows},"
+                 f" fuse={self.fuse})"]
+        for n in self.order:
+            role = ("source" if self._is_source(n)
+                    else "sink" if n.is_sink else "fused")
+            lines.append(f"  [{role:6s}] {n!r}")
+        lines.append(f"  flops={self.flop_count():.3e} bytes_in={self.bytes_in():.3e}"
+                     f" bytes_out={self.bytes_out():.3e}")
+        return "\n".join(lines)

@@ -1,0 +1,293 @@
+"""The Generalized Matrix Operators (GenOps) — paper Table I.
+
+    CC = fm.inner.prod(AA, BB, f1, f2)
+    CC = fm.sapply(AA, f)
+    CC = fm.mapply(AA, BB, f)
+    CC = fm.mapply.row(AA, B, f)   # CC_ij = f(AA_ij, B_j)
+    CC = fm.mapply.col(AA, B, f)   # CC_ij = f(AA_ij, B_i)
+    c  = fm.agg(AA, f)
+    C  = fm.agg.row(AA, f)
+    C  = fm.agg.col(AA, f)
+    CC = fm.groupby.row(AA, B, f)
+    CC = fm.groupby.col(AA, B, f)
+
+Every GenOp is lazy: it returns a *virtual* FMMatrix wrapping a DAG node
+(paper §III-E "FlashMatrix allows lazy evaluation on all GenOps").  Nothing
+computes until `fm.materialize` (core/materialize.py) walks the DAG.
+
+Dtype mismatches insert lazy `sapply` cast nodes (paper §III-D), and scalar
+operands take the bVUDF2/bVUDF3 broadcast forms automatically.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import dtypes, vudf as vudf_mod
+from .dag import (AggColNode, AggFullNode, GroupByRowNode,
+                  InnerProdContractNode, LeafNode, MapNode, Node, Small,
+                  as_node, wrap)
+from .matrix import FMMatrix
+
+MatLike = Union[FMMatrix, Node]
+
+
+def _u(f) -> vudf_mod.UnaryVUDF:
+    return vudf_mod.unary(f) if isinstance(f, str) else f
+
+
+def _b(f) -> vudf_mod.BinaryVUDF:
+    return vudf_mod.binary(f) if isinstance(f, str) else f
+
+
+def _a(f) -> vudf_mod.AggVUDF:
+    return vudf_mod.agg(f) if isinstance(f, str) else f
+
+
+def _cast(node: Node, to_dtype) -> Node:
+    if node.dtype == dtypes.canon(to_dtype):
+        return node
+    cv = vudf_mod.unary(f"cast_{dtypes.canon(to_dtype).name}")
+    return MapNode("sapply", node.shape, to_dtype, [node], {"vudf": cv},
+                   name=f"cast({node.name})")
+
+
+def _promote2(x: Node, y: Node):
+    dt = dtypes.promote(x.dtype, y.dtype)
+    return _cast(x, dt), _cast(y, dt), dt
+
+
+def _is_scalar(v) -> bool:
+    return isinstance(v, (int, float, bool, np.number)) or (
+        hasattr(v, "shape") and getattr(v, "shape", None) == ())
+
+
+def _small_array(v):
+    """Coerce a small operand (R vector / small matrix) to a jnp array."""
+    if isinstance(v, FMMatrix):
+        return jnp.asarray(v.logical_data())
+    return jnp.asarray(v)
+
+
+# ---------------------------------------------------------------------------
+# apply family
+# ---------------------------------------------------------------------------
+
+def sapply(mat: MatLike, f) -> FMMatrix:
+    """Element-wise unary: CC_ij = f(AA_ij)."""
+    f = _u(f)
+    x = as_node(mat)
+    node = MapNode("sapply", x.shape, f.out_dtype(x.dtype), [x], {"vudf": f})
+    return wrap(node)
+
+
+def mapply(a: MatLike, b, f) -> FMMatrix:
+    """Element-wise binary: CC_ij = f(AA_ij, BB_ij).
+
+    A scalar operand on either side selects the bVUDF2/bVUDF3 form; for
+    commutative VUDFs the optimizer may canonicalize the scalar to the right.
+    """
+    f = _b(f)
+    if _is_scalar(b):
+        x = as_node(a)
+        sdt = Small(b).dtype
+        dt = f.out_dtype(x.dtype, sdt)
+        x = _cast(x, dtypes.promote(x.dtype, sdt))
+        node = MapNode("mapply", x.shape, dt, [x, Small(b)], {"vudf": f})
+        return wrap(node)
+    if _is_scalar(a):
+        y = as_node(b)
+        sdt = Small(a).dtype
+        dt = f.out_dtype(sdt, y.dtype)
+        y = _cast(y, dtypes.promote(sdt, y.dtype))
+        flip = vudf_mod.BinaryVUDF(f"{f.name}.sv", lambda u, v, _f=f.fn: _f(v, u),
+                                   f.flops, f.dtype_rule, f.commutative)
+        node = MapNode("mapply", y.shape, dt, [y, Small(a)], {"vudf": flip})
+        return wrap(node)
+    x, y = as_node(a), as_node(b)
+    if x.shape != y.shape:
+        raise ValueError(f"mapply shape mismatch: {x.shape} vs {y.shape}")
+    x, y, _ = _promote2(x, y)
+    node = MapNode("mapply", x.shape, f.out_dtype(x.dtype, y.dtype), [x, y],
+                   {"vudf": f})
+    return wrap(node)
+
+
+def mapply_row(a: MatLike, vec, f) -> FMMatrix:
+    """CC_ij = f(AA_ij, B_j): the vector pairs with each *row* (length ncol).
+
+    ncol is small for TAS matrices, so the vector is broadcast state."""
+    f = _b(f)
+    x = as_node(a)
+    v = _small_array(vec).reshape(-1)
+    if v.shape[0] != x.ncol:
+        raise ValueError(f"mapply.row vector length {v.shape[0]} != ncol {x.ncol}")
+    dt = dtypes.promote(x.dtype, v.dtype)
+    x = _cast(x, dt)
+    v = v.astype(dt)
+    node = MapNode("mapply_row", x.shape, f.out_dtype(dt, dt), [x, Small(v)],
+                   {"vudf": f})
+    return wrap(node)
+
+
+def mapply_col(a: MatLike, vec, f) -> FMMatrix:
+    """CC_ij = f(AA_ij, B_i): the vector pairs with each *column* (length
+    nrow == long dim), so it is partitioned alongside the matrix and may
+    itself be virtual — this is what lets k-means fuse `labels` straight
+    into `groupby` without materializing them."""
+    f = _b(f)
+    x = as_node(a)
+    if isinstance(vec, (FMMatrix, Node)):
+        v = as_node(vec)
+        if max(v.shape) != x.nrow:
+            raise ValueError(
+                f"mapply.col vector length {max(v.shape)} != nrow {x.nrow}")
+        xx, vv, dt = _promote2(x, v)
+        node = MapNode("mapply_col", x.shape, f.out_dtype(dt, dt), [xx, vv],
+                       {"vudf": f})
+        return wrap(node)
+    v = _small_array(vec).reshape(-1)
+    if v.shape[0] != x.nrow:
+        raise ValueError(f"mapply.col vector length {v.shape[0]} != nrow {x.nrow}")
+    leaf = LeafNode(FMMatrix.from_array(v))
+    return mapply_col(a, wrap(leaf), f)
+
+
+def cbind(*mats: MatLike) -> FMMatrix:
+    """Virtual column-bind of long-aligned matrices (row-local, fusable)."""
+    nodes = [as_node(m) for m in mats]
+    n = nodes[0].nrow
+    if any(x.nrow != n for x in nodes):
+        raise ValueError("cbind: row-count mismatch")
+    dt = nodes[0].dtype
+    for x in nodes[1:]:
+        dt = dtypes.promote(dt, x.dtype)
+    nodes = [_cast(x, dt) for x in nodes]
+    ncol = sum(x.ncol for x in nodes)
+    node = MapNode("cbind", (n, ncol), dt, nodes, {})
+    return wrap(node)
+
+
+# ---------------------------------------------------------------------------
+# aggregation family
+# ---------------------------------------------------------------------------
+
+def agg(mat: MatLike, f) -> FMMatrix:
+    """c = f-reduce over all elements (sink)."""
+    f = _a(f)
+    return wrap(AggFullNode(as_node(mat), f))
+
+
+def agg_row(mat: MatLike, f) -> FMMatrix:
+    """C_i = f-reduce over row i.  On a tall matrix this keeps the long
+    dimension: row-local, fusable.  (Wide matrices: transpose first — the
+    rlike layer does this automatically.)"""
+    f = _a(f)
+    x = as_node(mat)
+    acc_needs_offset = f.name in ("which.min", "which.max")
+    del acc_needs_offset  # row-reductions run over the short axis: offset 0.
+    node = MapNode("agg_row", (x.nrow, 1), f.out_dtype(x.dtype), [x],
+                   {"vudf": f}, name=f"agg.row[{f.name}]")
+    return wrap(node)
+
+
+def agg_col(mat: MatLike, f) -> FMMatrix:
+    """C_j = f-reduce over column j: contracts the long dim of a tall matrix
+    (sink)."""
+    f = _a(f)
+    return wrap(AggColNode(as_node(mat), f))
+
+
+# ---------------------------------------------------------------------------
+# groupby family
+# ---------------------------------------------------------------------------
+
+def groupby_row(mat: MatLike, labels: MatLike, f, num_groups: int) -> FMMatrix:
+    """CC_{k,j} = f-reduce over rows i with labels_i == k (sink).
+
+    `labels` is long-aligned and may be virtual (fuses with upstream
+    computation, e.g. which.min output in k-means)."""
+    f = _a(f)
+    x = as_node(mat)
+    lab = as_node(labels) if isinstance(labels, (FMMatrix, Node)) else \
+        LeafNode(FMMatrix.from_array(_small_array(labels).reshape(-1)))
+    return wrap(GroupByRowNode(x, lab, f, int(num_groups)))
+
+
+def groupby_col(mat: MatLike, labels, f, num_groups: int) -> FMMatrix:
+    """CC_{i,k} = f-reduce over columns j with labels_j == k (row-local)."""
+    f = _a(f)
+    x = as_node(mat)
+    lab = _small_array(labels).reshape(-1)
+    if lab.shape[0] != x.ncol:
+        raise ValueError("groupby.col labels must have length ncol")
+    node = MapNode("groupby_col", (x.nrow, int(num_groups)),
+                   f.out_dtype(x.dtype), [x, Small(lab)],
+                   {"vudf": f, "num_groups": int(num_groups)})
+    return wrap(node)
+
+
+# ---------------------------------------------------------------------------
+# inner product
+# ---------------------------------------------------------------------------
+
+def inner_prod(a: MatLike, b, f1="mul", f2="sum") -> FMMatrix:
+    """Generalized matrix multiplication: t = f1(A_ik, B_kj); C_ij = f2_k t.
+
+    Two optimized cases (paper §III-C):
+      * tall (n×p) · small (p×q)  -> tall (n×q): row-local, fusable;
+      * wide (p×n) · tall (n×q)   -> small (p×q): contracts the long dim
+        (sink).  The wide operand must be the lazy transpose ``t(X)`` of a
+        long-aligned matrix — the R idiom ``t(X) %*% Y`` — or a small
+        physical matrix.
+    """
+    f1, f2 = _b(f1), _a(f2)
+
+    a_is_fm = isinstance(a, (FMMatrix, Node))
+    a_t = a.transposed_of if isinstance(a, FMMatrix) else None
+
+    if a_is_fm and a_t is not None:
+        # t(X) %*% Y: contract the streaming (row) dimension -> sink.
+        # (X may be tall OR wide — rows are the stream either way.)
+        left = as_node(a_t)
+        if isinstance(b, (FMMatrix, Node)):
+            right = as_node(b)
+        else:
+            right = LeafNode(FMMatrix.from_array(_small_array(b)))
+        if left.nrow != right.nrow:
+            raise ValueError(
+                f"inner.prod contraction mismatch: {left.shape} x {right.shape}")
+        lft, rgt, _ = _promote2(left, right)
+        return wrap(InnerProdContractNode(lft, rgt, f1, f2))
+
+    # tall · small: row-local.
+    x = as_node(a)
+    b_arr = _small_array(b)
+    if b_arr.ndim == 1:
+        b_arr = b_arr.reshape(-1, 1)
+    if x.ncol != b_arr.shape[0]:
+        raise ValueError(f"inner.prod shape mismatch: {x.shape} x {b_arr.shape}")
+    dt = dtypes.promote(x.dtype, b_arr.dtype)
+    out_dt = f2.out_dtype(f1.out_dtype(dt, dt))
+    x = _cast(x, dt)
+    node = MapNode("matmul_small", (x.nrow, b_arr.shape[1]), out_dt,
+                   [x, Small(b_arr.astype(dt))],
+                   {"mul": f1, "add": f2}, name=f"inner[{f1.name},{f2.name}]")
+    return wrap(node)
+
+
+# ---------------------------------------------------------------------------
+# materialization control (paper Table II, Control rows)
+# ---------------------------------------------------------------------------
+
+def set_mate_level(mat: FMMatrix, level: str) -> FMMatrix:
+    """fm.set.mate.level: ask the next materialization to persist this
+    virtual matrix ('device' = HBM tier, 'host' = SSD tier)."""
+    if not mat.is_virtual:
+        return mat
+    if level not in ("device", "host"):
+        raise ValueError(f"bad materialization level {level!r}")
+    mat.node.save = level
+    return mat

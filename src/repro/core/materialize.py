@@ -1,0 +1,258 @@
+"""Materialization engine (paper §III-F).
+
+Executes a fused `fusion.Plan` in one of three modes:
+
+* ``whole``  — the entire long dimension in one fused XLA computation.  The
+  default for in-memory (device-resident) matrices; XLA performs the
+  CPU-cache/VMEM-level fusion that the paper implements by hand, and an
+  optional device mesh shards the long dimension for data-parallel
+  execution (partition-per-device ≙ the paper's partition-per-thread, with
+  `psum`-style combines materializing the sinks).
+* ``stream`` — explicit I/O-level partition loop on device: the 2-level-
+  partitioning demonstrator and the building block of out-of-core.
+* ``ooc``    — sources live on the host tier (numpy = the SSD stand-in);
+  partitions are staged host→device asynchronously (JAX dispatch overlaps
+  the copy of partition i+1 with the compute of partition i, the paper's
+  I/O/compute overlap), the fused step consumes them with buffer donation
+  (the paper's memory-chunk recycling), and long-dimension outputs are
+  written back to preallocated host buffers (write-through).
+
+Sinks accumulate partition partials and merge with the aggregation VUDF's
+``combine`` — identical in all three modes, which is exactly why the paper's
+out-of-core execution can match in-memory performance once arithmetic
+intensity is high enough.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Buffer donation is the memory-chunk-recycling analog (DESIGN.md §1); when a
+# donated block has no same-shaped output XLA declines it — harmless, and on
+# CPU (this container) donation is advisory anyway.
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
+
+from . import dtypes
+from .dag import LeafNode, Node, as_node, wrap
+from .fusion import Plan
+from .matrix import DenseStore, FMMatrix
+
+try:  # NamedSharding is only used when a mesh is passed.
+    from jax.sharding import NamedSharding, PartitionSpec as P
+except ImportError:  # pragma: no cover
+    NamedSharding = None
+    P = None
+
+
+# Compiled-plan cache: structurally identical DAG cuts (k-means iteration
+# N+1, GMM E-steps, any steady-state loop) reuse one jitted executable —
+# the compile-once/stream-many behavior a production engine needs.  Keyed
+# by Plan.signature(); sources and Small operands rebind per call.
+_PLANS: dict = {}
+PLAN_CACHE_LIMIT = 256
+
+
+def clear_plan_cache():
+    _PLANS.clear()
+
+
+def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
+                mesh=None, donate: bool = True,
+                reuse_plans: bool = True) -> list[FMMatrix]:
+    """fm.materialize: force computation of virtual matrices.
+
+    Returns one *physical* FMMatrix per argument (physical args pass
+    through).  Multiple arguments materialize together in one fused pass
+    over the data (paper: "FlashMatrix can materialize any virtual matrix in
+    a DAG and can materialize multiple virtual matrices together").
+    """
+    virtuals = [m for m in mats if m.is_virtual]
+    if not virtuals:
+        return list(mats)
+
+    if not fuse:
+        _materialize_eager([m.node for m in virtuals], mode=mode)
+        return [_result_of(m) for m in mats]
+
+    plan = Plan(virtuals)
+    exec_plan = plan
+    if reuse_plans:
+        sig = (plan.signature(), id(mesh))
+        cached = _PLANS.get(sig)
+        if cached is not None:
+            exec_plan = cached
+        elif len(_PLANS) < PLAN_CACHE_LIMIT:
+            _PLANS[sig] = plan
+    _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
+             sources=[m for _, m in plan.sources],
+             smalls=plan.small_values())
+    if exec_plan is not plan:
+        for old_n, new_n in zip(exec_plan.result_nodes(), plan.result_nodes()):
+            new_n.cached_store = old_n.cached_store
+            new_n.save = None
+    return [_result_of(m) for m in mats]
+
+
+def _result_of(m: FMMatrix) -> FMMatrix:
+    if not m.is_virtual:
+        return m
+    store = getattr(m.node, "cached_store", None)
+    assert store is not None, f"{m.node} failed to materialize"
+    return store
+
+
+# ---------------------------------------------------------------------------
+# Fused execution
+# ---------------------------------------------------------------------------
+
+
+
+
+def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
+             sources=None, smalls=None):
+    if sources is None:
+        sources = [m for _, m in plan.sources]
+    if smalls is None:
+        smalls = plan.small_values()
+    mode = _pick_mode_src(sources, mode)
+    if mode == "whole":
+        _execute_whole(plan, mesh, sources, smalls)
+    elif mode == "stream":
+        _execute_stream(plan, sources, smalls, to_host=False, donate=donate)
+    elif mode == "ooc":
+        _execute_stream(plan, sources, smalls, to_host=True, donate=donate)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return plan
+
+
+def _pick_mode_src(sources, mode: str) -> str:
+    if mode != "auto":
+        return mode
+    if any(mat.on_host for mat in sources):
+        return "ooc"
+    return "whole"
+
+
+def _execute_whole(plan: Plan, mesh, sources, smalls):
+    blocks = {}
+    for (node, _), mat in zip(plan.sources, sources):
+        data = mat.logical_data()
+        arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
+        if mesh is not None and mat.shape[0] == plan.long_dim:
+            arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
+        blocks[node.id] = arr
+    accs = plan.init_accs()
+    offset = jnp.zeros((), jnp.int32)
+    accs, outputs = plan._jit_step(accs, blocks, smalls, offset)
+    finals = plan.finalize_accs(accs)
+    _store_results(plan, finals, {nid: [v] for nid, v in outputs.items()},
+                   to_host=False)
+
+
+def _long_spec(mesh):
+    """Shard the long dimension across every data-like mesh axis; model-like
+    axes (if any) replicate — GenOps are row-parallel (DESIGN.md §1.3)."""
+    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data", "x", "i"))
+    if not data_axes:
+        data_axes = (mesh.axis_names[0],)
+    return P(data_axes, None)
+
+
+def _execute_stream(plan: Plan, sources, smalls, *, to_host: bool,
+                    donate: bool = True):
+    rows = plan.partition_rows
+    n = plan.long_dim
+    accs = plan.init_accs()
+    out_parts: dict[int, list] = {x.id: [] for x in plan.row_local_roots + plan.saves}
+    host_bufs: dict[int, np.ndarray] = {}
+
+    for x in plan.row_local_roots + plan.saves:
+        target = x.save or ("host" if to_host else "device")
+        if target == "host":
+            host_bufs[x.id] = np.empty((x.nrow, x.ncol), dtypes.np_equiv(x.dtype))
+
+    step = plan._jit_step_donated if donate else plan._jit_step
+    start = 0
+    while start < n:
+        stop = min(start + rows, n)
+        blocks = {}
+        for (node, _), mat in zip(plan.sources, sources):
+            blk = mat.block(start, stop)
+            if isinstance(blk, np.ndarray):
+                # host→device staging; device_put is async, so the copy of
+                # this partition overlaps the compute of the previous one.
+                blk = jax.device_put(np.ascontiguousarray(blk))
+            elif donate:
+                blk = jnp.copy(blk)  # donation must not consume the source
+            blocks[node.id] = blk
+        accs, outputs = step(accs, blocks, smalls,
+                             jnp.asarray(start, jnp.int32))
+        for nid, val in outputs.items():
+            if nid in host_bufs:
+                host_bufs[nid][start:stop] = np.asarray(val)
+            else:
+                out_parts[nid].append(val)
+        start = stop
+
+    finals = plan.finalize_accs(accs)
+    for nid, buf in host_bufs.items():
+        out_parts[nid] = [buf]
+    _store_results(plan, finals, out_parts, to_host=to_host)
+
+
+def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool):
+    for node in plan.sinks:
+        arr = sink_finals[node.id]
+        node.cached_store = FMMatrix(
+            node.shape, node.dtype, store=DenseStore(arr), name=node.name)
+    for node in plan.row_local_roots + plan.saves:
+        parts = out_parts[node.id]
+        if len(parts) == 1 and isinstance(parts[0], np.ndarray):
+            data = parts[0]
+        elif len(parts) == 1:
+            data = parts[0]
+        else:
+            data = jnp.concatenate(parts, axis=0)
+        target = node.save or ("host" if to_host and not node.save else None)
+        if target == "host" and not isinstance(data, np.ndarray):
+            data = np.asarray(data)
+        node.cached_store = FMMatrix(
+            node.shape, node.dtype, store=DenseStore(data), name=node.name)
+        node.save = None
+
+
+# ---------------------------------------------------------------------------
+# Eager (unfused) execution — the ablation baseline
+# ---------------------------------------------------------------------------
+
+def _materialize_eager(nodes: Sequence[Node], *, mode: str = "auto"):
+    """Materialize every DAG node separately, writing each intermediate out
+    in full before the next operation reads it back.
+
+    This is the behaviour the paper ascribes to frameworks without operation
+    fusion ("MLlib materializes operations such as aggregation separately"),
+    and the `fuse=False` arm of benchmarks/fusion_ablation.py.  Out-of-core,
+    every intermediate roundtrips the host tier (mem-fuse off); in memory,
+    every intermediate lands in HBM (cache-fuse off).
+    """
+    order = Plan._cut_toposort(list(nodes))
+    temp: list[Node] = []
+    ooc = any(isinstance(n, LeafNode) and n.mat.on_host for n in order)
+    for n in order:
+        if Plan._is_source(n):
+            continue
+        sub = Plan([wrap(n)])
+        sub_mode = mode
+        if mode == "auto":
+            sub_mode = "ooc" if ooc else "whole"
+        if ooc and not n.is_sink:
+            n.save = "host"  # roundtrip the slow tier, as an unfused engine must
+        _execute(sub, mode=sub_mode)
+        temp.append(n)
+    return temp

@@ -1,0 +1,361 @@
+"""R-base-like matrix API reimplemented on GenOps (paper Table III).
+
+The paper's whole point: users write ordinary R matrix code and the engine
+runs it parallel + out-of-core.  `FM` wraps an FMMatrix handle with R's
+operator vocabulary; every method lowers to a GenOp, so an arbitrary chain
+of these calls builds one lazy DAG that `fm.materialize` fuses.
+
+    >>> X = fm.runif_matrix(1_000_000, 16)
+    >>> Z = (X - colMeans(X)) / colSds(X)     # lazy: 5 GenOps, one DAG
+    >>> G = crossprod(Z)                       # Gram sink
+    >>> (G,) = fm.materialize(G)               # one fused pass over X
+
+All functions accept and return `FM`.  `conv_FM2R` drops to numpy.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import genops, materialize as mat_mod, matrix as matrix_mod
+from .dag import as_node
+from .matrix import FMMatrix
+
+
+class FM:
+    """R-flavoured wrapper around an FMMatrix handle (virtual or physical)."""
+
+    __slots__ = ("m",)
+
+    def __init__(self, m: FMMatrix):
+        self.m = m
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.m.shape
+
+    @property
+    def nrow(self):
+        return self.m.nrow
+
+    @property
+    def ncol(self):
+        return self.m.ncol
+
+    @property
+    def dtype(self):
+        return self.m.dtype
+
+    @property
+    def is_virtual(self):
+        return self.m.is_virtual
+
+    def __repr__(self):
+        return f"FM({self.m!r})"
+
+    # -- element-wise binary (auto row/col recycling like R sweep) -----------
+    def _bin(self, other, op):
+        if isinstance(other, FM):
+            if other.shape == self.shape:
+                return FM(genops.mapply(self.m, other.m, op))
+            return self._recycle(other, op)
+        return FM(genops.mapply(self.m, other, op))
+
+    def _rbin(self, other, op):
+        # scalar/array `other` on the left.
+        return FM(genops.mapply(other, self.m, op))
+
+    def _recycle(self, other: "FM", op):
+        """R-style recycling of a vector across a matrix: a length-ncol
+        vector applies per row (mapply.row); length-nrow per column
+        (mapply.col)."""
+        n = max(other.shape)
+        if min(other.shape) != 1:
+            raise ValueError(f"shape mismatch: {self.shape} vs {other.shape}")
+        if n == self.ncol and n != self.nrow:
+            return FM(genops.mapply_row(self.m, _vec_data(other.m), op))
+        if n == self.nrow:
+            return FM(genops.mapply_col(self.m, other.m, op))
+        if n == self.ncol:
+            return FM(genops.mapply_row(self.m, _vec_data(other.m), op))
+        raise ValueError(f"cannot recycle {other.shape} across {self.shape}")
+
+    def __add__(self, o):
+        return self._bin(o, "add")
+
+    def __radd__(self, o):
+        return self._rbin(o, "add")
+
+    def __sub__(self, o):
+        return self._bin(o, "sub")
+
+    def __rsub__(self, o):
+        return self._rbin(o, "sub")
+
+    def __mul__(self, o):
+        return self._bin(o, "mul")
+
+    def __rmul__(self, o):
+        return self._rbin(o, "mul")
+
+    def __truediv__(self, o):
+        return self._bin(o, "div")
+
+    def __rtruediv__(self, o):
+        return self._rbin(o, "div")
+
+    def __pow__(self, o):
+        if isinstance(o, (int, float)) and o == 2:
+            return FM(genops.sapply(self.m, "sq"))
+        return self._bin(o, "pow")
+
+    def __neg__(self):
+        return FM(genops.sapply(self.m, "neg"))
+
+    def __eq__(self, o):  # noqa: A003 - R semantics, not identity
+        return self._bin(o, "eq")
+
+    def __ne__(self, o):
+        return self._bin(o, "neq")
+
+    def __lt__(self, o):
+        return self._bin(o, "lt")
+
+    def __le__(self, o):
+        return self._bin(o, "le")
+
+    def __gt__(self, o):
+        return self._bin(o, "gt")
+
+    def __ge__(self, o):
+        return self._bin(o, "ge")
+
+    def __hash__(self):
+        return id(self)
+
+    # -- matmul ---------------------------------------------------------------
+    def __matmul__(self, o):
+        """%*%: matrix multiplication with the (mul, sum) semiring — the
+        paper dispatches floating-point cases to BLAS; ours go to the MXU."""
+        rhs = o.m if isinstance(o, FM) else o
+        return FM(genops.inner_prod(self.m, rhs, "mul", "sum"))
+
+    # -- transforms -------------------------------------------------------------
+    def t(self) -> "FM":
+        return FM(self.m.transpose())
+
+    @property
+    def T(self) -> "FM":
+        return self.t()
+
+
+def _vec_data(m: FMMatrix):
+    if m.is_virtual:
+        (m,) = mat_mod.materialize(m)
+    return jnp.asarray(np.asarray(m.logical_data())).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Free functions (R vocabulary)
+# ---------------------------------------------------------------------------
+
+def _fm(x) -> FMMatrix:
+    return x.m if isinstance(x, FM) else x
+
+
+def sapply(x, f) -> FM:
+    return FM(genops.sapply(_fm(x), f))
+
+
+def mapply(a, b, f) -> FM:
+    return FM(genops.mapply(_fm(a), _fm(b) if isinstance(b, FM) else b, f))
+
+
+def mapply_row(a, vec, f) -> FM:
+    return FM(genops.mapply_row(_fm(a), _fm(vec) if isinstance(vec, FM) else vec, f))
+
+
+def mapply_col(a, vec, f) -> FM:
+    return FM(genops.mapply_col(_fm(a), _fm(vec) if isinstance(vec, FM) else vec, f))
+
+
+def inner_prod(a, b, f1="mul", f2="sum") -> FM:
+    return FM(genops.inner_prod(_fm(a), _fm(b) if isinstance(b, FM) else b, f1, f2))
+
+
+def agg(x, f) -> FM:
+    return FM(genops.agg(_fm(x), f))
+
+
+def agg_row(x, f) -> FM:
+    return FM(genops.agg_row(_fm(x), f))
+
+
+def agg_col(x, f) -> FM:
+    return FM(genops.agg_col(_fm(x), f))
+
+
+def groupby_row(x, labels, f, num_groups: int) -> FM:
+    return FM(genops.groupby_row(_fm(x), _fm(labels) if isinstance(labels, FM)
+                                 else labels, f, num_groups))
+
+
+def groupby_col(x, labels, f, num_groups: int) -> FM:
+    return FM(genops.groupby_col(_fm(x), labels, f, num_groups))
+
+
+def cbind(*xs) -> FM:
+    return FM(genops.cbind(*[_fm(x) for x in xs]))
+
+
+# element-wise sugar
+def sqrt(x) -> FM:
+    return sapply(x, "sqrt")
+
+
+def exp(x) -> FM:
+    return sapply(x, "exp")
+
+
+def log(x) -> FM:
+    return sapply(x, "log")
+
+
+def abs_(x) -> FM:
+    return sapply(x, "abs")
+
+
+def pmin(a, b) -> FM:
+    return mapply(a, b, "pmin")
+
+
+def pmax(a, b) -> FM:
+    return mapply(a, b, "pmax")
+
+
+def ifelse0(x, mask) -> FM:
+    return mapply(x, mask, "ifelse0")
+
+
+def is_na(x) -> FM:
+    return sapply(x, "isna")
+
+
+# aggregates (R names)
+def sum_(x) -> FM:
+    return agg(x, "sum")
+
+
+def rowSums(x) -> FM:
+    return agg_row(x, "sum")
+
+
+def colSums(x) -> FM:
+    return agg_col(x, "sum")
+
+
+def rowMins(x) -> FM:
+    return agg_row(x, "min")
+
+
+def colMins(x) -> FM:
+    return agg_col(x, "min")
+
+
+def rowMaxs(x) -> FM:
+    return agg_row(x, "max")
+
+
+def colMaxs(x) -> FM:
+    return agg_col(x, "max")
+
+
+def which_min_row(x) -> FM:
+    """R's max.col(-X) / apply(X, 1, which.min), zero-based."""
+    return agg_row(x, "which.min")
+
+
+def which_max_row(x) -> FM:
+    return agg_row(x, "which.max")
+
+
+def any_(x) -> FM:
+    return agg(x, "any")
+
+
+def all_(x) -> FM:
+    return agg(x, "all")
+
+
+def crossprod(x, y: Optional[FM] = None) -> FM:
+    """R crossprod: t(x) %*% y (y defaults to x) — the Gram sink."""
+    y = x if y is None else y
+    return FM(genops.inner_prod(_fm(x).transpose(), _fm(y), "mul", "sum"))
+
+
+def rowsum(x, groups, num_groups: int) -> FM:
+    """R rowsum: sum rows by group label."""
+    return groupby_row(x, groups, "sum", num_groups)
+
+
+def table_(groups, num_groups: int) -> FM:
+    """R table() over integer labels: per-group counts."""
+    g = _fm(groups)
+    return FM(genops.groupby_row(g, g, "count", num_groups))
+
+
+# -- construction / conversion ------------------------------------------------
+def runif_matrix(nrow, ncol, **kw) -> FM:
+    return FM(matrix_mod.runif_matrix(nrow, ncol, **kw))
+
+
+def rnorm_matrix(nrow, ncol, **kw) -> FM:
+    return FM(matrix_mod.rnorm_matrix(nrow, ncol, **kw))
+
+
+def rep_int(value, n, **kw) -> FM:
+    return FM(matrix_mod.rep_int(value, n, **kw))
+
+
+def seq_int(n, **kw) -> FM:
+    return FM(matrix_mod.seq_int(n, **kw))
+
+
+def conv_R2FM(arr, host: bool = False) -> FM:
+    return FM(matrix_mod.conv_R2FM(arr, host=host))
+
+
+def conv_FM2R(x) -> np.ndarray:
+    return matrix_mod.conv_FM2R(_fm(x))
+
+
+def conv_store(x, where: str) -> FM:
+    return FM(matrix_mod.conv_store(_fm(x), where))
+
+
+def conv_layout(x, layout: str) -> FM:
+    return FM(matrix_mod.conv_layout(_fm(x), layout))
+
+
+def set_mate_level(x, level: str) -> FM:
+    genops.set_mate_level(_fm(x), level)
+    return x
+
+
+def materialize(*xs, **kw) -> list[FM]:
+    """fm.materialize: fused evaluation of every argument in one pass."""
+    mats = mat_mod.materialize(*[_fm(x) for x in xs], **kw)
+    return [FM(m) for m in mats]
+
+
+def as_scalar(x) -> float:
+    (r,) = materialize(x) if _fm(x).is_virtual else (x,)
+    return float(np.asarray(_fm(r).logical_data()).reshape(()))
+
+
+def as_np(x) -> np.ndarray:
+    return conv_FM2R(x)

@@ -1,0 +1,399 @@
+"""Vectorized user-defined functions (VUDFs).
+
+The paper (§III-D) attacks per-element function-call overhead by passing
+*vectors* of elements to user-defined functions and selecting among multiple
+"forms" (vector-vector, vector-scalar, scalar-vector, aggregate/combine) per
+GenOp and data layout.  Under JAX the tracing compiler inlines the element
+function into the fused kernel, which is the limiting case of the same idea
+(call overhead amortized over the entire block rather than 128 elements).
+
+We nonetheless keep an explicit VUDF *registry* because the fusion optimizer
+(core/fusion.py) needs operator identity and algebraic metadata:
+
+* ``flops``-per-element for the roofline/complexity counters,
+* dtype rules (R-style promotion; comparisons produce bool; division
+  promotes to floating),
+* for aggregation VUDFs: the ``identity`` element and a separate ``combine``
+  so partition-partial results merge exactly like the paper's
+  "merge the partial aggregation results" step, and
+* whether a binary op is commutative (lets the optimizer canonicalize
+  scalar-operand sides, i.e. pick between bVUDF2/bVUDF3 forms).
+
+Every VUDF body is a pure ``jnp`` function over arrays of any shape — the
+three binary forms of the paper (vec∘vec, vec∘scalar, scalar∘vec) are
+subsumed by broadcasting, and the form bookkeeping survives as the
+``OperandKind`` tags the DAG keeps per argument.
+
+Users extend the framework by registering new VUDFs (`register_unary`,
+`register_binary`, `register_agg`) exactly as in the paper — except the
+implementation language is jnp instead of C++, so the same definition runs
+in-memory, out-of-core, and inside Pallas kernel bodies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import dtypes
+
+
+# --------------------------------------------------------------------------
+# VUDF descriptors
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnaryVUDF:
+    """uVUDF: vector -> vector of the same length."""
+
+    name: str
+    fn: Callable  # jnp array -> jnp array
+    flops: float = 1.0
+    # dtype rule: None => same as input; "float" => to_floating(input);
+    # "bool" => bool; a concrete dtype string => that dtype.
+    dtype_rule: Optional[str] = None
+
+    def out_dtype(self, in_dtype) -> jnp.dtype:
+        return _apply_rule(self.dtype_rule, dtypes.canon(in_dtype))
+
+    def __call__(self, x):
+        return self.fn(x)
+
+
+@dataclasses.dataclass(frozen=True)
+class BinaryVUDF:
+    """bVUDF: the three forms (vv, vs, sv) realized through broadcasting."""
+
+    name: str
+    fn: Callable  # (a, b) -> out, broadcasting
+    flops: float = 1.0
+    dtype_rule: Optional[str] = None
+    commutative: bool = False
+
+    def out_dtype(self, a_dtype, b_dtype) -> jnp.dtype:
+        return _apply_rule(self.dtype_rule, dtypes.promote(a_dtype, b_dtype))
+
+    def __call__(self, a, b):
+        return self.fn(a, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class AggVUDF:
+    """Aggregation VUDF = (aggregate, combine) pair with an identity.
+
+    ``aggregate`` reduces a block along an axis (aVUDF1: block->scalar /
+    row / col partials).  ``combine`` merges two partial results of equal
+    shape (aVUDF2).  ``finalize`` post-processes the merged partial (used by
+    e.g. mean = sum/count packaged at the rlike level, and by argmin/argmax
+    which carry (value, index) pairs through the reduction).
+
+    For simple algebra (sum/min/max/...) the accumulator is a plain array.
+    For indexed reductions the accumulator is a tuple pytree; ``aggregate``
+    receives the *global offset* of the block along the reduced axis so
+    indices are absolute, mirroring how the paper's aggregation VUDFs thread
+    state through partitions.
+    """
+
+    name: str
+    aggregate: Callable  # (block, axis, offset) -> partial
+    combine: Callable    # (partial, partial) -> partial
+    identity: Callable   # (shape, dtype) -> partial pytree
+    finalize: Callable = staticmethod(lambda acc: acc)
+    flops: float = 1.0
+    dtype_rule: Optional[str] = None
+
+    def out_dtype(self, in_dtype) -> jnp.dtype:
+        return _apply_rule(self.dtype_rule, dtypes.canon(in_dtype))
+
+
+def _apply_rule(rule: Optional[str], base: jnp.dtype) -> jnp.dtype:
+    if rule is None:
+        return base
+    if rule == "float":
+        return dtypes.to_floating(base)
+    if rule == "bool":
+        return jnp.dtype(jnp.bool_)
+    if rule == "index":
+        return jnp.dtype(jnp.int32)
+    return dtypes.canon(rule)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+UNARY: dict[str, UnaryVUDF] = {}
+BINARY: dict[str, BinaryVUDF] = {}
+AGG: dict[str, AggVUDF] = {}
+
+
+def register_unary(name: str, fn, *, flops: float = 1.0, dtype_rule=None) -> UnaryVUDF:
+    u = UnaryVUDF(name, fn, flops, dtype_rule)
+    UNARY[name] = u
+    return u
+
+
+def register_binary(name: str, fn, *, flops: float = 1.0, dtype_rule=None,
+                    commutative: bool = False) -> BinaryVUDF:
+    b = BinaryVUDF(name, fn, flops, dtype_rule, commutative)
+    BINARY[name] = b
+    return b
+
+
+def register_agg(name: str, aggregate, combine, identity, *, finalize=None,
+                 flops: float = 1.0, dtype_rule=None) -> AggVUDF:
+    a = AggVUDF(name, aggregate, combine, identity,
+                finalize or (lambda acc: acc), flops, dtype_rule)
+    AGG[name] = a
+    return a
+
+
+def unary(name: str) -> UnaryVUDF:
+    return UNARY[name]
+
+
+def binary(name: str) -> BinaryVUDF:
+    return BINARY[name]
+
+
+def agg(name: str) -> AggVUDF:
+    return AGG[name]
+
+
+# --------------------------------------------------------------------------
+# Built-in unary VUDFs (paper Table III element-wise rows + casts)
+# --------------------------------------------------------------------------
+
+register_unary("neg", lambda x: -x)
+register_unary("abs", jnp.abs)
+register_unary("sq", lambda x: x * x)
+register_unary("sqrt", jnp.sqrt, dtype_rule="float")
+register_unary("exp", jnp.exp, flops=8, dtype_rule="float")
+register_unary("log", jnp.log, flops=8, dtype_rule="float")
+register_unary("log1p", jnp.log1p, flops=8, dtype_rule="float")
+register_unary("floor", jnp.floor)
+register_unary("ceil", jnp.ceil)
+register_unary("round", jnp.round)
+register_unary("sign", jnp.sign)
+register_unary("not", jnp.logical_not, dtype_rule="bool")
+register_unary("isna", jnp.isnan, dtype_rule="bool")
+register_unary("sigmoid", lambda x: 1.0 / (1.0 + jnp.exp(-x)), flops=10, dtype_rule="float")
+register_unary("identity", lambda x: x, flops=0)
+
+# Lazy-cast family (inserted by the DAG builder on dtype mismatch).
+for _dt in ("bool", "int8", "int16", "int32", "int64", "bfloat16", "float32", "float64"):
+    register_unary(
+        f"cast_{_dt}",
+        (lambda dt: (lambda x: x.astype(dt)))(_dt),
+        flops=0,
+        dtype_rule=_dt,
+    )
+
+
+# --------------------------------------------------------------------------
+# Built-in binary VUDFs
+# --------------------------------------------------------------------------
+
+register_binary("add", jnp.add, commutative=True)
+register_binary("sub", jnp.subtract)
+register_binary("mul", jnp.multiply, commutative=True)
+register_binary("div", jnp.divide, dtype_rule="float", flops=4)
+register_binary("pow", jnp.power, dtype_rule="float", flops=12)
+register_binary("mod", jnp.mod, flops=4)
+register_binary("pmin", jnp.minimum, commutative=True)
+register_binary("pmax", jnp.maximum, commutative=True)
+register_binary("eq", lambda a, b: a == b, dtype_rule="bool", commutative=True)
+register_binary("neq", lambda a, b: a != b, dtype_rule="bool", commutative=True)
+register_binary("lt", lambda a, b: a < b, dtype_rule="bool")
+register_binary("le", lambda a, b: a <= b, dtype_rule="bool")
+register_binary("gt", lambda a, b: a > b, dtype_rule="bool")
+register_binary("ge", lambda a, b: a >= b, dtype_rule="bool")
+register_binary("and", jnp.logical_and, dtype_rule="bool", commutative=True)
+register_binary("or", jnp.logical_or, dtype_rule="bool", commutative=True)
+# The paper's missing-value workhorse (Fig. 5): ifelse0(x, mask) keeps x where
+# ``mask`` is False and writes 0 where True.
+register_binary("ifelse0", lambda x, m: jnp.where(m, jnp.zeros((), x.dtype), x))
+register_binary("squared_diff", lambda a, b: (a - b) * (a - b), flops=2,
+                commutative=True, dtype_rule=None)
+register_binary("absdiff", lambda a, b: jnp.abs(a - b), flops=2, commutative=True)
+register_binary("hamming", lambda a, b: (a != b).astype(jnp.float32), flops=1,
+                commutative=True, dtype_rule="float32")
+
+
+# --------------------------------------------------------------------------
+# Built-in aggregation VUDFs
+# --------------------------------------------------------------------------
+
+def _sum_identity(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _agg_simple(reduce_fn):
+    def aggregate(block, axis, offset):
+        del offset
+        return reduce_fn(block, axis=axis)
+    return aggregate
+
+
+register_agg(
+    "sum",
+    _agg_simple(jnp.sum),
+    jnp.add,
+    _sum_identity,
+)
+
+register_agg(
+    "prod",
+    _agg_simple(jnp.prod),
+    jnp.multiply,
+    lambda shape, dtype: jnp.ones(shape, dtype),
+)
+
+register_agg(
+    "min",
+    _agg_simple(jnp.min),
+    jnp.minimum,
+    lambda shape, dtype: jnp.full(shape, _type_max(dtype), dtype),
+)
+
+register_agg(
+    "max",
+    _agg_simple(jnp.max),
+    jnp.maximum,
+    lambda shape, dtype: jnp.full(shape, _type_min(dtype), dtype),
+)
+
+register_agg(
+    "any",
+    _agg_simple(jnp.any),
+    jnp.logical_or,
+    lambda shape, dtype: jnp.zeros(shape, jnp.bool_),
+    dtype_rule="bool",
+)
+
+register_agg(
+    "all",
+    _agg_simple(jnp.all),
+    jnp.logical_and,
+    lambda shape, dtype: jnp.ones(shape, jnp.bool_),
+    dtype_rule="bool",
+)
+
+# count: aggregate != combine (paper: "For some aggregation such as count,
+# aggregate and combine are different.")
+register_agg(
+    "count",
+    lambda block, axis, offset: jnp.sum(jnp.ones_like(block, dtypes.canon("int64")), axis=axis),
+    jnp.add,
+    lambda shape, dtype: jnp.zeros(shape, dtypes.canon("int64")),
+    dtype_rule="int64",
+)
+
+register_agg(
+    "count_nonzero",
+    lambda block, axis, offset: jnp.sum((block != 0).astype(dtypes.canon("int64")), axis=axis),
+    jnp.add,
+    lambda shape, dtype: jnp.zeros(shape, dtypes.canon("int64")),
+    dtype_rule="int64",
+)
+
+
+# Indexed reductions: the accumulator is a (value, index) pair pytree.  The
+# block offset makes indices global, so out-of-core partitions compose.
+def _argmin_aggregate(block, axis, offset):
+    idx = jnp.argmin(block, axis=axis).astype(jnp.int32) + offset
+    val = jnp.min(block, axis=axis)
+    return (val, idx)
+
+
+def _argmin_combine(a, b):
+    av, ai = a
+    bv, bi = b
+    take_b = bv < av
+    return (jnp.where(take_b, bv, av), jnp.where(take_b, bi, ai))
+
+
+def _argmin_identity(shape, dtype):
+    return (jnp.full(shape, _type_max(dtype), dtype),
+            jnp.zeros(shape, jnp.int32))
+
+
+register_agg(
+    "which.min",
+    _argmin_aggregate,
+    _argmin_combine,
+    _argmin_identity,
+    finalize=lambda acc: acc[1],
+    dtype_rule="index",
+)
+
+
+def _argmax_aggregate(block, axis, offset):
+    idx = jnp.argmax(block, axis=axis).astype(jnp.int32) + offset
+    val = jnp.max(block, axis=axis)
+    return (val, idx)
+
+
+def _argmax_combine(a, b):
+    av, ai = a
+    bv, bi = b
+    take_b = bv > av
+    return (jnp.where(take_b, bv, av), jnp.where(take_b, bi, ai))
+
+
+register_agg(
+    "which.max",
+    _argmax_aggregate,
+    _argmax_combine,
+    lambda shape, dtype: (jnp.full(shape, _type_min(dtype), dtype),
+                          jnp.zeros(shape, jnp.int32)),
+    finalize=lambda acc: acc[1],
+    dtype_rule="index",
+)
+
+
+# Numerically-stable streaming logsumexp: accumulator is (running_max,
+# running_sum_scaled).  Needed by GMM's E-step over partitions.
+def _lse_aggregate(block, axis, offset):
+    del offset
+    m = jnp.max(block, axis=axis)
+    s = jnp.sum(jnp.exp(block - jnp.expand_dims(m, axis)), axis=axis)
+    return (m, s)
+
+
+def _lse_combine(a, b):
+    am, asum = a
+    bm, bsum = b
+    m = jnp.maximum(am, bm)
+    return (m, asum * jnp.exp(am - m) + bsum * jnp.exp(bm - m))
+
+
+register_agg(
+    "logsumexp",
+    _lse_aggregate,
+    _lse_combine,
+    lambda shape, dtype: (jnp.full(shape, -jnp.inf, dtype), jnp.zeros(shape, dtype)),
+    finalize=lambda acc: acc[0] + jnp.log(acc[1]),
+    flops=10,
+    dtype_rule="float",
+)
+
+
+def _type_max(dtype):
+    dt = dtypes.canon(dtype)
+    if dt.kind == "f":
+        return np.inf
+    if dt.kind == "b":
+        return True
+    return np.iinfo(dt.name).max
+
+
+def _type_min(dtype):
+    dt = dtypes.canon(dtype)
+    if dt.kind == "f":
+        return -np.inf
+    if dt.kind == "b":
+        return False
+    return np.iinfo(dt.name).min

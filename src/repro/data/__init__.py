@@ -1,0 +1,3 @@
+"""Data pipeline substrate."""
+from . import pipeline
+from .pipeline import DataConfig, DataIterator, TokenSource

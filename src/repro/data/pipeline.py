@@ -1,0 +1,127 @@
+"""Sharded training-data pipeline with out-of-core streaming.
+
+The data path is where FlashMatrix's out-of-core design lands in an LM
+framework: token shards live on the slow tier (disk/host memory = the SSD
+analog), are memory-mapped, sliced into I/O-level chunks, staged
+host→device asynchronously, and handed to the train step — double-buffered
+so step N's compute overlaps step N+1's staging (the paper's I/O/compute
+overlap; `jax.device_put` dispatch is async).
+
+Determinism + fault tolerance: the iterator state is a single (epoch, step)
+cursor; `state_dict()`/`load_state_dict()` round-trips through checkpoints
+so a preempted job resumes exactly where it left off (runtime contract with
+checkpoint/checkpoint.py).
+
+For this repo's experiments the corpus is synthetic (seeded ziphian token
+draws); `TokenSource` also reads real `.npy`/raw-u16 token shards if paths
+are provided.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Iterator, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    seq_len: int = 1024
+    global_batch: int = 8
+    vocab: int = 32000
+    seed: int = 0
+    shards: Optional[Sequence[str]] = None   # token files; None => synthetic
+    synthetic_tokens: int = 1 << 22          # per synthetic "shard"
+
+
+class TokenSource:
+    """A flat token stream on the slow tier."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        if cfg.shards:
+            self._arrays = [np.load(p, mmap_mode="r") if str(p).endswith(".npy")
+                            else np.memmap(p, dtype=np.uint16, mode="r")
+                            for p in cfg.shards]
+        else:
+            rng = np.random.default_rng(cfg.seed)
+            # Zipf-ish synthetic corpus: realistic token frequency skew.
+            ranks = rng.zipf(1.3, size=cfg.synthetic_tokens)
+            self._arrays = [np.minimum(ranks, cfg.vocab - 1).astype(np.int32)]
+        self.total = sum(a.shape[0] for a in self._arrays)
+
+    def window(self, start: int, length: int) -> np.ndarray:
+        """Contiguous token window with wraparound (one I/O-level read)."""
+        start = start % self.total
+        out = np.empty(length, np.int32)
+        filled = 0
+        offset = start
+        for a in self._arrays * 2:  # wraps at most once
+            if filled == length:
+                break
+            n = a.shape[0]
+            lo = offset % self.total
+            # locate shard-local offset
+            acc = 0
+            for arr in self._arrays:
+                if lo < acc + arr.shape[0]:
+                    local = lo - acc
+                    take = min(length - filled, arr.shape[0] - local)
+                    out[filled:filled + take] = arr[local:local + take]
+                    filled += take
+                    offset += take
+                    break
+                acc += arr.shape[0]
+        return out
+
+
+class DataIterator:
+    """Deterministic, resumable, device-prefetching batch iterator."""
+
+    def __init__(self, cfg: DataConfig, *, sharding=None,
+                 process_index: int = 0, process_count: int = 1):
+        self.cfg = cfg
+        self.source = TokenSource(cfg)
+        self.step = 0
+        self.sharding = sharding
+        self.process_index = process_index
+        self.process_count = process_count
+        self._staged = None  # double buffer (the prefetch depth-1 queue)
+
+    # -- fault-tolerance contract -------------------------------------------
+    def state_dict(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, state: dict):
+        self.step = int(state["step"])
+
+    # -- batch construction ----------------------------------------------------
+    def _host_batch(self, step: int) -> dict:
+        cfg = self.cfg
+        per_proc = cfg.global_batch // self.process_count
+        span = cfg.seq_len + 1
+        base = (step * cfg.global_batch + self.process_index * per_proc) * span
+        toks = np.stack([
+            self.source.window(base + i * span, span) for i in range(per_proc)])
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def _stage(self, batch_np: dict):
+        """Host → device, async; sharded if a sharding was provided."""
+        if self.sharding is not None:
+            return {k: jax.device_put(v, self.sharding[k])
+                    for k, v in batch_np.items()}
+        return {k: jax.device_put(v) for k, v in batch_np.items()}
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        if self._staged is None:
+            self._staged = self._stage(self._host_batch(self.step))
+        out = self._staged
+        self.step += 1
+        # prefetch the next batch while the caller computes on `out`
+        self._staged = self._stage(self._host_batch(self.step))
+        return out

@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding policy + helpers."""
+from . import sharding

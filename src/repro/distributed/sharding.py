@@ -1,0 +1,171 @@
+"""Logical-axis sharding policy (DESIGN.md §4).
+
+Every parameter/activation/cache tensor carries logical axis names (encoded
+'|'-joined, see models/base.py).  ``resolve`` maps them to a PartitionSpec
+for the active mesh with *divisibility-checked greedy assignment*:
+
+* each logical axis has an ordered candidate list of mesh-axis groups;
+* a candidate is taken iff every component mesh axis is still unused in
+  this tensor's spec and the dim size divides evenly;
+* otherwise fall through (ultimately replicate) — this is how paligemma's
+  8 heads survive a 16-way model axis (heads replicate, d_ff/vocab still
+  shard) and how long_500k's batch=1 hands the `data` axis to the KV
+  sequence dimension instead.
+
+Parameter `d_model` dims shard over `data` — FSDP/ZeRO-style — so optimizer
+state for the 72B/480B configs fits HBM; gradients inherit the same specs,
+which makes XLA emit reduce-scatter + all-gather instead of plain
+all-reduce (the ZeRO collective schedule).  The `pod` axis is pure data
+parallelism: the only cross-pod (DCN) traffic is the gradient reduction,
+optionally int8-compressed (optim/compression.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Ordered candidates per logical axis.  Tuples are axis groups (sharded over
+# the product).  First fit wins.
+RULES: dict[str, list] = {
+    # parameters
+    "vocab": [("model",)],
+    "d_ff": [("model",)],
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "experts": [("model",)],
+    "d_inner": [("model",)],
+    "d_model": [("data",)],          # FSDP axis (params + optimizer state)
+    "layers": [],
+    "head_dim": [],
+    "state": [],
+    "conv": [],
+    # activations
+    "batch": [("pod", "data"), ("data",), ("pod",)],
+    "seq": [],
+    # Sequence-parallel residual stream (Megatron-SP style): the layer-scan
+    # carry — the dominant activation-checkpoint residency, L·B·S·D bytes —
+    # shards its sequence dim over `model`; attention/SSD gather it per
+    # layer, norms/MLP stay seq-local.  Only used at scan-carry boundaries.
+    "act_seq": [("model",)],
+    "embed": [],                      # activation d_model: replicated
+    "act_ff": [("model",)],
+    "act_heads": [("model",)],
+    "act_inner": [("model",)],
+    "capacity": [],
+    # decode caches: prefer giving spare axes to the KV sequence
+    "kv_seq": [("data", "model"), ("model",), ("data",)],
+    "apps": [],                       # zamba2 shared-block applications
+    "rep": [],                        # force-replicated (gathered KV in
+                                      # sequence-parallel attention)
+}
+
+
+def resolve(axes: str, shape, mesh: Mesh) -> P:
+    """'batch|seq|embed' + shape -> PartitionSpec for this mesh."""
+    names = axes.split("|") if axes else []
+    assert len(names) == len(shape), (axes, shape)
+    used: set[str] = set()
+    spec = []
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    serve = is_serve_mode()
+    for name, dim in zip(names, shape):
+        placed = None
+        rules = RULES.get(name, [])
+        if serve and name == "d_model":
+            rules = []                 # weights-resident decode (no FSDP)
+        for cand in rules:
+            cand = tuple(a for a in cand if a in mesh_sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            prod = 1
+            for a in cand:
+                prod *= mesh_sizes[a]
+            if prod > 1 and dim % prod == 0:
+                placed = cand
+                used.update(cand)
+                break
+        spec.append(placed[0] if placed and len(placed) == 1
+                    else (placed if placed else None))
+    return P(*spec)
+
+
+def sharding_for(axes: str, shape, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve(axes, shape, mesh))
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh: Mesh):
+    """Map (axes, ShapeDtypeStruct) trees -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda ax, s: sharding_for(ax, s.shape, mesh), axes_tree, shapes_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation hints: a thread-local "current mesh" so model code can annotate
+# intermediates without threading the mesh through every call.
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_TLS, "mesh", None)
+    _TLS.mesh = mesh
+    try:
+        yield
+    finally:
+        _TLS.mesh = prev
+
+
+@contextlib.contextmanager
+def serve_mode():
+    """Serving sharding profile: parameters replicate over `data` instead
+    of FSDP-sharding on it.
+
+    Training amortizes the per-layer FSDP all-gather over a whole batch;
+    a decode step reads every weight once per TOKEN, so gathering ~9 GB of
+    weights per generated token made qwen2-72b decode_32k collective-bound
+    by 600x (EXPERIMENTS.md §Perf iteration 3).  Weights-resident decode
+    trades the (affordable at inference: no optimizer state) memory for
+    zero steady-state parameter traffic."""
+    prev = getattr(_TLS, "serve", False)
+    _TLS.serve = True
+    try:
+        yield
+    finally:
+        _TLS.serve = prev
+
+
+def is_serve_mode() -> bool:
+    return getattr(_TLS, "serve", False)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_TLS, "mesh", None)
+
+
+def hint(x, axes: str):
+    """with_sharding_constraint if a mesh is active; identity otherwise."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, sharding_for(axes, x.shape, mesh))
+
+
+def hint_tree(tree, axes_tree):
+    """Constrain every leaf of a pytree to its logical-axes sharding.
+
+    Critical inside scan-over-layers bodies: without a per-slice constraint
+    GSPMD may hoist the FSDP all-gather of the *entire stacked* parameter
+    tree out of the scan (observed: 245 GiB/device on qwen2-72b).  With it,
+    the sliced layer stays data-sharded and the gather happens one layer at
+    a time inside the loop — the FSDP schedule."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+    return jax.tree_util.tree_map(lambda x, ax: hint(x, ax), tree, axes_tree)

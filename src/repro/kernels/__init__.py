@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, a jit'd
+wrapper in ops.py, and a pure-jnp oracle in ref.py (tests assert allclose
+over shape/dtype sweeps in interpret mode).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,49 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+All kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and
+validate on CPU via ``interpret=True`` — the kernel body executes in Python
+so the BlockSpec/grid logic is what is under test.  ``default_interpret()``
+returns True on non-TPU backends so tests and benchmarks run here while the
+same call sites compile to Mosaic on real hardware.
+
+Tiling policy (DESIGN.md §1): the CPU-level partition of the paper becomes
+the VMEM block.  Rows-per-block is the paper's 2^i rule aligned to the
+(8, 128) sublane×lane vector shape; column tiles are multiples of 128 so
+MXU matmul dims stay hardware-aligned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+SUBLANE = 8
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pick_block_rows(n_rows: int, n_cols: int, dtype,
+                    vmem_budget: int = 4 * 1024 * 1024,
+                    n_live: int = 2) -> int:
+    """Rows per VMEM block: largest power of two whose working set
+    (n_live copies of a rows×cols tile) fits the VMEM budget."""
+    bytes_per_row = max(1, n_cols) * jnp.dtype(dtype).itemsize * n_live
+    rows = max(SUBLANE, vmem_budget // bytes_per_row)
+    rows = 1 << (int(rows).bit_length() - 1)
+    return int(min(rows, max(SUBLANE, n_rows)))
+
+
+def pad_rows(x, multiple: int, value=0.0):
+    """Pad the leading dim to a multiple; returns (padded, original_len)."""
+    n = x.shape[0]
+    target = round_up(n, multiple)
+    if target == n:
+        return x, n
+    pad = [(0, target - n)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad, constant_values=value), n

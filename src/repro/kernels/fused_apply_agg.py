@@ -1,0 +1,98 @@
+"""Fused apply→aggregate streaming kernel — the GenOps cache-fuse hot-spot.
+
+This is the paper's statistical-summary workload (§IV-A) as ONE Pallas
+kernel: a tall matrix streams HBM→VMEM block-by-block and every column
+statistic (sum, sum-of-squares, min, max, L1, nnz) updates from the same
+resident tile.  The elementwise "apply" stage (here x², |x|, x≠0) never
+touches HBM — exactly the paper's CPU-cache operation fusion, restated for
+the HBM→VMEM tier.
+
+Grid: 1-D over row blocks (the I/O-level partition axis).  Accumulators
+live in VMEM scratch for the whole grid sweep (TPU grids execute
+sequentially per core), initialized at step 0 and written back at the last
+step — the same identity→update→combine contract as core/dag.py sinks.
+
+Rows are padded to the block multiple with neutral values handled by
+masking inside the kernel (min/max need ±inf, so padding cannot be plain
+zeros).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import default_interpret, pad_rows, pick_block_rows
+
+
+def _kernel(x_ref, nrows_ref, sum_ref, sq_ref, mn_ref, mx_ref, l1_ref, nnz_ref,
+            acc_sum, acc_sq, acc_mn, acc_mx, acc_l1, acc_nnz, *, block_rows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_sum[...] = jnp.zeros_like(acc_sum)
+        acc_sq[...] = jnp.zeros_like(acc_sq)
+        acc_mn[...] = jnp.full_like(acc_mn, jnp.inf)
+        acc_mx[...] = jnp.full_like(acc_mx, -jnp.inf)
+        acc_l1[...] = jnp.zeros_like(acc_l1)
+        acc_nnz[...] = jnp.zeros_like(acc_nnz)
+
+    x = x_ref[...].astype(jnp.float32)
+    # Rows beyond the true length are padding: mask them out of every stat.
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) + i * block_rows
+    valid = row_ids < nrows_ref[0]
+    zero = jnp.zeros_like(x)
+
+    xz = jnp.where(valid, x, zero)
+    acc_sum[...] += xz.sum(axis=0)
+    acc_sq[...] += (xz * xz).sum(axis=0)
+    acc_l1[...] += jnp.abs(xz).sum(axis=0)
+    acc_nnz[...] += jnp.where(valid & (x != 0), 1.0, 0.0).sum(axis=0)
+    acc_mn[...] = jnp.minimum(acc_mn[...],
+                              jnp.where(valid, x, jnp.inf).min(axis=0))
+    acc_mx[...] = jnp.maximum(acc_mx[...],
+                              jnp.where(valid, x, -jnp.inf).max(axis=0))
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _writeback():
+        sum_ref[...] = acc_sum[...]
+        sq_ref[...] = acc_sq[...]
+        mn_ref[...] = acc_mn[...]
+        mx_ref[...] = acc_mx[...]
+        l1_ref[...] = acc_l1[...]
+        nnz_ref[...] = acc_nnz[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_summary(x, *, block_rows: int = 0, interpret: bool | None = None):
+    """Column statistics of a tall (n, p) matrix in one HBM pass.
+
+    Returns (sum, sumsq, min, max, l1, nnz) each of shape (p,), float32.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n, p = x.shape
+    if not block_rows:
+        block_rows = pick_block_rows(n, p, x.dtype, n_live=2)
+    xp, n_true = pad_rows(x, block_rows)
+    grid = (xp.shape[0] // block_rows,)
+    nrows = jnp.full((1,), n_true, jnp.int32)
+
+    col = jax.ShapeDtypeStruct((p,), jnp.float32)
+    kernel = functools.partial(_kernel, block_rows=block_rows)
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[pl.BlockSpec((p,), lambda i: (0,))] * 6,
+        out_shape=[col] * 6,
+        scratch_shapes=[pltpu.VMEM((p,), jnp.float32)] * 6,
+        interpret=interpret,
+    )(xp, nrows)
+    return outs

@@ -1,0 +1,101 @@
+"""Tall-skinny Gram kernel: G = XᵀX with streaming row blocks.
+
+The hot inner product of correlation and SVD (paper §IV-A): contract the
+long dimension of a TAS matrix.  The paper hands this to BLAS; on TPU the
+analog is feeding the MXU from VMEM-resident tiles while the (p, p)
+accumulator never leaves VMEM for the whole sweep — one read of X, one
+write of G.
+
+Grid: 1-D over row blocks; f32 accumulation regardless of input dtype
+(bf16 in → f32 acc, the MXU-native mixed-precision mode).
+Also provides ``xty`` (Xᵀ·Y for a second tall matrix) — the GMM M-step
+moment sink (X⊙r)ᵀX shares this code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import default_interpret, pad_rows, pick_block_rows
+
+
+def _gram_kernel(x_ref, g_ref, acc, *, n_rows, block_rows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    x = x_ref[...]
+    # Padding rows are zero — harmless for a sum-product contraction.
+    acc[...] += jax.lax.dot_general(
+        x, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _writeback():
+        g_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gram(x, *, block_rows: int = 0, interpret: bool | None = None):
+    """G = XᵀX for tall (n, p) X; returns (p, p) float32."""
+    interpret = default_interpret() if interpret is None else interpret
+    n, p = x.shape
+    if not block_rows:
+        block_rows = pick_block_rows(n, p, x.dtype, n_live=2)
+    xp, _ = pad_rows(x, block_rows)  # zero pad: neutral for sum-product
+    grid = (xp.shape[0] // block_rows,)
+    kernel = functools.partial(_gram_kernel, n_rows=n, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((p, p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, p), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+
+
+def _xty_kernel(x_ref, y_ref, g_ref, acc):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        x_ref[...], y_ref[...], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _writeback():
+        g_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def xty(x, y, *, block_rows: int = 0, interpret: bool | None = None):
+    """XᵀY for row-aligned tall X (n, p) and Y (n, q); returns (p, q) f32."""
+    interpret = default_interpret() if interpret is None else interpret
+    n, p = x.shape
+    _, q = y.shape
+    if not block_rows:
+        block_rows = pick_block_rows(n, max(p, q), x.dtype, n_live=3)
+    xp, _ = pad_rows(x, block_rows)
+    yp, _ = pad_rows(y, block_rows)
+    grid = (xp.shape[0] // block_rows,)
+    return pl.pallas_call(
+        _xty_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, q), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((p, q), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, q), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, q), jnp.float32)],
+        interpret=interpret,
+    )(xp, yp)

@@ -1,0 +1,123 @@
+"""Fused Lloyd-step kernel: distances → argmin → cluster stats, one pass.
+
+The paper's k-means iteration is its marquee fusion demo: inner.prod with
+the (squared-diff, sum) semiring, which.min, groupby.row(sum) and the
+objective all stream together (core/algorithms/kmeans.py builds the same
+DAG).  Here the whole fused group is ONE Pallas kernel:
+
+  per VMEM-resident row block X_b (bm, p), centers C (k, p) resident:
+    D    = ‖X_b‖² - 2 X_b Cᵀ + ‖C‖²        (MXU matmul + VPU epilogue)
+    lab  = argmin_k D                       (VPU)
+    H    = onehot(lab)                      (VPU)
+    sums += Hᵀ X_b                          (MXU)   — groupby.row(sum)
+    cnts += Σ H                             (VPU)   — table()
+    wss  += Σ min_k D                       (VPU)   — objective
+    labels_b written out                    (HBM, bm ints)
+
+X is read once; everything else lives in VMEM scratch until the final
+writeback.  k and p are small (paper: k ≤ 64, p ≤ 512) so C, sums (k, p)
+and the D tile (bm, k) all fit comfortably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import default_interpret, pad_rows, pick_block_rows
+
+
+def _kernel(x_ref, c_ref, nrows_ref, lab_ref, sums_ref, cnts_ref, wss_ref,
+            acc_sums, acc_cnts, acc_wss, *, block_rows):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_sums[...] = jnp.zeros_like(acc_sums)
+        acc_cnts[...] = jnp.zeros_like(acc_cnts)
+        acc_wss[...] = jnp.zeros_like(acc_wss)
+
+    x = x_ref[...].astype(jnp.float32)          # (bm, p)
+    c = c_ref[...].astype(jnp.float32)          # (k, p)
+
+    # Squared Euclidean distances via the inner-product expansion so the MXU
+    # does the heavy lifting (the paper's BLAS dispatch, TPU-style).
+    x2 = (x * x).sum(axis=1, keepdims=True)                       # (bm, 1)
+    c2 = (c * c).sum(axis=1, keepdims=True).T                     # (1, k)
+    xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (bm, k)
+    d = x2 - 2.0 * xc + c2
+
+    row_ids = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0) + i * block_rows
+    valid = row_ids[:, 0] < nrows_ref[0]
+
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    lab_ref[...] = lab
+    k = c.shape[0]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+              == lab[:, None]).astype(jnp.float32)
+    onehot = jnp.where(valid[:, None], onehot, 0.0)
+
+    acc_sums[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    acc_cnts[...] += onehot.sum(axis=0)
+    mind = jnp.where(valid, d.min(axis=1), 0.0)
+    acc_wss[...] += mind.sum()[None]
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _writeback():
+        sums_ref[...] = acc_sums[...]
+        cnts_ref[...] = acc_cnts[...]
+        wss_ref[...] = acc_wss[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def kmeans_assign(x, centers, *, block_rows: int = 0,
+                  interpret: bool | None = None):
+    """One fused Lloyd step.
+
+    Args:   x (n, p) float; centers (k, p) float.
+    Returns (labels (n,) int32, sums (k, p) f32, counts (k,) f32, wss (1,) f32).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    n, p = x.shape
+    k = centers.shape[0]
+    if not block_rows:
+        block_rows = pick_block_rows(n, p + k, x.dtype, n_live=3)
+    xp, n_true = pad_rows(x, block_rows)
+    grid = (xp.shape[0] // block_rows,)
+    nrows = jnp.full((1,), n_true, jnp.int32)
+
+    kernel = functools.partial(_kernel, block_rows=block_rows)
+    lab, sums, cnts, wss = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
+            pl.BlockSpec((k, p), lambda i: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((k, p), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((xp.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((k, p), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((k, p), jnp.float32),
+            pltpu.VMEM((k,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, centers, nrows)
+    return lab[:n], sums, cnts, wss

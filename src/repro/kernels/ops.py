@@ -1,0 +1,37 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Call sites (core GenOps fast paths, the LM stack, benchmarks) import from
+here; each wrapper dispatches Pallas-on-TPU / Pallas-interpret-on-CPU and
+exposes the pure-jnp oracle as a `*_ref` fallback so the same call site can
+A/B the kernel against XLA's own fusion (benchmarks/kernel_bench.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .common import default_interpret
+from .flash_attention import flash_attention
+from .fused_apply_agg import fused_summary
+from .gram import gram, xty
+from .kmeans_assign import kmeans_assign
+
+__all__ = [
+    "fused_summary", "gram", "xty", "kmeans_assign", "flash_attention",
+    "attention", "ref", "default_interpret",
+]
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              impl: str = "auto", **kw):
+    """Attention entry point for the LM stack.
+
+    impl='pallas' — the Flash kernel (TPU, or interpret on CPU: exact but
+    slow, test-only); impl='ref' — jnp oracle (XLA fuses it; used for CPU
+    dry-runs/training in this container); 'auto' — pallas on TPU else ref.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, scale=scale, **kw)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematically-direct implementation the kernels are
+tested against with assert_allclose over shape/dtype sweeps
+(tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_summary_ref(x):
+    x = x.astype(jnp.float32)
+    return (x.sum(0), (x * x).sum(0), x.min(0), x.max(0),
+            jnp.abs(x).sum(0), (x != 0).astype(jnp.float32).sum(0))
+
+
+def gram_ref(x):
+    x = x.astype(jnp.float32)
+    return x.T @ x
+
+
+def xty_ref(x, y):
+    return x.astype(jnp.float32).T @ y.astype(jnp.float32)
+
+
+def kmeans_assign_ref(x, centers):
+    x = x.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    d = ((x[:, None, :] - c[None]) ** 2).sum(-1)            # (n, k)
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    k = c.shape[0]
+    onehot = jnp.eye(k, dtype=jnp.float32)[lab]
+    sums = onehot.T @ x
+    cnts = onehot.sum(0)
+    wss = d.min(1).sum()[None]
+    return lab, sums, cnts, wss
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Naive softmax attention over (BH, S, D)."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        sq, sk = s.shape[1], s.shape[2]
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,199 @@
+import os
+# while-loop-invariant-code-motion hoists the per-layer bf16->f32 operand
+# converts of XLA-CPU's f32 dot/DUS emulation OUT of the layer scan,
+# materializing f32 copies of entire stacked weight/cache tensors
+# (+22 GiB/device on qwen2-72b decode_32k).  TPU executes bf16 natively, so
+# disabling the pass gives memory_analysis numbers closer to the real
+# target.  See EXPERIMENTS.md §Perf iteration 3.
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "") +
+                           " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell:
+    lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(**specs)
+    compiled = lowered.compile()
+    memory_analysis / cost_analysis / HLO collective scan
+
+The two XLA_FLAGS lines above MUST run before any other import (jax locks
+the device count at first init); 512 placeholder host devices back both the
+(16,16) single-pod and the (2,16,16) multi-pod meshes.
+
+Outputs one JSON record per cell into ``results/dryrun/<mesh>/<arch>/<shape>.json``
+with: per-device memory stats, HLO FLOPs/bytes, per-collective byte counts,
+and lowering wall time.  launch/roofline.py turns these into EXPERIMENTS.md
+§Dry-run/§Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import json
+import pathlib
+import re
+import sys
+import time
+import traceback
+
+
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[^\s(]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in (post-SPMD) HLO.
+
+    The per-device HLO already has partitioned shapes, so summed result
+    sizes approximate per-device bytes placed on the interconnect (the
+    standard roofline accounting; all-gather results count the gathered
+    size, reduce-scatter the scattered size).  Tuple results (multi-operand
+    reductions, async -start forms) sum their components; -done ops are
+    skipped so async pairs count once.  NOTE: ops inside `while` bodies
+    count once per body — the roofline layer multiplies by trip counts
+    (scan length) analytically, same as for FLOPs."""
+    out = {}
+    for m in _LINE_RE.finditer(hlo_text):
+        result_ty, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue
+        total = 0
+        for sm in _SHAPE_RE.finditer(result_ty):
+            dtype, dims = sm.group(1), sm.group(2)
+            if dtype not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dtype]
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += total
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: pathlib.Path, verbose: bool = True) -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    from repro.models import zoo
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(map(str, mesh.devices.shape))
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "n_devices": mesh.devices.size,
+           "status": "ok"}
+    t0 = time.time()
+    try:
+        model = zoo.build(cfg)
+        lowered = lower_cell(model, shape, mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "peak_device_bytes": int(ma.argument_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+            }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca:
+            rec["cost"] = {k: float(v) for k, v in ca.items()
+                           if k in ("flops", "bytes accessed", "transcendentals",
+                                    "optimal_seconds")}
+        hlo = compiled.as_text()
+        rec["collectives_flat"] = collective_bytes(hlo)
+        from repro.launch.hlo_analysis import analyze
+        la = analyze(hlo)
+        rec["loop_aware"] = la
+        rec["collectives"] = la["collectives"]
+        rec["collective_bytes_total"] = int(la["collective_bytes_total"])
+        rec["hlo_bytes"] = len(hlo)
+    except Exception as e:  # noqa: BLE001 - a failing cell is a bug report
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+
+    out_path = out_dir / mesh_name / arch / f"{shape_name}.json"
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    if verbose:
+        mem = rec.get("memory", {}).get("peak_device_bytes", 0) / 2**30
+        flops = rec.get("cost", {}).get("flops", 0)
+        print(f"[{rec['status']:5s}] {mesh_name:10s} {arch:20s} {shape_name:12s}"
+              f" lower={rec.get('lower_s', 0):6.1f}s"
+              f" compile={rec.get('compile_s', 0):6.1f}s"
+              f" mem/dev={mem:6.2f}GiB flops/dev={flops:.3e}"
+              f" coll={rec.get('collective_bytes_total', 0)/2**30:7.3f}GiB",
+              flush=True)
+        if rec["status"] != "ok":
+            print("   ", rec["error"], flush=True)
+    return rec
+
+
+def cells_for(arch: str):
+    from repro.configs import get_config
+    return list(get_config(arch).shapes().keys())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="only the (2,16,16) mesh")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="only the (16,16) mesh")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args(argv)
+
+    from repro.configs import ARCH_IDS
+    out_dir = pathlib.Path(args.out)
+    meshes = [False, True]
+    if args.multi_pod:
+        meshes = [True]
+    elif args.single_pod:
+        meshes = [False]
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    failures = 0
+    for multi in meshes:
+        for arch in archs:
+            shapes = [args.shape] if args.shape else cells_for(arch)
+            for shape in shapes:
+                rec = run_cell(arch, shape, multi_pod=multi, out_dir=out_dir)
+                failures += rec["status"] != "ok"
+    print(f"done; failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,168 @@
+"""Loop-aware post-SPMD HLO analysis.
+
+XLA-CPU's ``compiled.cost_analysis()`` counts a `while` body ONCE, so for
+scan-over-layers programs (all of ours) its flops/bytes are per-layer, not
+per-step (verified experimentally: an 8-step scanned matmul reports 1/8 the
+flops of its unrolled twin).  Fortunately the HLO text carries
+``known_trip_count`` on every scan-derived while, so exact accounting is
+reconstructable:
+
+  1. split the module into computations,
+  2. per computation: result bytes of every collective op; MXU FLOPs of
+     every ``dot`` (2 · prod(result dims) · prod(contracted dims));
+  3. propagate multipliers through the call graph — `while` multiplies by
+     its trip count, call/fusion/reduce by 1, conditional by max branch.
+
+The dry-run records both the flat (body-once) numbers and these loop-aware
+numbers; launch/roofline.py uses the latter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE = re.compile(
+    r"=\s*(\([^)]*\)|[^\s(]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_WHILE = re.compile(
+    r"\swhile\(.*?body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\(%([\w\.\-]+),")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DEF = re.compile(r"^\s*%([\w\.\-]+) = (\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CompStats:
+    coll: Dict[str, list]            # kind -> [count, bytes]
+    dot_flops: float
+    whiles: list                     # (body_name, trip)
+    calls: list                      # called computation names (mult 1)
+
+
+def _parse(hlo: str):
+    # pass 1: module-wide symbol table (instruction name -> dims) so dot
+    # operands (referenced by %name without inline types) resolve.
+    symbols: Dict[str, list] = {}
+    for line in hlo.splitlines():
+        dm = _DEF.match(line)
+        if dm and dm.group(2) in _DTYPE_BYTES:
+            symbols[dm.group(1)] = [int(d) for d in dm.group(3).split(",") if d]
+
+    comps: Dict[str, CompStats] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None or line.startswith("}") is False:
+            hm = _COMP_HEADER.match(line)
+            if hm:
+                name = hm.group(2)
+                comps[name] = CompStats({}, 0.0, [], [])
+                cur = name
+                if hm.group(1):
+                    entry = name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        st = comps[cur]
+        cm = _COLLECTIVE.search(line)
+        if cm and cm.group(3) != "-done":
+            kind = cm.group(2)
+            b = _shape_bytes(cm.group(1))
+            rec = st.coll.setdefault(kind, [0, 0])
+            rec[0] += 1
+            rec[1] += b
+        wm = _WHILE.search(line)
+        if wm:
+            tm = _TRIP.search(line)
+            st.whiles.append((wm.group(1), int(tm.group(1)) if tm else 1))
+            continue
+        dm = _DOT.search(line)
+        if dm:
+            out_n = 1
+            for d in dm.group(2).split(","):
+                if d:
+                    out_n *= int(d)
+            lhs_dims = symbols.get(dm.group(3), [])
+            km = _CONTRACT.search(line)
+            contracted = 1
+            if km and lhs_dims:
+                for idx in km.group(1).split(","):
+                    if idx and int(idx) < len(lhs_dims):
+                        contracted *= lhs_dims[int(idx)]
+            st.dot_flops += 2.0 * out_n * contracted
+        for cm2 in _CALLED.finditer(line):
+            st.calls.append(cm2.group(1))
+        bm = _BRANCHES.search(line)
+        if bm:
+            for b in bm.group(1).split(","):
+                b = b.strip().lstrip("%")
+                if b:
+                    st.calls.append(b)
+    return comps, entry
+
+
+def analyze(hlo: str) -> dict:
+    """Loop-aware totals: dot FLOPs + per-kind collective counts/bytes."""
+    comps, entry = _parse(hlo)
+    mult: Dict[str, float] = {}
+
+    def add(name: str, m: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        st = comps[name]
+        for body, trip in st.whiles:
+            add(body, m * trip, depth + 1)
+        for callee in st.calls:
+            add(callee, m, depth + 1)
+
+    if entry is None:
+        entry = next(iter(comps))
+    add(entry, 1.0)
+
+    flops = 0.0
+    coll: Dict[str, dict] = {}
+    for name, st in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        flops += st.dot_flops * m
+        for kind, (cnt, b) in st.coll.items():
+            rec = coll.setdefault(kind, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += cnt * m
+            rec["bytes"] += b * m
+    total = sum(v["bytes"] for v in coll.values())
+    return {"dot_flops": flops, "collectives": coll,
+            "collective_bytes_total": total,
+            "n_computations": len(comps)}

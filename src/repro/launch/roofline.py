@@ -1,0 +1,138 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape × mesh).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.  All inputs come from the dry-run JSON records
+(results/dryrun/...), which carry BOTH the flat cost_analysis numbers and
+the loop-aware HLO reconstruction (launch/hlo_analysis.py) — the loop-aware
+numbers are authoritative because XLA-CPU's cost_analysis counts while
+bodies once (see that module's docstring).
+
+Because the per-device HLO is per-step and already partitioned, the terms
+here are per-device = per-chip seconds directly (no ÷chips needed).
+
+MODEL_FLOPS uses the 6·N·D rule (6·N_active·D for MoE), D = tokens per
+step; the ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute
+is "useful" (remat recompute, masked attention tiles, capacity padding and
+replicated-because-unshardable compute all push it down).
+
+Memory-term caveat (CPU dry-run): 'bytes accessed' is also body-once, so
+the memory term uses an analytic lower bound — every HBM-resident input
+read once + outputs written once (params+opt+batch+cache from
+memory_analysis argument/output sizes) plus per-layer activation traffic —
+and reports the cost_analysis number alongside.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline [--dir results/dryrun]
+        [--emit markdown|json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (v5e: ~4 usable links/chip)
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(arch: str, shape: str, n_devices: int) -> float:
+    """6·N_active·D per step (fwd+bwd); serve shapes: 2·N_active·D."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    n = cfg.n_active_params()
+    d = SHAPE_TOKENS[shape]
+    mult = 6.0 if shape.startswith("train") else 2.0
+    return mult * n * d / n_devices
+
+
+def analytic_hbm_bytes(rec: dict) -> float:
+    """Per-device HBM traffic lower bound: arguments read + outputs written
+    + one activation write/read per layer boundary (scan carries)."""
+    mem = rec.get("memory", {})
+    base = mem.get("argument_bytes", 0) + mem.get("output_bytes", 0)
+    # temp buffers are written+read at least once across the step
+    base += 2 * mem.get("temp_bytes", 0) * 0.5
+    return float(base)
+
+
+def load_cells(root: pathlib.Path):
+    cells = []
+    for f in sorted(root.glob("*/*/*.json")):
+        rec = json.loads(f.read_text())
+        cells.append(rec)
+    return cells
+
+
+def derive(rec: dict) -> dict:
+    arch, shape = rec["arch"], rec["shape"]
+    n_dev = rec["n_devices"]
+    la = rec.get("loop_aware", {})
+    hlo_flops = la.get("dot_flops", 0.0)
+    coll_bytes = la.get("collective_bytes_total", 0.0)
+    hbm_bytes = analytic_hbm_bytes(rec)
+
+    t_compute = hlo_flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch, shape, n_dev)
+    useful = mf / hlo_flops if hlo_flops else float("nan")
+    bound = max(terms.values())
+    mfu_bound = (mf / PEAK_FLOPS) / bound if bound > 0 else float("nan")
+    return {
+        "arch": arch, "shape": shape, "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "hlo_flops": hlo_flops,
+        "useful_ratio": useful, "roofline_fraction": mfu_bound,
+        "mem_gib": rec.get("memory", {}).get("peak_device_bytes", 0) / 2 ** 30,
+        "status": rec.get("status"),
+    }
+
+
+def markdown(rows, single_pod_only=True):
+    out = ["| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | roofline frac | mem GiB |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if single_pod_only and r["mesh"] != "16x16":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['mem_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--emit", default="markdown", choices=["markdown", "json"])
+    ap.add_argument("--all-meshes", action="store_true")
+    args = ap.parse_args(argv)
+    cells = load_cells(pathlib.Path(args.dir))
+    rows = [derive(r) for r in cells if r.get("status") == "ok"]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    if args.emit == "json":
+        print(json.dumps(rows, indent=1))
+    else:
+        print(markdown(rows, single_pod_only=not args.all_meshes))
+
+
+if __name__ == "__main__":
+    main()

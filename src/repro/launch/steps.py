@@ -1,0 +1,203 @@
+"""Step builders: the jitted train/prefill/decode entry points with their
+sharding contracts.
+
+Everything the dry-run lowers and the real launcher executes comes from
+here, so the 512-chip lowering and the 1-chip smoke test share one code
+path.  ``build_*`` returns (fn, in_shardings, out_shardings, arg_specs)
+ready for ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*specs)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..distributed import sharding as shd
+from ..models import zoo
+from ..optim import adam
+
+
+def _tree_shardings(axes_tree, shapes_tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda ax, s: shd.sharding_for(ax, s.shape, mesh),
+        axes_tree, shapes_tree)
+
+
+def build_train_step(model: zoo.Model, opt_cfg: adam.AdamConfig = adam.AdamConfig()):
+    """(params, opt_state, batch) -> (params', opt_state', metrics).
+
+    cfg.grad_accum > 1 splits the global batch into microbatches and scans
+    over them, accumulating f32 gradients (param-sharded, ZeRO-style).  This
+    bounds peak activation residency — the per-layer checkpoint carries of
+    ONE microbatch — which is what lets qwen2-72b/arctic-480b train_4k fit
+    a 16 GiB v5e chip.  The accumulation loop also overlaps the microbatch
+    boundary with the gradient reduce-scatter XLA schedules per leaf."""
+    cfg = model.cfg
+    accum = max(1, cfg.grad_accum)
+
+    def loss_fn(p, mb):
+        loss, metrics = model.forward(p, mb)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            def mb_step(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            # f32 accumulation for f32 masters; bf16 masters (arctic-480b:
+            # pure-bf16 training, the only way 480B optimizer state fits one
+            # pod) accumulate in bf16.
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32
+                                    if p.dtype == jnp.float32 else p.dtype),
+                params)
+            (grads, loss_sum), _ = jax.lax.scan(mb_step, (g0, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {"loss": loss}
+        new_params, new_opt, opt_metrics = adam.update(
+            grads, opt_state, params, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_specs(model: zoo.Model, shape: ShapeSpec, mesh,
+                opt_cfg: adam.AdamConfig = adam.AdamConfig()):
+    """Abstract args + shardings for train_step on `mesh`."""
+    p_shapes, p_axes = model.abstract_params()
+    opt_shapes = jax.eval_shape(lambda p: adam.init(p, opt_cfg), p_shapes)
+    opt_axes = adam.opt_state_axes(p_axes)
+    spec = zoo.input_specs(model.cfg, shape)
+    assert spec["kind"] == "train"
+
+    p_sh = _tree_shardings(p_axes, p_shapes, mesh)
+    o_sh = _tree_shardings(opt_axes, opt_shapes, mesh)
+    b_sh = _tree_shardings(spec["axes"], spec["batch"], mesh)
+    metrics_sh = jax.tree_util.tree_map(
+        lambda _: shd.sharding_for("", (), mesh),
+        jax.eval_shape(lambda: {"loss": jnp.zeros(()),
+                                "grad_norm": jnp.zeros(())}))
+    return dict(
+        args=(p_shapes, opt_shapes, spec["batch"]),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+
+
+def build_prefill_step(model: zoo.Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def prefill_specs(model: zoo.Model, shape: ShapeSpec, mesh):
+    p_shapes, p_axes = model.abstract_params()
+    spec = zoo.input_specs(model.cfg, shape)
+    assert spec["kind"] == "prefill"
+    p_sh = _tree_shardings(p_axes, p_shapes, mesh)
+    b_sh = _tree_shardings(spec["axes"], spec["batch"], mesh)
+
+    cache_shapes = model.abstract_cache(shape.global_batch, spec["max_len"])
+    cache_sh = _tree_shardings(model.cache_axes(), cache_shapes, mesh)
+    B = shape.global_batch
+    logits_sh = shd.sharding_for(
+        "batch|seq|vocab", (B, 1, model.cfg.vocab), mesh)
+    return dict(
+        args=(p_shapes, spec["batch"]),
+        in_shardings=(p_sh, b_sh),
+        out_shardings=(cache_sh, logits_sh),
+        max_len=spec["max_len"],
+        donate_argnums=(),
+    )
+
+
+def build_decode_step(model: zoo.Model):
+    def decode_step(params, cache, token):
+        return model.decode(params, cache, token)
+    return decode_step
+
+
+def decode_specs(model: zoo.Model, shape: ShapeSpec, mesh):
+    p_shapes, p_axes = model.abstract_params()
+    spec = zoo.input_specs(model.cfg, shape)
+    assert spec["kind"] == "decode"
+    B, max_len = spec["cache_batch"], spec["max_len"]
+    cache_shapes = model.abstract_cache(B, max_len)
+    cache_sh = _tree_shardings(model.cache_axes(), cache_shapes, mesh)
+    p_sh = _tree_shardings(p_axes, p_shapes, mesh)
+    tok_sh = shd.sharding_for("batch|seq", (B, 1), mesh)
+    logits_sh = shd.sharding_for("batch|seq|vocab", (B, 1, model.cfg.vocab), mesh)
+    return dict(
+        args=(p_shapes, cache_shapes, spec["batch"]["token"]),
+        in_shardings=(p_sh, cache_sh, tok_sh),
+        out_shardings=(cache_sh, logits_sh),
+        donate_argnums=(1,),
+    )
+
+
+def lower_cell(model: zoo.Model, shape: ShapeSpec, mesh, *,
+               serve_dtype: str = "bfloat16"):
+    """Lower the right step for (arch, shape) on `mesh`; returns Lowered.
+
+    Serving shapes lower with bf16 parameters (inference deployment mode);
+    train keeps f32 masters + bf16 compute.
+    """
+    import dataclasses as dc
+    cfg = model.cfg
+    with shd.use_mesh(mesh):
+        if shape.kind == "train":
+            sp = train_specs(model, shape, mesh)
+            fn = build_train_step(model)
+            return jax.jit(fn, in_shardings=sp["in_shardings"],
+                           out_shardings=sp["out_shardings"],
+                           donate_argnums=sp["donate_argnums"]).lower(*sp["args"])
+        # serving: bf16 params
+        serve_cfg = dc.replace(cfg, param_dtype=serve_dtype)
+        smodel = zoo.build(serve_cfg)
+        smodel = dc.replace(smodel, init=_bf16_init(smodel))
+        if shape.kind == "prefill":
+            sp = prefill_specs(smodel, shape, mesh)
+            fn = build_prefill_step(smodel, sp["max_len"])
+            return jax.jit(fn, in_shardings=sp["in_shardings"],
+                           out_shardings=sp["out_shardings"]).lower(*sp["args"])
+        import contextlib
+        ctx = (shd.serve_mode() if cfg.serve_weights_resident
+               else contextlib.nullcontext())
+        with ctx:
+            sp = decode_specs(smodel, shape, mesh)
+            fn = build_decode_step(smodel)
+            return jax.jit(fn, in_shardings=sp["in_shardings"],
+                           out_shardings=sp["out_shardings"],
+                           donate_argnums=sp["donate_argnums"]).lower(*sp["args"])
+
+
+def _bf16_init(model: zoo.Model):
+    """Wrap init so serving parameters materialize in bf16."""
+    inner = model.init
+
+    def init(key):
+        boxed = inner(key)
+        return jax.tree_util.tree_map(
+            lambda b: type(b)(b.value.astype(jnp.bfloat16)
+                              if b.value.dtype == jnp.float32 else b.value,
+                              b.axes),
+            boxed, is_leaf=lambda x: hasattr(x, "axes"))
+    return init

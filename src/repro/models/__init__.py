@@ -1,0 +1,6 @@
+"""LM model stack: layers, MoE, SSD, families, zoo facade."""
+from . import base, layers, moe, ssm, transformer, ssm_lm, hybrid, encdec, zoo
+from .zoo import Model, build, input_specs
+
+__all__ = ["base", "layers", "moe", "ssm", "transformer", "ssm_lm", "hybrid",
+           "encdec", "zoo", "Model", "build", "input_specs"]

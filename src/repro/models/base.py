@@ -1,0 +1,109 @@
+"""Functional-parameter infrastructure for the LM stack.
+
+No flax in this environment, so models are plain functions over explicit
+pytrees.  Every parameter leaf is created through ``param(...)`` which
+*boxes* the array with its logical sharding axes; ``unbox`` splits a boxed
+tree into (arrays, axes) with identical treedefs, so the distribution layer
+(distributed/sharding.py) can resolve PartitionSpecs for any architecture
+without a hand-maintained parallel table.
+
+Under ``jax.eval_shape`` the same init functions produce ShapeDtypeStruct
+leaves — that is how launch/dryrun.py builds abstract parameter trees for
+the 512-device lowering without allocating a single byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Boxed:
+    """A parameter leaf + its logical axis names (one per dim)."""
+
+    value: Any
+    axes: tuple
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def param(key, shape, axes, *, dtype=jnp.float32, init: str = "normal",
+          scale: Optional[float] = None) -> Boxed:
+    """Create a boxed parameter.
+
+    init: 'normal' (trunc-normal fan-in), 'zeros', 'ones', 'embed'.
+    """
+    assert len(axes) == len(shape), (shape, axes)
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            if init == "embed":
+                fan_in = shape[-1]
+            scale = fan_in ** -0.5
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Boxed(v, tuple(axes))
+
+
+def keygen(key):
+    """Infinite key splitter."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def tree_unbox(tree):
+    """(params, axes) with identical treedefs.
+
+    Axes leaves are encoded as '|'-joined strings (e.g. 'd_model|d_ff') so
+    the axes tree has exactly one leaf per parameter — a tuple of strings
+    would itself flatten under tree_map.
+    """
+    values = jax.tree_util.tree_map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree_util.tree_map(lambda b: "|".join(b.axes), tree,
+                                  is_leaf=is_boxed)
+    return values, axes
+
+
+def stack_layers(per_layer: Sequence):
+    """Stack a list of boxed trees along a new leading 'layers' axis —
+    the scan-over-layers representation (O(1) HLO size for any depth)."""
+    def stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return Boxed(vals, ("layers",) + leaves[0].axes)
+    return jax.tree_util.tree_map(stack, *per_layer, is_leaf=is_boxed)
+
+
+def axes_of(init_fn, *args):
+    """Logical-axes tree of an init function's output (abstract, cheap).
+
+    Used by scan bodies to re-assert per-layer parameter sharding via
+    distributed.sharding.hint_tree — see that docstring for why."""
+    return eval_shape_boxed(init_fn, *args)[1]
+
+
+def eval_shape_boxed(init_fn, *args):
+    """Run an init function abstractly; returns (ShapeDtypeStruct tree, axes).
+
+    Boxes are not pytrees on purpose (leaves must stay opaque to jit), so we
+    unbox inside the traced function and reattach axes from a concrete-free
+    second structural pass.
+    """
+    axes_cell = {}
+
+    def run():
+        tree = init_fn(*args)
+        values, axes = tree_unbox(tree)
+        axes_cell["axes"] = axes
+        return values
+
+    shapes = jax.eval_shape(run)
+    return shapes, axes_cell["axes"]

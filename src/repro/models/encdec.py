@@ -1,0 +1,210 @@
+"""Whisper-style encoder–decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings (B, enc_len, d_model) directly to the encoder
+(bidirectional attention, no RoPE, sinusoidal positions).  The decoder is a
+causal LM with per-layer cross-attention into the encoder output.
+
+Serving: ``prefill`` encodes once, caches per-layer cross-K/V and the
+decoder self-attention KV; ``decode`` is then encoder-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from . import layers as L
+from ..distributed import sharding as shd
+from .base import axes_of, keygen, stack_layers
+
+
+def _enc_axes(cfg):
+    return axes_of(lambda k: _enc_block_init(cfg, keygen(k)), jax.random.PRNGKey(0))
+
+
+def _dec_axes(cfg):
+    return axes_of(lambda k: _dec_block_init(cfg, keygen(k)), jax.random.PRNGKey(0))
+
+
+def _enc_block_init(cfg, keys):
+    return {"ln1": L.init_norm(cfg, next(keys)),
+            "attn": L.init_attention(cfg, keys),
+            "ln2": L.init_norm(cfg, next(keys)),
+            "mlp": L.init_mlp(cfg, keys)}
+
+
+def _dec_block_init(cfg, keys):
+    return {"ln1": L.init_norm(cfg, next(keys)),
+            "self": L.init_attention(cfg, keys),
+            "ln2": L.init_norm(cfg, next(keys)),
+            "cross": L.init_attention(cfg, keys),
+            "ln3": L.init_norm(cfg, next(keys)),
+            "mlp": L.init_mlp(cfg, keys)}
+
+
+def init(cfg, key):
+    keys = keygen(key)
+    return {
+        "embed": L.init_embed(cfg, keys),
+        "enc_layers": stack_layers([_enc_block_init(cfg, keys)
+                                    for _ in range(cfg.n_enc_layers)]),
+        "enc_norm": L.init_norm(cfg, next(keys)),
+        "dec_layers": stack_layers([_dec_block_init(cfg, keys)
+                                    for _ in range(cfg.n_layers)]),
+        "dec_norm": L.init_norm(cfg, next(keys)),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: (B, enc_len, d_model) precomputed embeddings (stub)."""
+    B, T, _ = frames.shape
+    pos = jnp.arange(T, dtype=jnp.int32)[None].repeat(B, 0)
+    x = frames.astype(jnp.dtype(cfg.dtype)) + \
+        L.sinusoidal(pos, cfg.d_model).astype(jnp.dtype(cfg.dtype))
+    x = hint(x, "batch|seq|embed")
+
+    def body(cfg, blk, x, pos):
+        a, _ = L.apply_attention(cfg, blk["attn"],
+                                 L.apply_norm(cfg, blk["ln1"], x), pos,
+                                 causal=False, use_rope=False)
+        x = x + a
+        return x + L.apply_mlp(cfg, blk["mlp"],
+                               L.apply_norm(cfg, blk["ln2"], x)), 0.0
+
+    fn = functools.partial(body, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    blk_axes = _enc_axes(cfg)
+    carry_ax = "batch|act_seq|embed" if cfg.seq_parallel else "batch|seq|embed"
+
+    def step(x, blk):
+        x, _ = fn(shd.hint_tree(blk, blk_axes), x, pos)
+        return shd.hint(x, carry_ax), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_block(cfg, blk, x, pos, enc_out, enc_pos):
+    a, kv = L.apply_attention(cfg, blk["self"],
+                              L.apply_norm(cfg, blk["ln1"], x), pos,
+                              causal=True, use_rope=False)
+    x = x + a
+    c, cross_kv = L.apply_attention(cfg, blk["cross"],
+                                    L.apply_norm(cfg, blk["ln2"], x), pos,
+                                    causal=False, use_rope=False,
+                                    xkv=enc_out, kv_positions=enc_pos)
+    x = x + c
+    x = x + L.apply_mlp(cfg, blk["mlp"], L.apply_norm(cfg, blk["ln3"], x))
+    return x, kv, cross_kv
+
+
+def forward(cfg, params, batch):
+    """batch: frames (B,enc_len,d), tokens (B,S), labels (B,S)."""
+    enc_out = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None].repeat(B, 0)
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+
+    body = functools.partial(_dec_block, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    blk_axes = _dec_axes(cfg)
+    carry_ax = "batch|act_seq|embed" if cfg.seq_parallel else "batch|seq|embed"
+
+    def step(x, blk):
+        x, _, _ = body(shd.hint_tree(blk, blk_axes), x, pos, enc_out, enc_pos)
+        return shd.hint(x, carry_ax), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    h = L.apply_norm(cfg, params["dec_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    loss = L.xent_loss(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    kv = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype),
+        L.init_kv_cache(cfg, batch, max_len, dtype))
+    cross_shape = (cfg.n_layers, batch, cfg.enc_len, cfg.n_kv_heads, cfg.hd)
+    return {"kv": kv,
+            "cross_k": jnp.zeros(cross_shape, dtype),
+            "cross_v": jnp.zeros(cross_shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg):
+    return {"kv": {k: "layers|" + v for k, v in L.KV_CACHE_AXES.items()},
+            "cross_k": "layers|batch|kv_seq|kv_heads|head_dim",
+            "cross_v": "layers|batch|kv_seq|kv_heads|head_dim",
+            "len": ""}
+
+
+def prefill(cfg, params, frames, tokens, max_len: int):
+    enc_out = encode(cfg, params, frames)
+    B, S = tokens.shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+    enc_pos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)[None].repeat(B, 0)
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+    dtype = jnp.dtype(cfg.dtype)
+
+    blk_axes = _dec_axes(cfg)
+
+    def step(x, blk):
+        blk = shd.hint_tree(blk, blk_axes)
+        x, (k, v), (ck, cv) = _dec_block(cfg, blk, x, pos, enc_out, enc_pos)
+        pad = max_len - k.shape[1]
+        kc = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, ({"k": kc, "v": vc}, ck.astype(dtype), cv.astype(dtype))
+
+    x, (kv, ck, cv) = jax.lax.scan(step, x, params["dec_layers"])
+    h = L.apply_norm(cfg, params["dec_norm"], x[:, -1:])
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"kv": kv, "cross_k": ck, "cross_v": cv,
+            "len": jnp.asarray(S, jnp.int32)}, logits
+
+
+def decode(cfg, params, cache, token):
+    cur = cache["len"]
+    x = L.embed_tokens(cfg, params["embed"], token)
+    B = token.shape[0]
+    pos = jnp.full((B, 1), cur, jnp.int32)
+    x = x + L.sinusoidal(pos, cfg.d_model).astype(x.dtype)
+
+    blk_axes = _dec_axes(cfg)
+
+    def step(x, inp):
+        blk, kv, ck, cv = inp
+        blk = shd.hint_tree(blk, blk_axes)
+        h = L.apply_norm(cfg, blk["ln1"], x)
+        a, kv = L.apply_attention_decode(cfg, blk["self"], h, kv, cur,
+                                         use_rope=False)
+        x = x + a
+        h = L.apply_norm(cfg, blk["ln2"], x)
+        x = x + L.apply_cross_attention_decode(cfg, blk["cross"], h, ck, cv)
+        x = x + L.apply_mlp(cfg, blk["mlp"], L.apply_norm(cfg, blk["ln3"], x))
+        return x, kv
+
+    x, kv = jax.lax.scan(step, x, (params["dec_layers"], cache["kv"],
+                                   cache["cross_k"], cache["cross_v"]))
+    h = L.apply_norm(cfg, params["dec_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"kv": kv, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"],
+            "len": cur + 1}, logits

@@ -1,0 +1,206 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE shared attention block.
+
+Layout: every ``cfg.shared_attn_every`` SSM layers, the *same* attention+MLP
+block (one weight copy) is applied — Zamba2's parameter-sharing design.
+Each application keeps its own KV cache (weights shared, state not).
+
+Scan structure: outer scan over G groups, each group = (inner scan over E
+stacked SSM layers) + shared-block application; leftover tail layers scan
+separately.  81 = 13×6 + 3 for the production config.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from . import layers as L
+from . import ssm as S
+from ..distributed import sharding as shd
+from .base import axes_of, keygen, stack_layers
+
+
+def _blk_axes(cfg):
+    return axes_of(lambda k: _ssm_block_init(cfg, keygen(k)), jax.random.PRNGKey(0))
+
+
+def _ssm_block_init(cfg, keys):
+    return {"ln": L.init_norm(cfg, next(keys)), "ssm": S.init_ssm(cfg, keys)}
+
+
+def group_shape(cfg):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    return n_groups, every, tail
+
+
+def _stack_or_empty(cfg, keys, n: int):
+    """Stack n SSM blocks; n == 0 yields a zero-length stacked tree so the
+    tail scan still typechecks (lax.scan over length-0 xs)."""
+    if n == 0:
+        template = stack_layers([_ssm_block_init(cfg, keys)])
+        return jax.tree_util.tree_map(
+            lambda b: type(b)(b.value[:0], b.axes), template,
+            is_leaf=lambda x: hasattr(x, "axes"))
+    return stack_layers([_ssm_block_init(cfg, keys) for _ in range(n)])
+
+
+def init(cfg, key):
+    keys = keygen(key)
+    n_groups, every, tail = group_shape(cfg)
+    groups = [stack_layers([_ssm_block_init(cfg, keys) for _ in range(every)])
+              for _ in range(n_groups)]
+    return {
+        "embed": L.init_embed(cfg, keys),
+        "groups": stack_layers(groups),
+        "tail": _stack_or_empty(cfg, keys, tail),
+        "shared": {
+            "ln1": L.init_norm(cfg, next(keys)),
+            "attn": L.init_attention(cfg, keys),
+            "ln2": L.init_norm(cfg, next(keys)),
+            "mlp": L.init_mlp(cfg, keys),
+        },
+        "final_norm": L.init_norm(cfg, next(keys)),
+    }
+
+
+def _ssm_block(cfg, blk, x):
+    y, state = S.apply_ssm(cfg, blk["ssm"], L.apply_norm(cfg, blk["ln"], x))
+    return x + y, state
+
+
+def _shared_full(cfg, shared, x, positions):
+    a, kv = L.apply_attention(cfg, shared["attn"],
+                              L.apply_norm(cfg, shared["ln1"], x),
+                              positions, causal=True)
+    x = x + a
+    return x + L.apply_mlp(cfg, shared["mlp"],
+                           L.apply_norm(cfg, shared["ln2"], x)), kv
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    B, Sq = tokens.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)[None].repeat(B, 0)
+    x = hint(x, "batch|seq|embed")
+
+    ssm_body = functools.partial(_ssm_block, cfg)
+    if cfg.remat:
+        ssm_body = jax.checkpoint(
+            ssm_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    blk_axes = _blk_axes(cfg)
+    carry_ax = "batch|act_seq|embed" if cfg.seq_parallel else "batch|seq|embed"
+
+    def inner(x, blk):
+        x, _ = ssm_body(shd.hint_tree(blk, blk_axes), x)
+        return shd.hint(x, carry_ax), None
+
+    def outer(x, group):
+        x, _ = jax.lax.scan(inner, x, group)
+        x, _ = _shared_full(cfg, params["shared"], x, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(outer, x, params["groups"])
+    x, _ = jax.lax.scan(inner, x, params["tail"])
+    h = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    loss = L.xent_loss(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    n_groups, every, tail = group_shape(cfg)
+    one = S.init_ssm_cache(cfg, batch, dtype)
+    grp = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((n_groups, every) + x.shape, x.dtype), one)
+    tl = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((tail,) + x.shape, x.dtype), one)
+    kv = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((n_groups,) + x.shape, x.dtype),
+        L.init_kv_cache(cfg, batch, max_len, dtype))
+    return {"ssm_groups": grp, "ssm_tail": tl, "kv": kv,
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg):
+    ssm_ax = {k: "apps|layers|" + v for k, v in S.SSM_CACHE_AXES.items()}
+    tail_ax = {k: "layers|" + v for k, v in S.SSM_CACHE_AXES.items()}
+    kv_ax = {k: "apps|" + v for k, v in L.KV_CACHE_AXES.items()}
+    return {"ssm_groups": ssm_ax, "ssm_tail": tail_ax, "kv": kv_ax, "len": ""}
+
+
+def prefill(cfg, params, tokens, max_len: int):
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    B, Sq = tokens.shape
+    positions = jnp.arange(Sq, dtype=jnp.int32)[None].repeat(B, 0)
+    dtype = jnp.dtype(cfg.dtype)
+
+    blk_axes = _blk_axes(cfg)
+
+    def inner(x, blk):
+        blk = shd.hint_tree(blk, blk_axes)
+        h = L.apply_norm(cfg, blk["ln"], x)
+        y, state = S.apply_ssm(cfg, blk["ssm"], h)
+        zxbcdt = jnp.einsum("bsd,de->bse", h,
+                            blk["ssm"]["in_proj"].astype(h.dtype))
+        _, xr, Bc, Cc, _ = S._split(cfg, zxbcdt)
+        window = jnp.concatenate([xr, Bc, Cc], -1)[:, -(cfg.ssm_conv - 1):]
+        return x + y, {"conv": window.astype(dtype), "state": state}
+
+    def outer(x, group):
+        x, ssm_c = jax.lax.scan(inner, x, group)
+        x, (k, v) = _shared_full(cfg, params["shared"], x, positions)
+        pad = max_len - k.shape[1]
+        kc = jnp.pad(k.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v.astype(dtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return x, (ssm_c, {"k": kc, "v": vc})
+
+    x, (grp_c, kv_c) = jax.lax.scan(outer, x, params["groups"])
+    x, tail_c = jax.lax.scan(inner, x, params["tail"])
+    h = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"ssm_groups": grp_c, "ssm_tail": tail_c, "kv": kv_c,
+            "len": jnp.asarray(Sq, jnp.int32)}, logits
+
+
+def decode(cfg, params, cache, token):
+    cur = cache["len"]
+    x = L.embed_tokens(cfg, params["embed"], token)
+
+    blk_axes = _blk_axes(cfg)
+
+    def inner(x, inp):
+        blk, c = inp
+        blk = shd.hint_tree(blk, blk_axes)
+        y, c = S.apply_ssm_decode(cfg, blk["ssm"],
+                                  L.apply_norm(cfg, blk["ln"], x), c)
+        return x + y, c
+
+    def outer(x, inp):
+        group, ssm_c, kv = inp
+        x, ssm_c = jax.lax.scan(inner, x, (group, ssm_c))
+        h = L.apply_norm(cfg, params["shared"]["ln1"], x)
+        a, kv = L.apply_attention_decode(cfg, params["shared"]["attn"], h,
+                                         kv, cur)
+        x = x + a
+        x = x + L.apply_mlp(cfg, params["shared"]["mlp"],
+                            L.apply_norm(cfg, params["shared"]["ln2"], x))
+        return x, (ssm_c, kv)
+
+    x, (grp_c, kv_c) = jax.lax.scan(
+        outer, x, (params["groups"], cache["ssm_groups"], cache["kv"]))
+    x, tail_c = jax.lax.scan(inner, x, (params["tail"], cache["ssm_tail"]))
+    h = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"ssm_groups": grp_c, "ssm_tail": tail_c, "kv": kv_c,
+            "len": cur + 1}, logits

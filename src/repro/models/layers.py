@@ -1,0 +1,441 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, GLU MLPs.
+
+Functional style over boxed param trees (models/base.py).  Activation
+sharding hints use the logical-axis resolver so the same code lowers on a
+laptop (no mesh) and on the 512-chip production mesh.
+
+Attention supports:
+  * train/prefill (full-sequence, causal or bidirectional),
+  * cross-attention (whisper decoder),
+  * single-token decode against a static-length KV cache
+    (dynamic_update_slice write + length-masked read — the serve_step path).
+
+GQA is computed grouped (no KV repeat materialization): q reshaped to
+(B, kv, group, S, hd) so score/attn einsums contract per KV head.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .base import Boxed, param
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, key) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": param(key, (cfg.d_model,), ("embed",), init="ones"),
+                "bias": param(key, (cfg.d_model,), ("embed",), init="zeros")}
+    return {"scale": param(key, (cfg.d_model,), ("embed",), init="ones")}
+
+
+def apply_norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.rms_eps)
+        out = out * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def sinusoidal(positions, d: int):
+    """Classic sin/cos absolute encodings: positions (...,S) -> (...,S,d).
+
+    Whisper's learned positions are replaced by sinusoids (stub-friendly:
+    no max-length parameter; noted in DESIGN.md as a frontend deviation)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, keys, *, d_model: Optional[int] = None) -> dict:
+    d = d_model or cfg.d_model
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "wq": param(next(keys), (d, nh * hd), ("d_model", "heads")),
+        "wk": param(next(keys), (d, nkv * hd), ("d_model", "kv_heads")),
+        "wv": param(next(keys), (d, nkv * hd), ("d_model", "kv_heads")),
+        "wo": param(next(keys), (nh * hd, d), ("heads", "d_model")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = param(next(keys), (nh * hd,), ("heads",), init="zeros")
+        p["bk"] = param(next(keys), (nkv * hd,), ("kv_heads",), init="zeros")
+        p["bv"] = param(next(keys), (nkv * hd,), ("kv_heads",), init="zeros")
+    return p
+
+
+def _proj(x, w, b=None):
+    y = jnp.einsum("bsd,df->bsf", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def _qkv(cfg, p, x, xkv=None):
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    xkv = x if xkv is None else xkv
+    B, S = x.shape[:2]
+    T = xkv.shape[1]
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, nh, hd)
+    k = _proj(xkv, p["wk"], p.get("bk")).reshape(B, T, nkv, hd)
+    v = _proj(xkv, p["wv"], p.get("bv")).reshape(B, T, nkv, hd)
+    return q, k, v
+
+
+def _grouped_attention(q, k, v, mask):
+    """q: (B,S,nh,hd), k/v: (B,T,nkv,hd), mask broadcastable to (B,1,1,S,T).
+
+    Computed per KV-head group to avoid materializing repeated KV."""
+    B, S, nh, hd = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    qg = q.reshape(B, S, nkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,kv,g,S,hd)
+    kg = k.transpose(0, 2, 1, 3)                               # (B,kv,T,hd)
+    vg = v.transpose(0, 2, 1, 3)
+    # bf16 operands + f32 accumulation (preferred_element_type): the MXU
+    # pattern, and it stops XLA-CPU hoisting whole-cache f32 upcasts out of
+    # the decode layer scan (observed: +20 GiB on qwen2-72b decode_32k).
+    scores = jnp.einsum("bngsd,bntd->bngst", qg, kg,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,bntd->bngsd", w.astype(v.dtype), vg)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, nh * hd)
+
+
+def causal_mask(positions_q, positions_k):
+    """(B,S),(B,T) -> (B,1,1,S,T) bool."""
+    return (positions_q[:, None, None, :, None]
+            >= positions_k[:, None, None, None, :])
+
+
+# Sequence-parallel flash attention (online softmax, custom VJP).
+#
+# The (S, T) score matrix exists only as (S_local, bk) tiles: the KV axis is
+# scanned (memory control), while the q/sequence axis is SHARDED over the
+# `model` mesh axis — matching the seq-parallel residual stream, so q and
+# the output never cross devices; only K/V are gathered (bf16, the cheap
+# operand).  This replaced a two-level q/kv chunk scan whose per-chunk
+# reshapes fought the act_seq sharding (EXPERIMENTS.md §Perf iteration 1:
+# 3953 -> ~50 GiB of all-gathers per step on llama3.2-3b train_4k), and it
+# also de-replicates attention compute for head counts that don't divide
+# the model axis (qwen2-0.5b's 14 heads, paligemma's 8).
+#
+# The backward is the flash-attention recompute scheme (saved (out, lse)
+# only) — O(S·d) residency, no stored probability tiles.
+_BLOCKWISE_THRESHOLD = 2048  # S·T above which scores must not materialize
+
+
+def _group(q):
+    B, S, nh, hd = q.shape
+    return q.transpose(0, 2, 1, 3), (B, S, nh, hd)
+
+
+def _flash_fwd_scan(q, k, v, q_pos, k_pos, causal, bk):
+    """q: (B,S,nh,hd) seq-sharded; k/v: (B,T,nkv,hd) replicated-on-model.
+
+    Returns grouped out (B,nkv,g,S,hd) f32-normalized in q.dtype + lse."""
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    f32 = jnp.float32
+    bk = min(bk, T)
+    pad_k = (-T) % bk
+    qg = q.reshape(B, S, nkv, g, hd).transpose(0, 2, 3, 1, 4)  # (B,kv,g,S,hd)
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    nk = kp.shape[1] // bk
+    kc = kp.reshape(B, nk, bk, nkv, hd).transpose(1, 0, 3, 2, 4)
+    vc = vp.reshape(B, nk, bk, nkv, hd).transpose(1, 0, 3, 2, 4)
+    kpc = kpos.reshape(B, nk, bk).transpose(1, 0, 2)
+    scale = hd ** -0.5
+
+    m0 = hint(jnp.full((B, nkv, g, S), -1e30, f32), "batch|rep|rep|act_seq")
+    l0 = hint(jnp.zeros((B, nkv, g, S), f32), "batch|rep|rep|act_seq")
+    a0 = hint(jnp.zeros((B, nkv, g, S, hd), f32),
+              "batch|rep|rep|act_seq|head_dim")
+
+    def kv_step(carry, kv_in):
+        m, l, acc = carry
+        kb, vb, kpb = kv_in                                   # (B,kv,bk,hd)
+        s = jnp.einsum("bngsd,bntd->bngst", qg.astype(f32),
+                       kb.astype(f32)) * scale
+        mask = (kpb >= 0)[:, None, None, None, :]
+        if causal:
+            mask = mask & (q_pos[:, None, None, :, None]
+                           >= kpb[:, None, None, None, :])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bngst,bntd->bngsd", p, vb.astype(f32))
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kc, vc, kpc))
+    lsafe = jnp.maximum(l, 1e-30)
+    out = (acc / lsafe[..., None]).astype(q.dtype)            # (B,kv,g,S,hd)
+    lse = m + jnp.log(lsafe)
+    return out, lse
+
+
+def _unflatten_out(out, B, S, nh, hd):
+    # (B,kv,g,S,hd) -> (B,S,nh*hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, nh * hd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _blockwise_attention_vjp(causal, bk, q, k, v, q_pos, k_pos):
+    out, _ = _flash_fwd_scan(q, k, v, q_pos, k_pos, causal, bk)
+    B, S, nh, hd = q.shape
+    return _unflatten_out(out, B, S, nh, hd)
+
+
+def _bw_fwd(causal, bk, q, k, v, q_pos, k_pos):
+    out, lse = _flash_fwd_scan(q, k, v, q_pos, k_pos, causal, bk)
+    B, S, nh, hd = q.shape
+    return (_unflatten_out(out, B, S, nh, hd),
+            (q, k, v, q_pos, k_pos, out, lse))
+
+
+def _bw_bwd(causal, bk, res, dout):
+    """Flash backward: recompute (S, bk) probability tiles per kv chunk from
+    the saved (out, lse).  dq stays seq-sharded (carry); dk/dv emit per
+    chunk."""
+    q, k, v, q_pos, k_pos, out_g, lse = res
+    B, S, nh, hd = q.shape
+    T, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    f32 = jnp.float32
+    scale = hd ** -0.5
+    bk = min(bk, T)
+    pad_k = (-T) % bk
+    nk = (T + pad_k) // bk
+
+    dog = dout.reshape(B, S, nkv, g, hd).transpose(0, 2, 3, 1, 4).astype(f32)
+    D = (dog * out_g.astype(f32)).sum(-1)                     # (B,kv,g,S)
+    qg = q.reshape(B, S, nkv, g, hd).transpose(0, 2, 3, 1, 4).astype(f32)
+
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    kc = kp.reshape(B, nk, bk, nkv, hd).transpose(1, 0, 3, 2, 4).astype(f32)
+    vc = vp.reshape(B, nk, bk, nkv, hd).transpose(1, 0, 3, 2, 4).astype(f32)
+    kpc = kpos.reshape(B, nk, bk).transpose(1, 0, 2)
+
+    dq0 = hint(jnp.zeros((B, nkv, g, S, hd), f32),
+               "batch|rep|rep|act_seq|head_dim")
+
+    def kv_step(dq, kv_in):
+        kb, vb, kpb = kv_in
+        s = jnp.einsum("bngsd,bntd->bngst", qg, kb) * scale
+        mask = (kpb >= 0)[:, None, None, None, :]
+        if causal:
+            mask = mask & (q_pos[:, None, None, :, None]
+                           >= kpb[:, None, None, None, :])
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        dvj = jnp.einsum("bngst,bngsd->bntd", p, dog)
+        dp = jnp.einsum("bngsd,bntd->bngst", dog, vb)
+        ds = p * (dp - D[..., None]) * scale
+        dq = dq + jnp.einsum("bngst,bntd->bngsd", ds, kb)
+        dkj = jnp.einsum("bngst,bngsd->bntd", ds, qg)
+        return dq, (dkj, dvj)
+
+    dq, (dks, dvs) = jax.lax.scan(kv_step, dq0, (kc, vc, kpc))
+    dq = dq.transpose(0, 3, 1, 2, 4).reshape(B, S, nh, hd)
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(B, nk * bk, nkv, hd)[:, :T]
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(B, nk * bk, nkv, hd)[:, :T]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None, None)
+
+
+_blockwise_attention_vjp.defvjp(_bw_fwd, _bw_bwd)
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, causal, bk: int = 1024):
+    """Public seq-parallel flash attention:
+    (B,S,nh,hd)×(B,T,nkv,hd) -> (B,S,nh*hd), O(S·d·bk-tile) memory in fwd
+    AND bwd (custom flash-style VJP), q/out seq-sharded, K/V gathered."""
+    q = hint(q, "batch|act_seq|rep|head_dim")
+    k = hint(k, "batch|rep|rep|head_dim")
+    v = hint(v, "batch|rep|rep|head_dim")
+    return _blockwise_attention_vjp(causal, bk, q, k, v, q_pos, k_pos)
+
+
+def apply_attention(cfg, p, x, positions, *, causal=True, use_rope=True,
+                    xkv=None, kv_positions=None):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = _qkv(cfg, p, x, xkv)
+    kv_positions = positions if kv_positions is None else kv_positions
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    S, T = q.shape[1], k.shape[1]
+    if S * T > _BLOCKWISE_THRESHOLD ** 2:
+        out = blockwise_attention(q, k, v, positions, kv_positions, causal)
+    else:
+        q = hint(q, "batch|seq|act_heads|head_dim")
+        if causal:
+            mask = causal_mask(positions, kv_positions)
+        else:
+            mask = jnp.ones((1, 1, 1, 1, 1), bool)
+        out = _grouped_attention(q, k, v, mask)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(out.dtype))
+    return hint(out, "batch|act_seq|embed"), (k, v)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    nkv, hd = cfg.n_kv_heads, cfg.hd
+    shape = (batch, max_len, nkv, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+KV_CACHE_AXES = {"k": "batch|kv_seq|kv_heads|head_dim",
+                 "v": "batch|kv_seq|kv_heads|head_dim"}
+
+
+def apply_attention_decode(cfg, p, x, cache: dict, cur_len, *, use_rope=True):
+    """One-token decode: x is (B, 1, d); cache holds (B, T, nkv, hd).
+
+    ``cur_len`` (scalar int32) is the number of valid positions already in
+    the cache; the new token writes at index cur_len and attends over
+    [0, cur_len].
+    """
+    B = x.shape[0]
+    pos = jnp.full((B, 1), cur_len, jnp.int32)
+    q, k_new, v_new = _qkv(cfg, p, x)
+    if use_rope:
+        q = rope(q, pos, cfg.rope_theta)
+        k_new = rope(k_new, pos, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype),
+                                            cur_len, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype),
+                                            cur_len, axis=1)
+    k = hint(k, "batch|kv_seq|kv_heads|head_dim")
+    v = hint(v, "batch|kv_seq|kv_heads|head_dim")
+    T = k.shape[1]
+    kpos = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+    mask = (kpos <= cur_len)[:, None, None, None, :]
+    out = _grouped_attention(q, k, v, mask)
+    out = jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(out.dtype))
+    return out, {"k": k, "v": v}
+
+
+def apply_cross_attention_decode(cfg, p, x, cross_k, cross_v):
+    """Decode-time cross-attention over precomputed encoder KV."""
+    B = x.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, 1, nh, hd)
+    mask = jnp.ones((1, 1, 1, 1, 1), bool)
+    out = _grouped_attention(q, cross_k, cross_v, mask)
+    return jnp.einsum("bsf,fd->bsd", out, p["wo"].astype(out.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, keys, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {"wi": param(next(keys), (d, f), ("d_model", "d_ff")),
+         "wo": param(next(keys), (f, d), ("d_ff", "d_model"))}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = param(next(keys), (d, f), ("d_model", "d_ff"))
+    return p
+
+
+def apply_mlp(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if cfg.act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif cfg.act == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = hint(h, "batch|seq|act_ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg, keys) -> dict:
+    p = {"tok": param(next(keys), (cfg.vocab, cfg.d_model),
+                      ("vocab", "d_model"), init="embed")}
+    if not cfg.tie_embeddings:
+        p["out"] = param(next(keys), (cfg.d_model, cfg.vocab),
+                         ("d_model", "vocab"))
+    return p
+
+
+def embed_tokens(cfg, p, tokens):
+    emb = p["tok"].astype(_dt(cfg))[tokens]
+    if cfg.tie_embeddings:
+        emb = emb * (cfg.d_model ** 0.5)  # gemma-style scaled tied embedding
+    return hint(emb, "batch|seq|embed")
+
+
+def logits_out(cfg, p, x):
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(x.dtype)
+        return jnp.einsum("bsd,vd->bsv", x, w)
+    return jnp.einsum("bsd,dv->bsv", x, p["out"].astype(x.dtype))
+
+
+def xent_loss(logits, labels, mask=None):
+    """Stable cross-entropy; logits (B,S,V) any float dtype, labels int."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)

@@ -1,0 +1,129 @@
+"""Mixture-of-Experts layer: token-choice top-k with capacity, scatter
+dispatch and segment-sum combine.
+
+DESIGN.md §1.4: the combine path IS the paper's `fm.groupby.row` — tokens
+scatter-add into per-expert buffers keyed by routing labels, the exact
+segment-sum core of the GenOps engine.  Dispatch is GShard-style
+capacity-bounded (position-in-expert via cumsum; overflow tokens drop and
+keep the residual), which keeps every shape static for jit while sharding
+cleanly: expert buffers (E, C, d) shard E over `model`, token activations
+shard over `data`, and GSPMD turns the scatter/gather pair into the
+all-to-all pattern the roofline parser then prices.
+
+Arctic's dense-residual variant runs a dense MLP in parallel and sums.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .base import param
+from .layers import apply_mlp, init_mlp
+
+
+def init_moe(cfg, keys) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_ff, cfg.n_experts
+    glu = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": param(next(keys), (d, e), ("d_model", "experts")),
+        "wi": param(next(keys), (e, d, f), ("experts", "d_model", "d_ff")),
+        "wo": param(next(keys), (e, f, d), ("experts", "d_ff", "d_model")),
+    }
+    if glu:
+        p["wg"] = param(next(keys), (e, d, f), ("experts", "d_model", "d_ff"))
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(cfg, keys, cfg.d_ff)
+    return p
+
+
+def _capacity(cfg, tokens: int) -> int:
+    # Small token counts (decode steps, smoke tests) run DROPLESS: capacity
+    # covers the worst case, so decode routing is exactly consistent with
+    # the full forward pass.  Large counts use GShard capacity bounding.
+    if tokens * cfg.top_k <= 4096:
+        return max(8, -(-tokens * cfg.top_k // 8) * 8)
+    cap = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # round up to sublane multiple
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, d) -> (B, S, d).
+
+    Dispatch is *per batch row*: each row owns an (E, C_b, d) expert buffer
+    with per-row capacity C_b, so the buffer tensor is (B, E, C_b, d) and
+    shards (batch→data, experts→model) — expert FFN matmuls stay local to
+    their expert shard (the flat (E, C_global, d) formulation made GSPMD
+    replicate the FFN across the model axis: 16× the dot FLOPs, see
+    EXPERIMENTS.md §Perf iteration 2).  Combine is the inverse slot-scatter
+    (a batched `fm.groupby.row` — DESIGN.md §1.4), which reduces across
+    expert shards as a psum of the (B, S, d) output rather than a gather of
+    the much larger expert buffers.
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)                             # per-row capacity
+
+    # --- route (per row) -----------------------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)           # (B, S, E)
+    weights, sel = jax.lax.top_k(gates, k)            # (B, S, k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-row capacity positions (GShard cumsum) --------------------------
+    sel_flat = sel.reshape(B, S * k)
+    onehot = jax.nn.one_hot(sel_flat, E, dtype=jnp.int32)       # (B, S*k, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos_all, sel_flat[..., None], 2)[..., 0]
+    keep = pos < C                                    # (B, S*k)
+
+    tok_idx = (jnp.arange(S * k, dtype=jnp.int32) // k)          # static
+    vals = jnp.repeat(x, k, axis=1)                   # (B, S*k, d)
+    vals = jnp.where(keep[..., None], vals, 0)
+    e_idx = jnp.where(keep, sel_flat, E)              # OOB -> dropped
+    p_idx = jnp.where(keep, pos, C)
+    w_flat = (weights.reshape(B, S * k) * keep).astype(x.dtype)
+
+    # --- dispatch: per-row scatter into (E, C, d) ----------------------------
+    def row_dispatch(v_r, e_r, p_r, w_r):
+        buf = jnp.zeros((E, C, d), x.dtype).at[e_r, p_r].add(v_r, mode="drop")
+        slot_tok = jnp.full((E, C), S, jnp.int32).at[e_r, p_r].set(
+            tok_idx, mode="drop")                     # S = OOB sentinel
+        slot_w = jnp.zeros((E, C), x.dtype).at[e_r, p_r].set(w_r, mode="drop")
+        return buf, slot_tok, slot_w
+
+    buf, slot_tok, slot_w = jax.vmap(row_dispatch)(vals, e_idx, p_idx, w_flat)
+    buf = hint(buf, "batch|experts|capacity|embed")
+
+    # --- expert FFN (E sharded over `model`, B over `data`) ------------------
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        g = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(x.dtype))
+        act = (jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu)
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    out_buf = hint(out_buf, "batch|experts|capacity|embed")
+
+    # --- combine: slot-scatter back to tokens (groupby.row core) -------------
+    def row_combine(ob_r, st_r, sw_r):
+        upd = (ob_r * sw_r[..., None]).reshape(E * C, d)
+        return jnp.zeros((S, d), x.dtype).at[st_r.reshape(E * C)].add(
+            upd, mode="drop")
+
+    y = jax.vmap(row_combine)(out_buf, slot_tok, slot_w)
+    if "dense" in p:
+        y = y + apply_mlp(cfg, p["dense"], x)
+    return hint(y, "batch|seq|embed"), _aux_loss(gates.reshape(-1, E),
+                                                 sel.reshape(-1, k), E)
+
+
+def _aux_loss(gates, sel, E):
+    """Switch/GShard load-balancing auxiliary loss."""
+    me = gates.mean(axis=0)                                   # (E,)
+    pe = jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32).mean(axis=0)
+    return E * jnp.sum(me * pe)

@@ -1,0 +1,221 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+The chunked SSD algorithm is FlashMatrix's two-level partitioning in
+disguise (DESIGN.md §3): the sequence splits into chunks (I/O-level
+partitions); within a chunk the quadratic "attention-like" term runs on a
+VMEM-resident (L, L) tile, and across chunks a tiny (H, P, N) state carries
+the recurrence — identity → update → combine, like every GenOps sink.
+
+Shapes (per layer): d_inner = expand·d_model, P = headdim,
+H = d_inner / P heads, N = ssm_state, G = ngroups (B/C shared per group).
+
+    in_proj : d_model -> [z (d_inner), x (d_inner), B (G·N), C (G·N), dt (H)]
+    conv1d  : depthwise width-4 over the (x, B, C) channels
+    SSD     : y_t = Σ_{s≤t} C_tᵀ (∏_{r=s+1..t} a_r) B_s (dt_s x_s)  + D·x_t
+    out     : gated RMSNorm(y, z) -> out_proj
+
+Decode is the O(1) recurrence: S ← a·S + dt·(B ⊗ x);  y = C·S + D·x, with a
+rolling width-(conv-1) convolution state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from .base import param
+
+CHUNK = 128  # SSD chunk length (the sequence-tier partition)
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    return d_in, H, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+
+
+def init_ssm(cfg, keys) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N, G = dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "in_proj": param(next(keys), (d, 2 * d_in + 2 * G * N + H),
+                         ("d_model", "d_inner")),
+        "conv_w": param(next(keys), (cfg.ssm_conv, conv_ch), ("conv", "d_inner"),
+                        scale=cfg.ssm_conv ** -0.5),
+        "conv_b": param(next(keys), (conv_ch,), ("d_inner",), init="zeros"),
+        "A_log": param(next(keys), (H,), ("heads",), init="zeros"),
+        "dt_bias": param(next(keys), (H,), ("heads",), init="zeros"),
+        "D": param(next(keys), (H,), ("heads",), init="ones"),
+        "norm": param(next(keys), (d_in,), ("d_inner",), init="ones"),
+        "out_proj": param(next(keys), (d_in, d), ("d_inner", "d_model")),
+    }
+
+
+def _split(cfg, zxbcdt):
+    d_in, H, P, N, G = dims(cfg)
+    z, x, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + G * N, 2 * d_in + 2 * G * N], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _gated_norm(cfg, w, y, z):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = (yf * yf).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + cfg.rms_eps)
+            * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def _conv_full(x, w, b):
+    """Causal depthwise conv over (B, S, C) with width-K taps (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(xh, dt, a_log, Bc, Cc, chunk: int = CHUNK,
+                init_state=None):
+    """Chunked SSD: lax.scan over sequence chunks.
+
+    xh (B,S,H,P) dt (B,S,H) positive; a = exp(-dt·exp(a_log));
+    Bc/Cc (B,S,G,N).  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    One chunk at a time (carry = the (H,P,N) state): the quadratic
+    intra-chunk tile (L, L) exists only per step — the two-level
+    partitioning discipline; a vectorized-over-chunks version materializes
+    (B, nc, H, L, L) score/decay tensors (observed: 61 GiB/device on
+    mamba2 train_4k).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    rep = H // G
+    nc = S // chunk
+    f32 = jnp.float32
+
+    loga = (-dt.astype(f32) * jnp.exp(a_log.astype(f32))[None, None, :])
+    xw = xh.astype(f32) * dt[..., None].astype(f32)      # dt-weighted input
+
+    def chunked(t):
+        # (B, S, ...) -> (nc, B, L, ...): chunk axis leads for scan
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (chunked(loga), chunked(xw), chunked(Bc.astype(f32)),
+          chunked(Cc.astype(f32)))
+    s0 = (jnp.zeros((Bsz, H, P, N), f32) if init_state is None
+          else init_state.astype(f32))
+    ids = jnp.arange(chunk)
+    causal = (ids[:, None] >= ids[None, :])[None, None]  # (1,1,L,L)
+
+    def chunk_step(state, inp):
+        loga_c, x_c, B_c, C_c = inp                      # (B,L,·)
+        cum = jnp.cumsum(loga_c, axis=1)                 # (B,L,H)
+        Bh = jnp.repeat(B_c, rep, axis=2)                # (B,L,H,N)
+        Ch = jnp.repeat(C_c, rep, axis=2)
+
+        # Intra-chunk (the VMEM-tile term): y_t += C_t·B_s decay(s→t) x_s
+        scores = jnp.einsum("blhn,bmhn->bhlm", Ch, Bh)   # (B,H,L,L)
+        cum_t = cum.transpose(0, 2, 1)                   # (B,H,L)
+        decay = jnp.exp(cum_t[:, :, :, None] - cum_t[:, :, None, :])
+        att = jnp.where(causal, scores * decay, 0.0)
+        y = jnp.einsum("bhlm,bmhp->blhp", att, x_c)
+
+        # Inter-chunk: y_t += C_t decay(start→t) S_prev
+        dec_in = jnp.exp(cum)                            # (B,L,H)
+        y = y + jnp.einsum("blhn,bhpn,blh->blhp", Ch, state, dec_in)
+
+        # State update (the sink-combine step)
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)          # (B,L,H)
+        new_state = state * jnp.exp(cum[:, -1])[:, :, None, None] \
+            + jnp.einsum("blhn,blhp,blh->bhpn", Bh, x_c, dec_end)
+        return new_state, y
+
+    final, ys = jax.lax.scan(chunk_step, s0, xs)         # ys: (nc,B,L,H,P)
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def apply_ssm(cfg, p, x, *, init_state=None):
+    """Full-sequence Mamba-2 mixer. x: (B, S, d) -> (B, S, d)."""
+    d_in, H, P, N, G = dims(cfg)
+    B_, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xr, Bc, Cc, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)
+    conv_out = _conv_full(conv_in, p["conv_w"].astype(x.dtype),
+                          p["conv_b"].astype(x.dtype))
+    xr, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))
+
+    pad = (-S) % CHUNK
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xr_, dtp_, Bc_, Cc_ = padf(xr), padf(dtp), padf(Bc), padf(Cc)
+    else:
+        xr_, dtp_, Bc_, Cc_ = xr, dtp, Bc, Cc
+
+    xh = xr_.reshape(B_, -1, H, P)
+    y, state = ssd_chunked(xh, dtp_, p["A_log"], xh_bc(Bc_, G, N), xh_bc(Cc_, G, N),
+                           init_state=init_state)
+    y = y[:, :S]
+    y = y + xr.reshape(B_, S, H, P) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = hint(y, "batch|seq|act_inner")
+    y = _gated_norm(cfg, p["norm"], y, z)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), state
+
+
+def xh_bc(t, G, N):
+    return t.reshape(t.shape[0], t.shape[1], G, N)
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state recurrence)
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    d_in, H, P, N, G = dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+SSM_CACHE_AXES = {"conv": "batch|seq|d_inner", "state": "batch|heads|head_dim|state"}
+
+
+def apply_ssm_decode(cfg, p, x, cache):
+    """One-token step. x: (B, 1, d)."""
+    d_in, H, P, N, G = dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xr, Bc, Cc, dt = _split(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)      # (B,1,C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = (window * w[None]).sum(axis=1, keepdims=True) \
+        + p["conv_b"].astype(x.dtype)[None, None]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xr, Bc, Cc = jnp.split(conv_out, [d_in, d_in + G * N], axis=-1)
+
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))      # (B,H)
+    a = jnp.exp(-dtp * jnp.exp(p["A_log"].astype(jnp.float32)))    # (B,H)
+    xh = xr.reshape(B_, H, P).astype(jnp.float32) * dtp[..., None]
+    Bh = jnp.repeat(Bc.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cc.reshape(B_, G, N), H // G, axis=1).astype(jnp.float32)
+
+    state = cache["state"] * a[:, :, None, None] \
+        + jnp.einsum("bhp,bhn->bhpn", xh, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xr.reshape(B_, H, P).astype(jnp.float32) \
+        * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = _gated_norm(cfg, p["norm"], y, z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, {"conv": window[:, 1:], "state": state}

@@ -1,0 +1,128 @@
+"""Attention-free Mamba-2 LM (mamba2-1.3b family).
+
+Pre-norm residual SSM blocks, scan-over-layers.  Decode is O(1) per token
+(rolling conv window + (H, P, N) state), which is why this family runs the
+``long_500k`` cell that full-attention architectures must skip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import hint
+from . import layers as L
+from . import ssm as S
+from ..distributed import sharding as shd
+from .base import axes_of, keygen, stack_layers
+
+
+def _blk_axes(cfg):
+    return axes_of(lambda k: _block_init(cfg, keygen(k)), jax.random.PRNGKey(0))
+
+
+def _block_init(cfg, keys):
+    return {"ln": L.init_norm(cfg, next(keys)), "ssm": S.init_ssm(cfg, keys)}
+
+
+def init(cfg, key):
+    keys = keygen(key)
+    return {
+        "embed": L.init_embed(cfg, keys),
+        "layers": stack_layers([_block_init(cfg, keys)
+                                for _ in range(cfg.n_layers)]),
+        "final_norm": L.init_norm(cfg, next(keys)),
+    }
+
+
+def _block(cfg, blk, x):
+    y, state = S.apply_ssm(cfg, blk["ssm"], L.apply_norm(cfg, blk["ln"], x))
+    return x + y, state
+
+
+def forward(cfg, params, batch):
+    tokens = batch["tokens"]
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    x = hint(x, "batch|seq|embed")
+
+    body = functools.partial(_block, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    blk_axes = _blk_axes(cfg)
+    carry_ax = "batch|act_seq|embed" if cfg.seq_parallel else "batch|seq|embed"
+
+    def step(x, blk):
+        x, _ = body(shd.hint_tree(blk, blk_axes), x)
+        return shd.hint(x, carry_ax), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    h = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    loss = L.xent_loss(logits, batch["labels"])
+    return loss, {"loss": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    del max_len  # state is O(1); max_len irrelevant (the long_500k win)
+    one = S.init_ssm_cache(cfg, batch, jnp.dtype(cfg.dtype))
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((cfg.n_layers,) + x.shape, x.dtype), one)
+    return {"ssm": stacked, "len": jnp.zeros((), jnp.int32)}
+
+
+def cache_axes(cfg):
+    return {"ssm": {k: "layers|" + v for k, v in S.SSM_CACHE_AXES.items()},
+            "len": ""}
+
+
+def prefill(cfg, params, tokens, max_len: int):
+    """Full-sequence scan; emits per-layer final SSM state + conv tail."""
+    del max_len
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    B, Sq = tokens.shape
+
+    blk_axes = _blk_axes(cfg)
+
+    def step(x, blk):
+        blk = shd.hint_tree(blk, blk_axes)
+        h = L.apply_norm(cfg, blk["ln"], x)
+        y, state = S.apply_ssm(cfg, blk["ssm"], h)
+        # rolling conv window: last (K-1) pre-activation conv inputs
+        d_in, H, P, N, G = S.dims(cfg)
+        zxbcdt = jnp.einsum("bsd,de->bse", h,
+                            blk["ssm"]["in_proj"].astype(h.dtype))
+        _, xr, Bc, Cc, _ = S._split(cfg, zxbcdt)
+        conv_in = jnp.concatenate([xr, Bc, Cc], axis=-1)
+        window = conv_in[:, -(cfg.ssm_conv - 1):]
+        return x + y, {"conv": window.astype(jnp.dtype(cfg.dtype)),
+                       "state": state}
+
+    x, cache = jax.lax.scan(step, x, params["layers"])
+    h = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"ssm": cache, "len": jnp.asarray(Sq, jnp.int32)}, logits
+
+
+def decode(cfg, params, cache, token):
+    x = L.embed_tokens(cfg, params["embed"], token)
+
+    blk_axes = _blk_axes(cfg)
+
+    def step(x, inp):
+        blk, c = inp
+        blk = shd.hint_tree(blk, blk_axes)
+        y, c = S.apply_ssm_decode(cfg, blk["ssm"],
+                                  L.apply_norm(cfg, blk["ln"], x), c)
+        return x + y, c
+
+    x, new_cache = jax.lax.scan(step, x, (params["layers"], cache["ssm"]))
+    h = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.logits_out(cfg, params["embed"], h)
+    return {"ssm": new_cache, "len": cache["len"] + 1}, logits

@@ -1,0 +1,161 @@
+"""Model zoo: one facade over every architecture family (--arch <id>).
+
+``build(cfg)`` dispatches on cfg.family and returns a `Model` whose five
+functions share a uniform signature, so the launcher/dryrun treat all ten
+assigned architectures identically:
+
+    forward(params, batch)                  -> (loss, metrics)
+    prefill(params, batch, max_len)         -> (cache, logits)
+    decode(params, cache, token)            -> (cache, logits)
+    init_cache(batch, max_len)              -> cache pytree
+    input_specs(shape)                      -> abstract batch pytrees + axes
+
+`input_specs` is the dry-run contract: ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation).  Modality
+frontends are stubs per the assignment — paligemma's 256 image patches and
+whisper's 1500 audio frames arrive as precomputed embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec
+from . import encdec, hybrid, ssm_lm, transformer
+from .base import eval_shape_boxed
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable          # key -> boxed param tree
+    forward: Callable       # (params, batch) -> (loss, metrics)
+    prefill: Callable       # (params, batch, max_len) -> (cache, logits)
+    decode: Callable        # (params, cache, token) -> (cache, logits)
+    init_cache: Callable    # (batch, max_len) -> cache
+    cache_axes: Callable    # () -> axes pytree matching init_cache
+
+    def abstract_params(self):
+        """(ShapeDtypeStruct tree, axes tree) without allocating."""
+        return eval_shape_boxed(self.init, jax.random.PRNGKey(0))
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_len))
+
+
+def _cast_init(init_fn, dtype):
+    def init(key):
+        boxed = init_fn(key)
+        return jax.tree_util.tree_map(
+            lambda b: type(b)(b.value.astype(dtype)
+                              if b.value.dtype == jnp.float32 else b.value,
+                              b.axes),
+            boxed, is_leaf=lambda x: hasattr(x, "axes"))
+    return init
+
+
+def _finish(model: Model) -> Model:
+    import dataclasses as dc
+    if model.cfg.param_dtype != "float32":
+        return dc.replace(model, init=_cast_init(model.init,
+                                                 jnp.dtype(model.cfg.param_dtype)))
+    return model
+
+
+def build(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+
+        def fwd(params, batch):
+            return mod.forward(cfg, params, batch)
+
+        def pre(params, batch, max_len):
+            return mod.prefill(cfg, params, batch["tokens"], max_len,
+                               patch_embs=batch.get("patch_embs"))
+
+        def dec(params, cache, token):
+            return mod.decode(cfg, params, cache, token)
+
+        return _finish(Model(cfg, lambda k: mod.init(cfg, k), fwd, pre, dec,
+                             lambda b, m: mod.init_cache(cfg, b, m),
+                             lambda: mod.cache_axes(cfg)))
+    if fam == "ssm":
+        mod = ssm_lm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    def fwd(params, batch):
+        return mod.forward(cfg, params, batch)
+
+    if fam == "encdec":
+        def pre(params, batch, max_len):
+            return mod.prefill(cfg, params, batch["frames"], batch["tokens"],
+                               max_len)
+    else:
+        def pre(params, batch, max_len):
+            return mod.prefill(cfg, params, batch["tokens"], max_len)
+
+    def dec(params, cache, token):
+        return mod.decode(cfg, params, cache, token)
+
+    return _finish(Model(cfg, lambda k: mod.init(cfg, k), fwd, pre, dec,
+                         lambda b, m: mod.init_cache(cfg, b, m),
+                         lambda: mod.cache_axes(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct batch + logical-axes batch for one (arch × shape).
+
+    Returns dict(kind=..., batch=specs, axes=..., token=..., max_len=...).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    def tok(shape_):
+        return jax.ShapeDtypeStruct(shape_, i32)
+
+    batch, axes = {}, {}
+    if cfg.family == "vlm":
+        text = S - cfg.n_patches
+        batch["tokens"] = tok((B, text))
+        batch["labels"] = tok((B, text))
+        batch["patch_embs"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), act)
+        axes = {"tokens": "batch|seq", "labels": "batch|seq",
+                "patch_embs": "batch|seq|embed"}
+    elif cfg.family == "encdec":
+        batch["tokens"] = tok((B, S))
+        batch["labels"] = tok((B, S))
+        batch["frames"] = jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model), act)
+        axes = {"tokens": "batch|seq", "labels": "batch|seq",
+                "frames": "batch|seq|embed"}
+    else:
+        batch["tokens"] = tok((B, S))
+        batch["labels"] = tok((B, S))
+        axes = {"tokens": "batch|seq", "labels": "batch|seq"}
+
+    if shape.kind == "train":
+        return {"kind": "train", "batch": batch, "axes": axes}
+    if shape.kind == "prefill":
+        del batch["labels"]
+        del axes["labels"]
+        return {"kind": "prefill", "batch": batch, "axes": axes,
+                "max_len": S}
+    # decode: one new token against a seq_len cache
+    token = tok((B, 1))
+    return {"kind": "decode", "batch": {"token": token},
+            "axes": {"token": "batch|seq"}, "max_len": S,
+            "cache_batch": B}

@@ -1,0 +1,5 @@
+"""Optimizers + schedules + gradient compression."""
+from . import adam, schedule, compression
+from .adam import AdamConfig
+
+__all__ = ["adam", "schedule", "compression", "AdamConfig"]

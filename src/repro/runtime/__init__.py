@@ -1,0 +1,4 @@
+"""Fault-tolerance runtime."""
+from . import fault_tolerance
+from .fault_tolerance import (PreemptionGuard, StragglerMonitor, StepTimer,
+                              replan_mesh, rescale_grad_accum)

@@ -1,0 +1,90 @@
+"""The paper's five algorithms vs numpy/scipy-free references,
+in-memory AND out-of-core (the central claim: identical results, one code
+path, two tiers)."""
+import numpy as np
+import pytest
+
+from repro.core import fm
+from repro.algorithms import correlation, gmm, kmeans, summary, svd_tall
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def X_np():
+    return (RNG.normal(size=(3000, 10)) * 2 + 1).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    centers = RNG.normal(size=(5, 8)) * 12
+    pts = np.concatenate([c + RNG.normal(size=(400, 8)) for c in centers])
+    return pts.astype(np.float32), centers
+
+
+@pytest.mark.parametrize("host", [False, True])
+def test_summary(X_np, host):
+    s = summary(fm.conv_R2FM(X_np, host=host))
+    np.testing.assert_allclose(s.mean, X_np.mean(0), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(s.var, X_np.var(0, ddof=1), rtol=1e-2)
+    np.testing.assert_allclose(s.col_min, X_np.min(0))
+    np.testing.assert_allclose(s.col_max, X_np.max(0))
+    np.testing.assert_allclose(s.l1, np.abs(X_np).sum(0), rtol=1e-3)
+    np.testing.assert_array_equal(s.nnz, (X_np != 0).sum(0))
+
+
+@pytest.mark.parametrize("host", [False, True])
+@pytest.mark.parametrize("two_pass", [False, True])
+def test_correlation(X_np, host, two_pass):
+    c = correlation(fm.conv_R2FM(X_np, host=host), two_pass=two_pass)
+    np.testing.assert_allclose(c, np.corrcoef(X_np.T), rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("host", [False, True])
+def test_svd(X_np, host):
+    r = svd_tall(fm.conv_R2FM(X_np, host=host), k=6, compute_u=True)
+    ref = np.linalg.svd(X_np.astype(np.float64), compute_uv=False)[:6]
+    np.testing.assert_allclose(r.s, ref, rtol=1e-3)
+    U = fm.as_np(r.U)
+    np.testing.assert_allclose(U.T @ U, np.eye(6), atol=2e-2)
+    # factorization consistency: X·V == U·diag(s) on the computed subspace
+    np.testing.assert_allclose(X_np @ r.V, U @ np.diag(r.s),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("host", [False, True])
+def test_kmeans_recovers_blobs(blobs, host):
+    pts, centers = blobs
+    res = kmeans(fm.conv_R2FM(pts, host=host), k=5, max_iter=30, seed=1)
+    d = np.linalg.norm(res.centers[:, None] - centers[None], axis=-1)
+    assert (d.min(1) < 1.0).all()
+    assert res.wss < pts.shape[0] * 8 * 2.0  # ~within-cluster variance
+
+
+@pytest.mark.parametrize("host", [False, True])
+def test_gmm_loglik_monotone(blobs, host):
+    pts, _ = blobs
+    res = gmm(fm.conv_R2FM(pts, host=host), k=5, max_iter=6, seed=1)
+    t = np.array(res.loglik_trace)
+    assert (np.diff(t) > -1e-2 * np.abs(t[:-1])).all()
+    np.testing.assert_allclose(res.weights.sum(), 1.0, rtol=1e-6)
+
+
+def test_kmeans_matches_pallas_kernel(blobs):
+    """The fused GenOps iteration and the Pallas kernel agree."""
+    import jax.numpy as jnp
+    from repro.algorithms.kmeans import kmeans_iteration, _init_centers
+    from repro.kernels import ops
+    pts, _ = blobs
+    X = fm.conv_R2FM(pts)
+    C = _init_centers(X, 5, 0)
+    newC, counts, wss, _ = kmeans_iteration(X, C)
+    lab_k, sums_k, cnt_k, wss_k = ops.kmeans_assign(jnp.asarray(pts),
+                                                    jnp.asarray(C),
+                                                    block_rows=256)
+    np.testing.assert_allclose(np.asarray(cnt_k), counts)
+    np.testing.assert_allclose(float(wss_k[0]), wss, rtol=1e-3)
+    kernC = np.where(np.asarray(cnt_k)[:, None] > 0,
+                     np.asarray(sums_k) / np.maximum(np.asarray(cnt_k)[:, None], 1),
+                     C)
+    np.testing.assert_allclose(kernC, newC, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,210 @@
+"""GenOps vs numpy oracle: every operator × execution mode × storage tier."""
+import numpy as np
+import pytest
+
+from repro.core import fm
+
+RNG = np.random.default_rng(7)
+
+
+def data(n=257, p=9, dtype=np.float32):
+    return (RNG.normal(size=(n, p)) * 3).astype(dtype)
+
+
+MODES = [("whole", False), ("stream", False), ("whole", True)]
+
+
+def make(host):
+    X = data()
+    return X, fm.conv_R2FM(X, host=host)
+
+
+@pytest.mark.parametrize("mode,host", MODES)
+class TestElementwise:
+    def test_sapply_chain(self, mode, host):
+        Xn, X = make(host)
+        out = fm.sqrt(fm.abs_(X * 2.0 + 1.0))
+        (m,) = fm.materialize(out, mode=mode)
+        np.testing.assert_allclose(fm.as_np(m), np.sqrt(np.abs(Xn * 2 + 1)),
+                                   rtol=1e-5)
+
+    def test_mapply_matrix(self, mode, host):
+        Xn, X = make(host)
+        Y = fm.conv_R2FM(Xn * 0.5 + 1, host=host)
+        (m,) = fm.materialize(X * Y - Y, mode=mode)
+        np.testing.assert_allclose(fm.as_np(m), Xn * (Xn * 0.5 + 1) - (Xn * 0.5 + 1),
+                                   rtol=1e-4)
+
+    def test_scalar_forms(self, mode, host):
+        """bVUDF2 (vec∘scalar) and bVUDF3 (scalar∘vec)."""
+        Xn, X = make(host)
+        (a, b) = fm.materialize(X - 3.0, 3.0 - X, mode=mode)
+        np.testing.assert_allclose(fm.as_np(a), Xn - 3.0, rtol=1e-6)
+        np.testing.assert_allclose(fm.as_np(b), 3.0 - Xn, rtol=1e-6)
+
+    def test_mapply_row_col(self, mode, host):
+        Xn, X = make(host)
+        row = RNG.normal(size=Xn.shape[1]).astype(np.float32)
+        col = RNG.normal(size=Xn.shape[0]).astype(np.float32)
+        (a, b) = fm.materialize(fm.mapply_row(X, row, "mul"),
+                                fm.mapply_col(X, col, "add"), mode=mode)
+        np.testing.assert_allclose(fm.as_np(a), Xn * row[None], rtol=1e-5)
+        np.testing.assert_allclose(fm.as_np(b), Xn + col[:, None], rtol=1e-5)
+
+    def test_pmin_pmax_ifelse0(self, mode, host):
+        Xn, X = make(host)
+        Y = fm.conv_R2FM(-Xn, host=host)
+        (mn, mx) = fm.materialize(fm.pmin(X, Y), fm.pmax(X, Y), mode=mode)
+        np.testing.assert_allclose(fm.as_np(mn), np.minimum(Xn, -Xn))
+        np.testing.assert_allclose(fm.as_np(mx), np.maximum(Xn, -Xn))
+
+    def test_cbind(self, mode, host):
+        Xn, X = make(host)
+        (m,) = fm.materialize(fm.cbind(X, X * 2.0), mode=mode)
+        np.testing.assert_allclose(fm.as_np(m),
+                                   np.concatenate([Xn, Xn * 2], 1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode,host", MODES)
+class TestAggregation:
+    def test_agg_full(self, mode, host):
+        Xn, X = make(host)
+        (s,) = fm.materialize(fm.sum_(X), mode=mode)
+        np.testing.assert_allclose(fm.as_scalar(s), Xn.sum(), rtol=1e-4)
+
+    def test_agg_col_variants(self, mode, host):
+        Xn, X = make(host)
+        outs = fm.materialize(fm.colSums(X), fm.colMins(X), fm.colMaxs(X),
+                              fm.agg_col(X, "count_nonzero"), mode=mode)
+        np.testing.assert_allclose(fm.as_np(outs[0]).ravel(), Xn.sum(0), rtol=1e-4)
+        np.testing.assert_allclose(fm.as_np(outs[1]).ravel(), Xn.min(0))
+        np.testing.assert_allclose(fm.as_np(outs[2]).ravel(), Xn.max(0))
+        np.testing.assert_array_equal(fm.as_np(outs[3]).ravel(),
+                                      (Xn != 0).sum(0))
+
+    def test_agg_row(self, mode, host):
+        Xn, X = make(host)
+        (s,) = fm.materialize(fm.rowSums(X), mode=mode)
+        np.testing.assert_allclose(fm.as_np(s).ravel(), Xn.sum(1), rtol=1e-4)
+
+    def test_which_min_row_absolute_indices(self, mode, host):
+        """Indexed reductions must stay absolute across partitions."""
+        Xn, X = make(host)
+        (w,) = fm.materialize(fm.which_min_row(X), mode=mode)
+        np.testing.assert_array_equal(fm.as_np(w).ravel(), Xn.argmin(1))
+
+    def test_logsumexp_streaming(self, mode, host):
+        Xn, X = make(host)
+        (l,) = fm.materialize(fm.agg_row(X, "logsumexp"), mode=mode)
+        ref = np.log(np.exp(Xn - Xn.max(1, keepdims=True)).sum(1)) + Xn.max(1)
+        np.testing.assert_allclose(fm.as_np(l).ravel(), ref, rtol=1e-5)
+
+    def test_any_all(self, mode, host):
+        Xn, X = make(host)
+        (a, b) = fm.materialize(fm.any_(X > 10.0), fm.all_(X > -100.0), mode=mode)
+        assert bool(fm.as_scalar(a)) == bool((Xn > 10).any())
+        assert bool(fm.as_scalar(b)) == bool((Xn > -100).all())
+
+
+@pytest.mark.parametrize("mode,host", MODES)
+class TestInnerProdGroupBy:
+    def test_crossprod(self, mode, host):
+        Xn, X = make(host)
+        (g,) = fm.materialize(fm.crossprod(X), mode=mode)
+        np.testing.assert_allclose(fm.as_np(g), Xn.T @ Xn, rtol=1e-3)
+
+    def test_crossprod_xy(self, mode, host):
+        Xn, X = make(host)
+        Yn = data()
+        Y = fm.conv_R2FM(Yn, host=host)
+        (g,) = fm.materialize(fm.crossprod(X, Y), mode=mode)
+        np.testing.assert_allclose(fm.as_np(g), Xn.T @ Yn, rtol=1e-3)
+
+    def test_tall_matmul(self, mode, host):
+        Xn, X = make(host)
+        W = RNG.normal(size=(Xn.shape[1], 4)).astype(np.float32)
+        (m,) = fm.materialize(X @ W, mode=mode)
+        np.testing.assert_allclose(fm.as_np(m), Xn @ W, rtol=1e-3)
+
+    def test_semiring_distance(self, mode, host):
+        Xn, X = make(host)
+        C = RNG.normal(size=(Xn.shape[1], 5)).astype(np.float32)
+        d = fm.inner_prod(X, C, "squared_diff", "sum")
+        (m,) = fm.materialize(d, mode=mode)
+        ref = ((Xn[:, :, None] - C[None]) ** 2).sum(1)
+        np.testing.assert_allclose(fm.as_np(m), ref, rtol=1e-3)
+
+    def test_groupby_row(self, mode, host):
+        Xn, X = make(host)
+        lab = RNG.integers(0, 6, Xn.shape[0])
+        (g, c) = fm.materialize(
+            fm.rowsum(X, fm.conv_R2FM(lab.astype(np.int32), host=host), 6),
+            fm.table_(fm.conv_R2FM(lab.astype(np.int32), host=host), 6),
+            mode=mode)
+        ref = np.zeros((6, Xn.shape[1]), np.float64)
+        np.add.at(ref, lab, Xn.astype(np.float64))
+        np.testing.assert_allclose(fm.as_np(g), ref, rtol=1e-3)
+        np.testing.assert_array_equal(fm.as_np(c).ravel(),
+                                      np.bincount(lab, minlength=6))
+
+    def test_groupby_col(self, mode, host):
+        Xn, X = make(host)
+        lab = RNG.integers(0, 3, Xn.shape[1]).astype(np.int32)
+        (g,) = fm.materialize(fm.groupby_col(X, lab, "sum", 3), mode=mode)
+        ref = np.zeros((Xn.shape[0], 3), np.float32)
+        for j, k in enumerate(lab):
+            ref[:, k] += Xn[:, j]
+        np.testing.assert_allclose(fm.as_np(g), ref, rtol=1e-4)
+
+
+class TestDtypesAndLazy:
+    def test_lazy_cast_promotion(self):
+        Xi = RNG.integers(0, 100, (64, 3)).astype(np.int32)
+        X = fm.conv_R2FM(Xi)
+        (m,) = fm.materialize(X * 1.5)
+        assert fm.as_np(m).dtype == np.float32
+        np.testing.assert_allclose(fm.as_np(m), Xi * 1.5)
+
+    def test_division_promotes(self):
+        Xi = RNG.integers(1, 100, (64, 3)).astype(np.int32)
+        X = fm.conv_R2FM(Xi)
+        (m,) = fm.materialize(X / 2)
+        np.testing.assert_allclose(fm.as_np(m), Xi / 2)
+
+    def test_comparison_dtype(self):
+        Xn, X = make(False)
+        (m,) = fm.materialize(X > 0.0)
+        assert fm.as_np(m).dtype == np.bool_
+
+    def test_missing_values_fig5(self):
+        """The paper's Fig. 5 workload: std-dev with NA exclusion."""
+        Xn = data()
+        Xn[Xn > 2.0] = np.nan
+        X = fm.conv_R2FM(Xn)
+        na = fm.is_na(X)
+        x0 = fm.ifelse0(X, na)
+        x2 = fm.ifelse0(X ** 2, na)
+        (sx, sx2, cnt) = fm.materialize(
+            fm.sum_(x0), fm.sum_(x2),
+            fm.agg(fm.sapply(na, "not"), "sum"))
+        n = float(fm.as_scalar(cnt))
+        mean = fm.as_scalar(sx) / n
+        var = fm.as_scalar(sx2) / n - mean ** 2
+        ref = np.nanstd(Xn)
+        np.testing.assert_allclose(np.sqrt(var), ref, rtol=1e-3)
+
+    def test_materialize_flag_reuse(self):
+        Xn, X = make(False)
+        Y = X * 2.0
+        fm.set_mate_level(Y, "device")
+        (s,) = fm.materialize(fm.colSums(Y))
+        # Y is now cut: reusing it must not recompute from X
+        assert Y.m.node.cached_store is not None
+        (g,) = fm.materialize(fm.crossprod(Y))
+        np.testing.assert_allclose(fm.as_np(g), (Xn * 2).T @ (Xn * 2), rtol=1e-3)
+
+    def test_transpose_roundtrip(self):
+        Xn, X = make(False)
+        T = X.t()
+        assert T.shape == (Xn.shape[1], Xn.shape[0])
+        np.testing.assert_allclose(fm.as_np(T), Xn.T)

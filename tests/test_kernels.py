@@ -1,0 +1,91 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py jnp oracles (interpret=True).
+
+Every Pallas kernel must match its pure-jnp oracle across row counts that
+exercise padding/masking edges, block sizes, and dtypes.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+ROWS = [8, 100, 256, 1000]
+COLS = [1, 7, 12]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", ROWS)
+@pytest.mark.parametrize("p", COLS)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_summary(n, p, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, p)), dtype)
+    outs = ops.fused_summary(x, block_rows=64)
+    refs = ref.fused_summary_ref(x)
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(r, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", ROWS)
+@pytest.mark.parametrize("p", [4, 12])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gram(n, p, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, p)), dtype)
+    g = ops.gram(x, block_rows=128)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref.gram_ref(x)),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("n", [64, 513])
+def test_xty(n):
+    x = jnp.asarray(RNG.normal(size=(n, 6)), jnp.float32)
+    y = jnp.asarray(RNG.normal(size=(n, 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.xty(x, y, block_rows=128)),
+                               np.asarray(ref.xty_ref(x, y)), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", ROWS)
+@pytest.mark.parametrize("k", [2, 5])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_kmeans_assign(n, k, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, 8)), dtype)
+    c = jnp.asarray(RNG.normal(size=(k, 8)), dtype)
+    lab, sums, cnts, wss = ops.kmeans_assign(x, c, block_rows=64)
+    rl, rs, rc, rw = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(lab), np.asarray(rl))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rs), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(cnts), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(wss), np.asarray(rw),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("s", [32, 100, 160])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_flash_attention(s, causal, dtype):
+    bh, d = 2, 16
+    q = jnp.asarray(RNG.normal(size=(bh, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(bh, s, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(bh, s, d)), dtype)
+    o = ops.flash_attention(q, k, v, causal=causal, bq=32, bk=48)
+    r = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+def test_flash_attention_cross_lengths():
+    q = jnp.asarray(RNG.normal(size=(1, 40, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 100, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 100, 16)), jnp.float32)
+    o = ops.flash_attention(q, k, v, causal=False, bq=16, bk=32)
+    r = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on the engine's invariants.
+
+The invariants FlashMatrix's design depends on:
+  * fusion never changes results (fused == eager),
+  * execution mode never changes results (whole == stream == ooc),
+  * partition size never changes results (indexed reductions stay absolute),
+  * groupby.row(sum) ≡ one-hot matmul,
+  * dtype promotion is monotone on the lattice.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dtypes, fm
+from repro.core.matrix import io_partition_rows
+
+SHAPE = st.tuples(st.integers(5, 200), st.integers(1, 8))
+
+
+def arrays(draw, shape, dtype=np.float32):
+    n, p = shape
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 31)))
+    return (rng.normal(size=(n, p)) * 2).astype(dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), SHAPE)
+def test_fused_equals_eager(data, shape):
+    Xn = arrays(data.draw, shape)
+    X = fm.conv_R2FM(Xn)
+    expr = fm.colSums(fm.abs_(X * 2.0 - 1.0))
+    (a,) = fm.materialize(expr, fuse=True)
+    expr2 = fm.colSums(fm.abs_(fm.conv_R2FM(Xn) * 2.0 - 1.0))
+    (b,) = fm.materialize(expr2, fuse=False)
+    np.testing.assert_allclose(fm.as_np(a), fm.as_np(b), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), SHAPE)
+def test_mode_invariance(data, shape):
+    Xn = arrays(data.draw, shape)
+    ref = None
+    for mode, host in (("whole", False), ("stream", False), ("auto", True)):
+        X = fm.conv_R2FM(Xn, host=host)
+        (g, w) = fm.materialize(fm.crossprod(X), fm.which_min_row(X), mode=mode)
+        if ref is None:
+            ref = (fm.as_np(g), fm.as_np(w))
+        else:
+            np.testing.assert_allclose(fm.as_np(g), ref[0], rtol=1e-3, atol=1e-3)
+            np.testing.assert_array_equal(fm.as_np(w), ref[1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data(), st.integers(5, 300), st.integers(1, 6), st.integers(1, 5))
+def test_groupby_equals_onehot_matmul(data, n, p, k):
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    Xn = rng.normal(size=(n, p)).astype(np.float32)
+    lab = rng.integers(0, k, n).astype(np.int32)
+    X = fm.conv_R2FM(Xn)
+    (g,) = fm.materialize(fm.rowsum(X, fm.conv_R2FM(lab), k))
+    onehot = np.eye(k, dtype=np.float64)[lab]
+    np.testing.assert_allclose(fm.as_np(g), onehot.T @ Xn, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(["bool", "int8", "int32", "bfloat16", "float32"]),
+       st.sampled_from(["bool", "int8", "int32", "bfloat16", "float32"]))
+def test_promotion_monotone(a, b):
+    p = dtypes.promote(a, b)
+    assert dtypes.rank(p) >= dtypes.rank(a)
+    assert dtypes.rank(p) >= dtypes.rank(b)
+    assert dtypes.promote(a, b) == dtypes.promote(b, a)
+    assert dtypes.promote(a, a) == dtypes.canon(a)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.sampled_from(["float32", "int8", "bfloat16"]),
+       st.integers(1, 8))
+def test_partition_rows_power_of_two(ncol, dtype, n_live):
+    rows = io_partition_rows(ncol, dtype, n_live)
+    assert rows >= 8
+    assert rows & (rows - 1) == 0  # paper: always 2^i
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_indexed_reduction_partition_invariance(data):
+    """which.min over the long dim must be absolute regardless of partition
+    count (offset threading)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    Xn = rng.normal(size=(500, 3)).astype(np.float32)
+    X = fm.conv_R2FM(Xn, host=True)   # ooc: many partitions
+    (w,) = fm.materialize(fm.agg_col(X, "which.min"))
+    np.testing.assert_array_equal(fm.as_np(w).ravel(), Xn.argmin(0))
