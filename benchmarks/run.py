@@ -18,8 +18,9 @@ def main(argv=None) -> None:
                     help="skip fig8 device-scaling subprocesses")
     args = ap.parse_args(argv)
 
-    from . import kernel_bench, paper_figures, scaling
-    fns = list(paper_figures.ALL) + list(kernel_bench.ALL)
+    from . import kernel_bench, paper_figures, scaling, storage_bench
+    fns = (list(paper_figures.ALL) + list(kernel_bench.ALL)
+           + list(storage_bench.ALL))
     if not args.skip_slow:
         fns += list(scaling.ALL)
     if args.only:

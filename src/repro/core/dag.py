@@ -84,8 +84,9 @@ class Node:
         self.parents = list(parents)
         self.name = name or f"{self.kind}#{self.id}"
         # Materialization control (paper: fm.set.mate.level / write-through
-        # cache).  None = stay virtual; 'device' | 'host' = persist the
-        # materialized partitions during the next DAG execution.
+        # cache).  None = stay virtual; 'device' | 'host' | 'disk' = persist
+        # the materialized partitions during the next DAG execution ('disk'
+        # streams them into an on-disk matrix — write-through spill).
         self.save: Optional[str] = None
 
     # Row-local nodes implement block_eval; sinks implement the

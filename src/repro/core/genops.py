@@ -284,10 +284,11 @@ def inner_prod(a: MatLike, b, f1="mul", f2="sum") -> FMMatrix:
 
 def set_mate_level(mat: FMMatrix, level: str) -> FMMatrix:
     """fm.set.mate.level: ask the next materialization to persist this
-    virtual matrix ('device' = HBM tier, 'host' = SSD tier)."""
+    virtual matrix ('device' = HBM tier, 'host' = RAM tier, 'disk' = spill
+    the output write-through into an on-disk matrix, repro/storage/)."""
     if not mat.is_virtual:
         return mat
-    if level not in ("device", "host"):
+    if level not in ("device", "host", "disk"):
         raise ValueError(f"bad materialization level {level!r}")
     mat.node.save = level
     return mat

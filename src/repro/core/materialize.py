@@ -10,12 +10,15 @@ Executes a fused `fusion.Plan` in one of three modes:
   `psum`-style combines materializing the sinks).
 * ``stream`` — explicit I/O-level partition loop on device: the 2-level-
   partitioning demonstrator and the building block of out-of-core.
-* ``ooc``    — sources live on the host tier (numpy = the SSD stand-in);
-  partitions are staged host→device asynchronously (JAX dispatch overlaps
-  the copy of partition i+1 with the compute of partition i, the paper's
-  I/O/compute overlap), the fused step consumes them with buffer donation
-  (the paper's memory-chunk recycling), and long-dimension outputs are
-  written back to preallocated host buffers (write-through).
+* ``ooc``    — sources live on a slow tier: host RAM (numpy) or the real
+  disk tier (`storage.MmapStore` over the on-disk matrix format).
+  Partitions are staged by a double-buffered background prefetcher
+  (`storage.PartitionPrefetcher`): the disk read + host→device copy of
+  partition i+1 overlaps the compute of partition i (the paper's
+  I/O/compute overlap).  The fused step consumes staged blocks with buffer
+  donation (the paper's memory-chunk recycling), and long-dimension
+  outputs write through to preallocated host buffers or — with
+  ``save='disk'`` — stream into a preallocated on-disk matrix (spill).
 
 Sinks accumulate partition partials and merge with the aggregation VUDF's
 ``combine`` — identical in all three modes, which is exactly why the paper's
@@ -25,6 +28,7 @@ intensity is high enough.
 from __future__ import annotations
 
 import warnings
+from collections import OrderedDict
 from typing import Optional, Sequence
 
 import jax
@@ -52,8 +56,10 @@ except ImportError:  # pragma: no cover
 # Compiled-plan cache: structurally identical DAG cuts (k-means iteration
 # N+1, GMM E-steps, any steady-state loop) reuse one jitted executable —
 # the compile-once/stream-many behavior a production engine needs.  Keyed
-# by Plan.signature(); sources and Small operands rebind per call.
-_PLANS: dict = {}
+# by Plan.signature() plus the mesh's structural identity (axis names +
+# shape; NOT id(mesh), which a garbage collector can reissue to a
+# different mesh), with LRU eviction at PLAN_CACHE_LIMIT.
+_PLANS: "OrderedDict" = OrderedDict()
 PLAN_CACHE_LIMIT = 256
 
 
@@ -61,15 +67,25 @@ def clear_plan_cache():
     _PLANS.clear()
 
 
+def _mesh_key(mesh):
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(np.shape(mesh.devices)))
+
+
 def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
-                mesh=None, donate: bool = True,
-                reuse_plans: bool = True) -> list[FMMatrix]:
+                mesh=None, donate: bool = True, reuse_plans: bool = True,
+                prefetch: Optional[bool] = None) -> list[FMMatrix]:
     """fm.materialize: force computation of virtual matrices.
 
     Returns one *physical* FMMatrix per argument (physical args pass
     through).  Multiple arguments materialize together in one fused pass
     over the data (paper: "FlashMatrix can materialize any virtual matrix in
     a DAG and can materialize multiple virtual matrices together").
+
+    ``prefetch`` controls the async partition pipeline in streaming modes:
+    None = the storage config default (on for slow-tier sources), False =
+    synchronous staging (the ablation the storage benchmark measures).
     """
     virtuals = [m for m in mats if m.is_virtual]
     if not virtuals:
@@ -82,19 +98,49 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     plan = Plan(virtuals)
     exec_plan = plan
     if reuse_plans:
-        sig = (plan.signature(), id(mesh))
+        # partition_rows is part of the key: it reads IO_PARTITION_BYTES at
+        # plan build, so a fm.set_conf(io_partition_bytes=...) change must
+        # miss the cache rather than stream with the old partition size.
+        sig = (plan.signature(), plan.partition_rows, _mesh_key(mesh))
         cached = _PLANS.get(sig)
         if cached is not None:
+            _PLANS.move_to_end(sig)  # LRU touch
             exec_plan = cached
-        elif len(_PLANS) < PLAN_CACHE_LIMIT:
+        else:
             _PLANS[sig] = plan
-    _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
-             sources=[m for _, m in plan.sources],
-             smalls=plan.small_values())
+            while len(_PLANS) > PLAN_CACHE_LIMIT:
+                _PLANS.popitem(last=False)  # evict least-recently-used
+
+    # A cached plan's nodes belong to the FIRST caller's live DAG: its
+    # persisted results (set_mate_level cut points used by that DAG's other
+    # virtual matrices) must survive us borrowing the plan.  Snapshot them,
+    # scrub for execution (stale cached_store would flip _is_source() on a
+    # retrace — e.g. the same signature executing whole after ooc — and
+    # silently skip those nodes; _store_results also zeroed save flags, and
+    # the signature guarantees the new plan's flags match construction
+    # time), execute, copy the results onto the new plan's nodes, then
+    # restore the template exactly as we found it.
+    snapshot = None
     if exec_plan is not plan:
-        for old_n, new_n in zip(exec_plan.result_nodes(), plan.result_nodes()):
-            new_n.cached_store = old_n.cached_store
-            new_n.save = None
+        snapshot = [(n, n.cached_store, n.save)
+                    for n in exec_plan.result_nodes()]
+        for (n, _, _), new_n in zip(snapshot, plan.result_nodes()):
+            n.cached_store = None
+            n.save = new_n.save
+    try:
+        _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
+                 sources=[m for _, m in plan.sources],
+                 smalls=plan.small_values(), prefetch=prefetch)
+        if exec_plan is not plan:
+            for old_n, new_n in zip(exec_plan.result_nodes(),
+                                    plan.result_nodes()):
+                new_n.cached_store = old_n.cached_store
+                new_n.save = None
+    finally:
+        if snapshot is not None:
+            for n, cs, sv in snapshot:
+                n.cached_store = cs
+                n.save = sv
     return [_result_of(m) for m in mats]
 
 
@@ -114,7 +160,7 @@ def _result_of(m: FMMatrix) -> FMMatrix:
 
 
 def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
-             sources=None, smalls=None):
+             sources=None, smalls=None, prefetch: Optional[bool] = None):
     if sources is None:
         sources = [m for _, m in plan.sources]
     if smalls is None:
@@ -123,9 +169,11 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     if mode == "whole":
         _execute_whole(plan, mesh, sources, smalls)
     elif mode == "stream":
-        _execute_stream(plan, sources, smalls, to_host=False, donate=donate)
+        _execute_stream(plan, sources, smalls, to_host=False, donate=donate,
+                        prefetch=prefetch)
     elif mode == "ooc":
-        _execute_stream(plan, sources, smalls, to_host=True, donate=donate)
+        _execute_stream(plan, sources, smalls, to_host=True, donate=donate,
+                        prefetch=prefetch)
     else:
         raise ValueError(f"unknown mode {mode!r}")
     return plan
@@ -164,62 +212,112 @@ def _long_spec(mesh):
     return P(data_axes, None)
 
 
+def _inline_partitions(src_pairs, rows: int, n: int, donate: bool):
+    """Synchronous partition staging (prefetch-off ablation): same staging
+    rules as the prefetch thread (storage.stage_block), but the disk read
+    happens on the compute thread; only device_put dispatch overlaps."""
+    from ..storage.prefetch import stage_block
+    start = 0
+    while start < n:
+        stop = min(start + rows, n)
+        yield start, stop, {
+            nid: stage_block(mat, start, stop, donate=donate)
+            for nid, mat in src_pairs}
+        start = stop
+
+
 def _execute_stream(plan: Plan, sources, smalls, *, to_host: bool,
-                    donate: bool = True):
+                    donate: bool = True, prefetch: Optional[bool] = None):
+    from .. import storage  # deferred: storage depends on core.matrix
+
     rows = plan.partition_rows
     n = plan.long_dim
     accs = plan.init_accs()
     out_parts: dict[int, list] = {x.id: [] for x in plan.row_local_roots + plan.saves}
     host_bufs: dict[int, np.ndarray] = {}
+    disk_stores: dict[int, "storage.MmapStore"] = {}
 
     for x in plan.row_local_roots + plan.saves:
         target = x.save or ("host" if to_host else "device")
-        if target == "host":
+        if target == "disk":
+            # Write-through spill: the long-dimension output streams into a
+            # preallocated on-disk matrix, partition by partition — it never
+            # exists whole in RAM.
+            disk_stores[x.id] = storage.create_matrix(
+                storage.spill_path(x.name), (x.nrow, x.ncol),
+                dtypes.np_equiv(x.dtype))
+        elif target == "host":
             host_bufs[x.id] = np.empty((x.nrow, x.ncol), dtypes.np_equiv(x.dtype))
 
+    src_pairs = [(node.id, mat) for (node, _), mat in zip(plan.sources, sources)]
+    if prefetch is None:
+        # Default on for slow-tier sources; a single-partition stream has
+        # nothing to overlap, so skip the thread.
+        prefetch = (storage.get_conf("prefetch") and n > rows
+                    and any(mat.on_host for mat in sources))
+    if prefetch:
+        parts = storage.PartitionPrefetcher(
+            src_pairs, rows, n, donate=donate,
+            depth=storage.get_conf("prefetch_depth"))
+    else:
+        parts = _inline_partitions(src_pairs, rows, n, donate)
+
     step = plan._jit_step_donated if donate else plan._jit_step
-    start = 0
-    while start < n:
-        stop = min(start + rows, n)
-        blocks = {}
-        for (node, _), mat in zip(plan.sources, sources):
-            blk = mat.block(start, stop)
-            if isinstance(blk, np.ndarray):
-                # host→device staging; device_put is async, so the copy of
-                # this partition overlaps the compute of the previous one.
-                blk = jax.device_put(np.ascontiguousarray(blk))
-            elif donate:
-                blk = jnp.copy(blk)  # donation must not consume the source
-            blocks[node.id] = blk
-        accs, outputs = step(accs, blocks, smalls,
-                             jnp.asarray(start, jnp.int32))
-        for nid, val in outputs.items():
-            if nid in host_bufs:
-                host_bufs[nid][start:stop] = np.asarray(val)
-            else:
-                out_parts[nid].append(val)
-        start = stop
+    try:
+        for start, stop, blocks in parts:
+            accs, outputs = step(accs, blocks, smalls,
+                                 jnp.asarray(start, jnp.int32))
+            for nid, val in outputs.items():
+                if nid in disk_stores:
+                    disk_stores[nid].write_rows(start, np.asarray(val))
+                elif nid in host_bufs:
+                    host_bufs[nid][start:stop] = np.asarray(val)
+                else:
+                    out_parts[nid].append(val)
+    finally:
+        if hasattr(parts, "close"):
+            parts.close()
 
     finals = plan.finalize_accs(accs)
     for nid, buf in host_bufs.items():
         out_parts[nid] = [buf]
-    _store_results(plan, finals, out_parts, to_host=to_host)
+    for st in disk_stores.values():
+        st.flush()
+    _store_results(plan, finals, out_parts, to_host=to_host,
+                   disk_stores=disk_stores)
 
 
-def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool):
+def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,
+                   disk_stores=None):
     for node in plan.sinks:
         arr = sink_finals[node.id]
         node.cached_store = FMMatrix(
             node.shape, node.dtype, store=DenseStore(arr), name=node.name)
     for node in plan.row_local_roots + plan.saves:
+        if disk_stores and node.id in disk_stores:
+            node.cached_store = FMMatrix(
+                node.shape, node.dtype, store=disk_stores[node.id],
+                name=node.name)
+            node.save = None
+            continue
         parts = out_parts[node.id]
-        if len(parts) == 1 and isinstance(parts[0], np.ndarray):
-            data = parts[0]
-        elif len(parts) == 1:
+        if len(parts) == 1:
             data = parts[0]
         else:
             data = jnp.concatenate(parts, axis=0)
-        target = node.save or ("host" if to_host and not node.save else None)
+        target = node.save or ("host" if to_host else None)
+        if target == "disk":
+            # whole-mode save='disk': spill the materialized output in one go.
+            from .. import storage
+            store = storage.create_matrix(
+                storage.spill_path(node.name), node.shape,
+                dtypes.np_equiv(node.dtype))
+            store.write_rows(0, np.asarray(data))
+            store.flush()
+            node.cached_store = FMMatrix(
+                node.shape, node.dtype, store=store, name=node.name)
+            node.save = None
+            continue
         if target == "host" and not isinstance(data, np.ndarray):
             data = np.asarray(data)
         node.cached_store = FMMatrix(

@@ -12,13 +12,16 @@ transposed TAS.  Two-level horizontal partitioning:
 * **CPU-level partitions** — fits L1/L2 so a fused operation chain stays in
   cache.  Our analog: the Pallas BlockSpec VMEM tile (multiples of (8,128)).
 
-``FMMatrix`` is an immutable handle.  Physical storage lives in ``DenseStore``
-(jax array on device, or numpy array on host = the out-of-core tier).
+``FMMatrix`` is an immutable handle.  Physical storage lives behind the
+``MatrixStore`` protocol: ``DenseStore`` (jax array on device, or numpy array
+in host RAM) or ``storage.MmapStore`` (the real SSD tier — an on-disk matrix
+file served through ``np.memmap``, see repro/storage/).
 Virtual matrices point at a DAG node (core/dag.py) and are materialized by
 core/materialize.py.
 """
 from __future__ import annotations
 
+import abc
 import dataclasses
 from typing import Any, Optional
 
@@ -49,9 +52,15 @@ ROW_ALIGN = 8
 
 
 def io_partition_rows(ncol: int, dtype, n_live: int = 1,
-                      budget_bytes: int = IO_PARTITION_BYTES) -> int:
+                      budget_bytes: Optional[int] = None) -> int:
     """Rows per I/O-level partition: the largest power of two such that
-    ``n_live`` matrices of that many rows fit the partition budget."""
+    ``n_live`` matrices of that many rows fit the partition budget.
+
+    ``budget_bytes=None`` reads the module-level ``IO_PARTITION_BYTES`` at
+    call time, so ``fm.set_conf(io_partition_bytes=...)`` takes effect on
+    every subsequently built plan."""
+    if budget_bytes is None:
+        budget_bytes = IO_PARTITION_BYTES
     ncol = max(1, ncol)
     row_bytes = ncol * dtypes.nbytes(dtype) * max(1, n_live)
     rows = max(ROW_ALIGN, budget_bytes // max(1, row_bytes))
@@ -75,17 +84,57 @@ def cpu_partition_rows(ncol: int, dtype,
 # Storage
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class DenseStore:
-    """Physical backing of a materialized matrix.
+class MatrixStore(abc.ABC):
+    """Store protocol: the physical backing of a materialized matrix.
 
-    ``data`` is a jax Array (device tier) or numpy ndarray (host tier — the
-    SSD analog that the streaming executor pages in chunk-by-chunk).
-    The logical shape of the matrix is always (nrow, ncol); ``layout``
-    records the physical majority (paper supports both and avoids copies on
-    transpose by flipping the tag).  For a 'col'-layout matrix ``data`` holds
-    the transposed buffer, i.e. shape (ncol, nrow).
+    ``FMMatrix`` is backend-agnostic — any tier (device HBM, host RAM, SSD)
+    plugs in by implementing this interface.  The logical shape of the
+    matrix is always (nrow, ncol); ``layout`` records the physical majority
+    (paper supports both and avoids copies on transpose by flipping the
+    tag).  A 'col'-layout store holds the transposed buffer, shape
+    (ncol, nrow).
+
+    Implementations: ``DenseStore`` (device / host-RAM tiers, below) and
+    ``repro.storage.MmapStore`` (the disk tier).
     """
+
+    layout: str = "row"  # 'row' | 'col'
+
+    @property
+    @abc.abstractmethod
+    def on_host(self) -> bool:
+        """True when partitions must be staged host→device by the executor
+        (the out-of-core tiers: host RAM and disk)."""
+
+    @property
+    def on_disk(self) -> bool:
+        return False
+
+    @abc.abstractmethod
+    def logical(self):
+        """Return data in logical (nrow, ncol) orientation (may transpose)."""
+
+    @abc.abstractmethod
+    def block(self, start: int, stop: int):
+        """Logical rows [start, stop) — the I/O-level partition read.
+        Must touch only that partition's bytes, never the whole buffer."""
+
+    @abc.abstractmethod
+    def nbytes(self) -> int:
+        """Physical size of the backing buffer in bytes."""
+
+    @abc.abstractmethod
+    def transposed(self) -> "MatrixStore":
+        """A store over the same buffer with the layout tag flipped
+        (the zero-copy transpose)."""
+
+
+@dataclasses.dataclass
+class DenseStore(MatrixStore):
+    """In-memory backing: ``data`` is a jax Array (device tier) or numpy
+    ndarray (host-RAM tier — paged in chunk-by-chunk by the streaming
+    executor).  For a 'col'-layout matrix ``data`` holds the transposed
+    buffer, i.e. shape (ncol, nrow)."""
 
     data: Any
     layout: str = "row"  # 'row' | 'col'
@@ -95,21 +144,33 @@ class DenseStore:
         return isinstance(self.data, np.ndarray)
 
     def logical(self):
-        """Return data in logical (nrow, ncol) orientation (may transpose)."""
         return self.data.T if self.layout == "col" else self.data
+
+    def block(self, start: int, stop: int):
+        # Slice the stored buffer and transpose only the block — a col-layout
+        # store must never transpose the entire buffer per partition read.
+        if self.layout == "col":
+            return self.data[:, start:stop].T
+        return self.data[start:stop]
+
+    def nbytes(self) -> int:
+        return int(self.data.nbytes)
+
+    def transposed(self) -> "DenseStore":
+        return DenseStore(self.data, "col" if self.layout == "row" else "row")
 
 
 class FMMatrix:
     """Immutable matrix handle (paper: all FlashMatrix matrices are immutable).
 
     Exactly one of ``store`` / ``node`` is set:
-      * store: DenseStore        — physical matrix
+      * store: MatrixStore       — physical matrix (any tier)
       * node:  dag.Node          — virtual matrix (lazy computation)
     """
 
     __slots__ = ("shape", "dtype", "store", "node", "name", "_transposed_of")
 
-    def __init__(self, shape, dtype, *, store: Optional[DenseStore] = None,
+    def __init__(self, shape, dtype, *, store: Optional[MatrixStore] = None,
                  node=None, name: str = ""):
         assert (store is None) != (node is None), "exactly one backing"
         self.shape = (int(shape[0]), int(shape[1]))
@@ -149,6 +210,10 @@ class FMMatrix:
     def on_host(self) -> bool:
         return self.store is not None and self.store.on_host
 
+    @property
+    def on_disk(self) -> bool:
+        return self.store is not None and self.store.on_disk
+
     def nbytes(self) -> int:
         return self.nrow * self.ncol * dtypes.nbytes(self.dtype)
 
@@ -174,9 +239,8 @@ class FMMatrix:
         'we avoid data copy for common matrix operations such as matrix
         transpose')."""
         if self.store is not None:
-            flipped = "col" if self.store.layout == "row" else "row"
             out = FMMatrix((self.ncol, self.nrow), self.dtype,
-                           store=DenseStore(self.store.data, flipped),
+                           store=self.store.transposed(),
                            name=f"t({self.name})" if self.name else "")
         else:
             # Virtual transpose handle: consumers (inner_prod) peel it off.
@@ -205,11 +269,18 @@ class FMMatrix:
     def block(self, start: int, stop: int):
         """Slice ROWS [start, stop) of a *physical* matrix in logical
         orientation — the I/O-level partition read (rows are the streaming
-        axis throughout the engine; see dag.long_dim_of)."""
-        return self.logical_data()[start:stop]
+        axis throughout the engine; see dag.long_dim_of).  Delegates to the
+        store so only the partition's bytes are touched."""
+        if self.store is None:
+            raise ValueError(
+                f"matrix {self.name or '<anon>'} is virtual; call "
+                "fm.materialize() first")
+        return self.store.block(start, stop)
 
     def __repr__(self):
-        kind = "virtual" if self.is_virtual else ("host" if self.on_host else "device")
+        kind = ("virtual" if self.is_virtual
+                else "disk" if self.on_disk
+                else "host" if self.on_host else "device")
         return (f"FMMatrix({self.nrow}x{self.ncol}, {self.dtype.name}, {kind}"
                 + (f", name={self.name!r}" if self.name else "") + ")")
 
@@ -266,9 +337,17 @@ def conv_FM2R(mat: FMMatrix) -> np.ndarray:
     return np.asarray(mat.logical_data())
 
 
-def conv_store(mat: FMMatrix, where: str) -> FMMatrix:
+def conv_store(mat: FMMatrix, where: str, *, name: str = "") -> FMMatrix:
     """fm.conv.store: move a physical matrix between tiers
-    ('device' = HBM analog, 'host' = SSD analog)."""
+    ('device' = HBM analog, 'host' = RAM tier, 'disk' = the real SSD tier —
+    FlashR's ``fm.conv.store(in.mem=FALSE)``).
+
+    ``where='disk'`` writes the matrix into the configured data directory
+    (``storage.registry.set_conf``) under ``name`` (or the matrix's own
+    name) and returns a handle backed by ``MmapStore``."""
+    if where == "disk":
+        from ..storage import registry as _registry  # lazy: avoid cycle
+        return _registry.save_dense_matrix(mat, name or mat.name or None)
     data = mat.logical_data()
     if where == "host":
         return FMMatrix.from_array(np.asarray(data), name=mat.name)

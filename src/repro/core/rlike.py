@@ -333,8 +333,38 @@ def conv_FM2R(x) -> np.ndarray:
     return matrix_mod.conv_FM2R(_fm(x))
 
 
-def conv_store(x, where: str) -> FM:
-    return FM(matrix_mod.conv_store(_fm(x), where))
+def conv_store(x, where: str, *, name: str = "") -> FM:
+    """fm.conv.store: 'device' | 'host' | 'disk' (FlashR in.mem=FALSE)."""
+    return FM(matrix_mod.conv_store(_fm(x), where, name=name))
+
+
+# -- the disk tier / EM-matrix registry (repro/storage/) ----------------------
+def set_conf(**kw) -> dict:
+    """fm.set.conf: data_dir / prefetch / prefetch_depth /
+    io_partition_bytes."""
+    from ..storage import registry
+    return registry.set_conf(**kw)
+
+
+def get_dense_matrix(name: str) -> FM:
+    """fm.get.dense.matrix: reopen a named on-disk matrix (mmap-backed)."""
+    from ..storage import registry
+    return FM(registry.get_dense_matrix(name))
+
+
+def load_dense_matrix(src, name: str, **kw) -> FM:
+    """fm.load.dense.matrix: ingest CSV/binary/npy/array → on-disk matrix."""
+    from ..storage import registry
+    return FM(registry.load_dense_matrix(src, name, **kw))
+
+
+def save_dense_matrix(x, name: Optional[str] = None, **kw) -> FM:
+    """Write a physical matrix into the registry; returns the disk handle."""
+    from ..storage import registry
+    m = _fm(x)
+    if getattr(m, "is_virtual", False):
+        (m,) = mat_mod.materialize(m)
+    return FM(registry.save_dense_matrix(m, name, **kw))
 
 
 def conv_layout(x, layout: str) -> FM:

@@ -1,3 +1,4 @@
 """Data pipeline substrate."""
 from . import pipeline
-from .pipeline import DataConfig, DataIterator, TokenSource
+from .pipeline import (DataConfig, DataIterator, TokenSource, ingest_binary,
+                       ingest_csv)

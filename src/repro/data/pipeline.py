@@ -15,6 +15,11 @@ checkpoint/checkpoint.py).
 For this repo's experiments the corpus is synthetic (seeded ziphian token
 draws); `TokenSource` also reads real `.npy`/raw-u16 token shards if paths
 are provided.
+
+The matrix side of the data path is `ingest_csv` / `ingest_binary`: the
+FlashR `fm.load.dense.matrix` workflow (Criteo-style — a multi-GB text or
+raw-binary table streamed into the on-disk matrix format of
+repro/storage/format.py in bounded chunks, never fully resident in RAM).
 """
 from __future__ import annotations
 
@@ -75,6 +80,96 @@ class TokenSource:
                     break
                 acc += arr.shape[0]
         return out
+
+
+# ---------------------------------------------------------------------------
+# Matrix ingestion: external files → the on-disk matrix format
+# ---------------------------------------------------------------------------
+
+def ingest_csv(src, dest, *, dtype=np.float32, delimiter: str = ",",
+               skip_header: int = 0, chunk_rows: int = 65536,
+               layout: str = "row") -> "storage_format.MatrixHeader":
+    """Stream a numeric CSV/TSV into an on-disk matrix (.fmat).
+
+    One pass, bounded memory: ``chunk_rows`` lines are parsed and appended
+    at a time, and the header (which records the final row count) is
+    rewritten in place at the end — so Criteo-scale tables ingest without a
+    row-counting pre-pass or a full in-RAM copy.
+    """
+    from ..storage import format as storage_format
+
+    if layout == "col":
+        raise NotImplementedError(
+            "streaming CSV ingest writes row layout; use fm.conv_layout "
+            "afterwards for col-major")
+    dest = pathlib.Path(dest)
+    dest.parent.mkdir(parents=True, exist_ok=True)
+    dtype = np.dtype(dtype)
+    ncol = None
+    nrow = 0
+    with open(src, "r") as fin, open(dest, "wb") as fout:
+        for _ in range(skip_header):
+            fin.readline()
+        # Reserve the header block; final shape is known only at EOF.
+        fout.write(b"\x00" * storage_format.HEADER_BYTES)
+        while True:
+            lines = []
+            for line in fin:
+                if line.strip():
+                    lines.append(line)
+                if len(lines) >= chunk_rows:
+                    break
+            if not lines:
+                break
+            chunk = np.loadtxt(lines, dtype=dtype, delimiter=delimiter,
+                               ndmin=2)
+            if ncol is None:
+                ncol = chunk.shape[1]
+            elif chunk.shape[1] != ncol:
+                raise ValueError(
+                    f"{src}: ragged CSV — row {nrow} has {chunk.shape[1]} "
+                    f"columns, expected {ncol}")
+            fout.write(np.ascontiguousarray(chunk))
+            nrow += chunk.shape[0]
+    if ncol is None:
+        raise ValueError(f"{src}: no data rows")
+    header = storage_format.MatrixHeader(nrow=nrow, ncol=ncol, dtype=dtype,
+                                         layout="row")
+    storage_format.write_header(dest, header)
+    return header
+
+
+def ingest_binary(src, dest, *, ncol: int, dtype=np.float32,
+                  chunk_rows: int = 65536,
+                  layout: str = "row") -> "storage_format.MatrixHeader":
+    """Stream a raw row-major binary file (the FlashR
+    ``fm.load.dense.matrix`` input: Criteo's preprocessed binaries) into an
+    on-disk matrix.  Row count is derived from the file size."""
+    from ..storage import format as storage_format
+
+    src = pathlib.Path(src)
+    dtype = np.dtype(dtype)
+    row_bytes = ncol * dtype.itemsize
+    total = src.stat().st_size
+    if total % row_bytes:
+        raise ValueError(
+            f"{src}: size {total} is not a whole number of {ncol}-column "
+            f"{dtype.name} rows")
+    nrow = total // row_bytes
+    if layout != "row":
+        raise NotImplementedError("binary ingest writes row layout")
+    header = storage_format.MatrixHeader(nrow=nrow, ncol=ncol, dtype=dtype,
+                                         layout="row")
+    dest = pathlib.Path(dest)
+    dest.parent.mkdir(parents=True, exist_ok=True)
+    with open(src, "rb") as fin, open(dest, "wb") as fout:
+        fout.write(header.to_bytes())
+        while True:
+            buf = fin.read(chunk_rows * row_bytes)
+            if not buf:
+                break
+            fout.write(buf)
+    return header
 
 
 class DataIterator:

@@ -1,0 +1,30 @@
+"""Disk-backed storage tier (the paper's SSD layer).
+
+Three pieces, mirroring FlashR's external-memory stack:
+
+  * `format`   — the on-disk single-file matrix format (.fmat): magic +
+    shape/dtype/layout header, page-aligned row-contiguous body.
+    `save_matrix` / `open_matrix` / `create_matrix`.
+  * `store`    — `MmapStore`, the `core.matrix.MatrixStore` backend that
+    serves I/O-level partitions straight from the file via np.memmap.
+  * `prefetch` — `PartitionPrefetcher`, the double-buffered background
+    stager that overlaps disk reads + host→device copies with compute.
+  * `registry` — `fm.set.conf`-style data dir + named-matrix surface
+    (`load_dense_matrix` / `get_dense_matrix` / `save_dense_matrix`).
+"""
+from . import format, prefetch, registry, store
+from .format import (MatrixHeader, create_matrix, open_matrix, read_header,
+                     save_matrix)
+from .prefetch import PartitionPrefetcher, PrefetchError, stage_block
+from .registry import (get_conf, get_dense_matrix, list_matrices,
+                       load_dense_matrix, save_dense_matrix, set_conf,
+                       spill_path)
+from .store import MmapStore
+
+__all__ = [
+    "format", "prefetch", "registry", "store",
+    "MatrixHeader", "MmapStore", "PartitionPrefetcher", "PrefetchError",
+    "create_matrix", "open_matrix", "read_header", "save_matrix",
+    "get_conf", "get_dense_matrix", "list_matrices", "load_dense_matrix",
+    "save_dense_matrix", "set_conf", "spill_path", "stage_block",
+]

@@ -1,0 +1,143 @@
+"""Double-buffered async partition prefetcher (paper §III-F I/O overlap).
+
+A background thread walks the long dimension, reads each source's
+I/O-level partition from its store (a disk read for ``MmapStore``, a RAM
+slice for host ``DenseStore``), makes it contiguous and ``device_put``s
+it, then parks the staged partition in a bounded queue.  The consumer
+(``materialize._execute_stream``) pops partition *i* and computes while
+the thread is already staging partition *i+1* — disk I/O, host→device DMA
+and compute overlap, which is the mechanism that lets the paper's
+out-of-core execution track in-memory performance.
+
+``depth`` bounds how far ahead the thread runs (default 2 = classic
+double buffering), which also bounds staged memory to
+``depth × partition_bytes`` — the memory-chunk discipline.
+
+Staged device blocks are exclusively owned by the pipeline, so the
+consumer may donate them to the fused step (buffer recycling) without a
+defensive copy.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_DONE = object()
+
+
+def stage_block(mat, start: int, stop: int, *, donate: bool = True,
+                to_device: bool = True):
+    """Read one I/O-level partition from ``mat`` and stage it for the fused
+    step — the single definition of the staging rules, shared by the
+    prefetch thread and the synchronous (prefetch-off) path:
+
+    * slow-tier (numpy/memmap) blocks are made contiguous (the actual disk
+      read for a memmap slice) and ``device_put`` — dispatch is async, so
+      the H2D copy overlaps downstream compute;
+    * device-resident blocks are defensively copied when the consumer will
+      donate them (donation must not consume the source buffer).
+    """
+    blk = mat.block(start, stop)
+    if isinstance(blk, np.ndarray):
+        blk = np.ascontiguousarray(blk)
+        if to_device:
+            blk = jax.device_put(blk)
+    elif donate:
+        blk = jnp.copy(blk)
+    return blk
+
+
+class PrefetchError(RuntimeError):
+    """A staging-thread failure, re-raised on the consumer side."""
+
+
+class PartitionPrefetcher:
+    """Iterate ``(start, stop, {node_id: staged_block})`` over partitions.
+
+    sources: ``[(node_id, matrix)]`` where each matrix exposes
+    ``block(start, stop)`` (FMMatrix or a bare MatrixStore).
+    """
+
+    def __init__(self, sources: Sequence[Tuple[int, object]],
+                 partition_rows: int, long_dim: int, *, depth: int = 2,
+                 donate: bool = True, stage_to_device: bool = True):
+        if depth < 1:
+            raise ValueError("prefetch depth must be >= 1")
+        self.sources = list(sources)
+        self.partition_rows = int(partition_rows)
+        self.long_dim = int(long_dim)
+        self.donate = donate
+        self.stage_to_device = stage_to_device
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._worker, name="fm-prefetch", daemon=True)
+        self._thread.start()
+
+    # -- staging thread --------------------------------------------------------
+    def _worker(self):
+        try:
+            start = 0
+            while start < self.long_dim and not self._stop.is_set():
+                stop = min(start + self.partition_rows, self.long_dim)
+                blocks = {
+                    nid: stage_block(mat, start, stop, donate=self.donate,
+                                     to_device=self.stage_to_device)
+                    for nid, mat in self.sources}
+                if not self._put((start, stop, blocks)):
+                    return
+                start = stop
+            self._put(_DONE)
+        except Exception as exc:  # noqa: BLE001 - forwarded to consumer
+            self._put(exc)
+
+    def _put(self, item) -> bool:
+        """Bounded put that aborts promptly when close() is requested."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    # -- consumer side ---------------------------------------------------------
+    def __iter__(self) -> Iterator[tuple]:
+        while True:
+            item = self._q.get()
+            if item is _DONE:
+                self._closed = True
+                return
+            if isinstance(item, Exception):
+                self._closed = True
+                raise PrefetchError(f"prefetch thread failed: {item!r}") from item
+            yield item
+
+    def close(self):
+        """Stop the staging thread and drop queued partitions.  Idempotent;
+        safe to call mid-stream (early consumer exit) or after exhaustion."""
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=10.0)
+        self._closed = True
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

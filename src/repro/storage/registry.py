@@ -1,0 +1,171 @@
+"""Named-matrix registry + engine configuration (FlashR's EM workflow).
+
+FlashR keeps external-memory matrices as named files under a configured
+data directory (``fm.set.conf``); users reopen them by name with
+``fm.get.dense.matrix`` and create them with ``fm.load.dense.matrix`` /
+``fm.conv.store(in.mem=FALSE)``.  This module is that surface:
+
+    fm.set_conf(data_dir="/ssd/fm")            # once per deployment
+    X = fm.load_dense_matrix("criteo.csv", name="criteo")   # ingest → disk
+    X = fm.get_dense_matrix("criteo")          # O(1) reopen, mmap-backed
+    Y = fm.conv_store(Z, "disk")               # spill a result by name
+
+The registry is directory-backed (one ``<name>.fmat`` per matrix), so it
+is shared between processes and survives restarts; nothing is cached in
+RAM beyond the mmap handles.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import pathlib
+import re
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from ..core import matrix as matrix_mod
+from ..core.matrix import FMMatrix
+from . import format as fmt
+
+_CONF = {
+    "data_dir": None,       # pathlib.Path once configured / first used
+    "prefetch": True,       # default for ooc execution (overridable per call)
+    "prefetch_depth": 2,    # bounded-queue depth (2 = double buffering)
+}
+
+_spill_ids = itertools.count()
+
+
+def set_conf(*, data_dir: Optional[str] = None,
+             prefetch: Optional[bool] = None,
+             prefetch_depth: Optional[int] = None,
+             io_partition_bytes: Optional[int] = None) -> dict:
+    """fm.set.conf: configure the storage tier.  Returns the live config.
+
+    ``io_partition_bytes`` adjusts the I/O-level partition budget engine-
+    wide (core.matrix.IO_PARTITION_BYTES) — the knob the out-of-core
+    examples/benchmarks turn to make matrices many partitions long.
+    """
+    if data_dir is not None:
+        p = pathlib.Path(data_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        _CONF["data_dir"] = p
+    if prefetch is not None:
+        _CONF["prefetch"] = bool(prefetch)
+    if prefetch_depth is not None:
+        if int(prefetch_depth) < 1:
+            raise ValueError("prefetch_depth must be >= 1")
+        _CONF["prefetch_depth"] = int(prefetch_depth)
+    if io_partition_bytes is not None:
+        matrix_mod.IO_PARTITION_BYTES = int(io_partition_bytes)
+    return dict(_CONF, io_partition_bytes=matrix_mod.IO_PARTITION_BYTES)
+
+
+def get_conf(key: str):
+    if key == "io_partition_bytes":
+        return matrix_mod.IO_PARTITION_BYTES
+    return _CONF[key]
+
+
+def data_dir() -> pathlib.Path:
+    """The configured data directory (lazily a fresh temp dir, so the disk
+    tier works out of the box in tests and examples)."""
+    if _CONF["data_dir"] is None:
+        _CONF["data_dir"] = pathlib.Path(
+            tempfile.mkdtemp(prefix="fm-data-"))
+    return _CONF["data_dir"]
+
+
+def _sanitize(name: str) -> str:
+    clean = re.sub(r"[^A-Za-z0-9._-]+", "_", name).strip("._")
+    return clean or "matrix"
+
+
+def matrix_path(name: str) -> pathlib.Path:
+    return data_dir() / f"{_sanitize(name)}.fmat"
+
+
+def spill_path(name: str = "") -> pathlib.Path:
+    """A fresh file for a write-through spill output (save='disk')."""
+    return (data_dir() / "spill"
+            / f"{_sanitize(name or 'out')}-{next(_spill_ids)}.fmat")
+
+
+# ---------------------------------------------------------------------------
+# The EM-matrix surface
+# ---------------------------------------------------------------------------
+
+def save_dense_matrix(mat, name: Optional[str] = None, *,
+                      layout: str = "row") -> FMMatrix:
+    """Write a matrix (FMMatrix / numpy / jax array) to the data dir under
+    ``name`` and return the disk-backed handle."""
+    if name is None:
+        name = getattr(mat, "name", "") or f"anon-{next(_spill_ids)}"
+    path = matrix_path(name)
+    fmt.save_matrix(path, mat, layout=layout)
+    return get_dense_matrix(name)
+
+
+def get_dense_matrix(name: str) -> FMMatrix:
+    """fm.get.dense.matrix: reopen a named on-disk matrix (O(1), mmap)."""
+    path = matrix_path(name)
+    if not path.exists():
+        raise KeyError(
+            f"no on-disk matrix {name!r} under {os.fspath(data_dir())} "
+            f"(have: {sorted(list_matrices())})")
+    store = fmt.open_matrix(path)
+    return FMMatrix(store.header.shape, store.header.dtype,
+                    store=store, name=name)
+
+
+def load_dense_matrix(src, name: str, *, ncol: Optional[int] = None,
+                      dtype=None, delimiter: str = ",",
+                      layout: str = "row", **ingest_kw) -> FMMatrix:
+    """fm.load.dense.matrix: ingest an external file into the registry.
+
+    ``src`` may be a ``.csv``/``.txt`` text file, a ``.npy`` array, a raw
+    binary file (requires ``ncol``), or an in-memory array.  Text/binary
+    ingest streams through data.pipeline in bounded chunks (Criteo-scale
+    files never fully materialize in RAM).
+
+    ``dtype=None`` keeps the source's own dtype for arrays and ``.npy``
+    files, and defaults to float32 for text/raw-binary (whose element type
+    is not self-describing).
+    """
+    from ..data import pipeline as _pipeline  # lazy: data imports are heavy
+    dest = matrix_path(name)
+    if isinstance(src, (str, os.PathLike)):
+        suffix = pathlib.Path(src).suffix.lower()
+        if suffix in (".csv", ".txt", ".tsv"):
+            _pipeline.ingest_csv(src, dest, dtype=dtype or np.float32,
+                                 delimiter=delimiter, layout=layout,
+                                 **ingest_kw)
+        elif suffix == ".npy":
+            arr = np.load(src, mmap_mode="r")
+            if dtype is not None:
+                arr = np.asarray(arr, dtype=dtype)
+            fmt.save_matrix(dest, arr, layout=layout)
+        else:
+            if ncol is None:
+                raise ValueError("raw binary ingest requires ncol=")
+            _pipeline.ingest_binary(src, dest, ncol=ncol,
+                                    dtype=dtype or np.float32,
+                                    layout=layout, **ingest_kw)
+    else:
+        arr = np.asarray(src) if dtype is None else np.asarray(src, dtype=dtype)
+        fmt.save_matrix(dest, arr, layout=layout)
+    return get_dense_matrix(name)
+
+
+def delete_matrix(name: str):
+    path = matrix_path(name)
+    if path.exists():
+        path.unlink()
+
+
+def list_matrices() -> list[str]:
+    if _CONF["data_dir"] is None:
+        return []
+    return sorted(p.stem for p in data_dir().glob("*.fmat"))

@@ -1,0 +1,101 @@
+"""MmapStore — the disk tier behind the ``MatrixStore`` protocol.
+
+An on-disk matrix (format.py) served through ``np.memmap``: opening is
+O(1), ``block()`` touches only the partition's pages, and nothing forces
+the whole matrix into RAM.  ``on_host`` is True (partitions must be staged
+host→device, like the RAM tier) and ``on_disk`` distinguishes it for the
+mode picker and the prefetcher.
+
+Writable stores (``format.create_matrix``) are the spill targets of
+``save='disk'`` outputs: the streaming executor calls ``write_rows`` per
+partition (write-through), then ``flush``.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+from typing import Optional
+
+import numpy as np
+
+from ..core.matrix import MatrixStore
+from .format import MatrixHeader
+
+
+class MmapStore(MatrixStore):
+    """Disk-backed matrix store over a single ``.fmat`` file."""
+
+    def __init__(self, path, header: MatrixHeader, *, mode: str = "r",
+                 _mm: Optional[np.memmap] = None, _layout: Optional[str] = None):
+        self.path = pathlib.Path(path)
+        self.header = header
+        self.mode = mode
+        self.layout = _layout if _layout is not None else header.layout
+        if _mm is not None:
+            self._mm = _mm
+        else:
+            self._mm = np.memmap(self.path, dtype=header.dtype, mode=mode,
+                                 offset=header.body_offset,
+                                 shape=header.stored_shape)
+
+    # -- MatrixStore protocol -------------------------------------------------
+    @property
+    def on_host(self) -> bool:
+        return True
+
+    @property
+    def on_disk(self) -> bool:
+        return True
+
+    def logical(self):
+        """The full matrix in logical orientation, as a lazy memmap view —
+        pages fault in only where actually read."""
+        return self._mm.T if self.layout == "col" else self._mm
+
+    def block(self, start: int, stop: int):
+        if self.layout == "col":
+            return self._mm[:, start:stop].T
+        return self._mm[start:stop]
+
+    def nbytes(self) -> int:
+        return int(self._mm.size) * self._mm.dtype.itemsize
+
+    def transposed(self) -> "MmapStore":
+        flipped = "col" if self.layout == "row" else "row"
+        return MmapStore(self.path, self.header, mode=self.mode,
+                         _mm=self._mm, _layout=flipped)
+
+    # -- write-through spill ---------------------------------------------------
+    @property
+    def writable(self) -> bool:
+        return self.mode in ("r+", "w+")
+
+    def write_rows(self, start: int, arr: np.ndarray):
+        """Write logical rows [start, start+len(arr)) — one partition of a
+        long-dimension output streaming to disk."""
+        if not self.writable:
+            raise ValueError(f"{self.path} opened read-only")
+        arr = np.asarray(arr)
+        if self.layout == "col":
+            self._mm[:, start:start + arr.shape[0]] = arr.T
+        else:
+            self._mm[start:start + arr.shape[0]] = arr
+
+    def flush(self):
+        if self.writable and self._mm is not None:
+            self._mm.flush()
+
+    def close(self):
+        """Flush and drop the mapping (further reads fault).  Idempotent."""
+        if self._mm is None:
+            return
+        self.flush()
+        mm = getattr(self._mm, "_mmap", None)
+        self._mm = None
+        if mm is not None:
+            mm.close()
+
+    def __repr__(self):
+        h = self.header
+        return (f"MmapStore({h.nrow}x{h.ncol}, {np.dtype(h.dtype).name}, "
+                f"layout={self.layout!r}, path={os.fspath(self.path)!r})")

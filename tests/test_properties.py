@@ -8,6 +8,11 @@ The invariants FlashMatrix's design depends on:
   * dtype promotion is monotone on the lattice.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dtypes, fm
