@@ -27,3 +27,21 @@ def emit(rows):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     return rows
+
+
+def summary_outs(fm, X):
+    """The paper's six-statistic summary DAG — the shared apply→agg.col
+    workload of kernel_bench.engine_dispatch and fusion_ablation."""
+    return (fm.colSums(X), fm.colSums(fm.abs_(X)), fm.colSums(X ** 2),
+            fm.colMins(X), fm.colMaxs(X), fm.agg_col(X, "count_nonzero"))
+
+
+def pallas_dispatch_info(plan, results, reference) -> str:
+    """Derived-column fragment naming the kernels the pallas backend
+    dispatched to plus the max abs deviation from the reference results —
+    the engine-level acceptance check both benchmarks report."""
+    kernels = sorted({u.kernel for u in plan.program("pallas").kernel_units})
+    err = max(float(np.abs(np.asarray(a, np.float64)
+                           - np.asarray(b, np.float64)).max())
+              for a, b in zip(results, reference))
+    return f"kernels={'+'.join(kernels)};maxerr={err:.2e}"

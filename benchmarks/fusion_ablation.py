@@ -1,0 +1,126 @@
+"""Fusion/backend ablation: the engine's two-level fusion knobs in a grid.
+
+    PYTHONPATH=src python benchmarks/fusion_ablation.py [--n N] [--p P]
+
+Two paper workloads — the six-statistic summary (apply→agg.col chains) and
+the Gram contraction (correlation/SVD hot loop) — are timed over every
+combination of:
+
+    fuse     on | off    off = materialize every DAG node separately (the
+                         paper's "MLlib materializes aggregation separately"
+                         strawman; out-of-core it roundtrips the host tier)
+    mode     whole | ooc whole = device-resident single computation;
+                         ooc = host-tier source streamed partition-by-
+                         partition through the prefetcher
+    backend  xla | pallas  the lowering layer (core/lowering.py): generic
+                         trace vs kernels/ dispatch.  On this CPU container
+                         the pallas backend runs the *interpreter* — the
+                         timings are not meaningful on CPU (expect O(100×)
+                         slowdown), the rows demonstrate the engine
+                         dispatching to the kernels and the results
+                         matching; on TPU the same rows time Mosaic.
+
+Derived columns report the Plan cost counters (FLOPs, bytes in/out) and,
+for pallas rows, the kernels the engine dispatched to plus the max abs
+deviation from the xla result — the acceptance check that engine-level
+kernel lowering matches the generic trace.
+
+Rows follow the repo-wide ``name,us_per_call,derived`` contract.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+try:
+    from .common import emit, pallas_dispatch_info, summary_outs, time_call
+except ImportError:  # direct `python benchmarks/fusion_ablation.py`
+    from common import emit, pallas_dispatch_info, summary_outs, time_call
+
+
+def _workloads(fm):
+    return {
+        "summary": lambda X, **kw: [
+            fm.as_np(o) for o in fm.materialize(*summary_outs(fm, X), **kw)],
+        "gram": lambda X, **kw: [
+            fm.as_np(fm.materialize(fm.crossprod(X), **kw)[0])],
+    }
+
+
+def _plan_counters(fm, outs):
+    from repro.core.fusion import Plan
+    plan = Plan([o.m for o in outs])
+    return plan, (f"flops={plan.flop_count():.2e};"
+                  f"bytes_in={plan.bytes_in():.2e};"
+                  f"bytes_out={plan.bytes_out():.2e}")
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--p", type=int, default=16)
+    ap.add_argument("--pallas-n", type=int, default=20_000,
+                    help="row count for interpret-mode pallas rows (CPU)")
+    ap.add_argument("--partition-mib", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.core import fm
+    from repro.core import materialize as mz
+
+    fm.set_conf(io_partition_bytes=args.partition_mib << 20)
+    on_tpu = jax.default_backend() == "tpu"
+
+    rng = np.random.default_rng(0)
+    rows = []
+    for backend in ("xla", "pallas"):
+        # Interpret-mode pallas on CPU is a correctness path, not a speed
+        # path: shrink the matrix so the grid sweep finishes quickly.
+        n = args.n if (backend == "xla" or on_tpu) else args.pallas_n
+        X_np = rng.normal(size=(n, args.p)).astype(np.float32)
+        X_dev = fm.conv_R2FM(X_np)
+        X_ram = fm.conv_R2FM(X_np, host=True)
+        for wname, work in _workloads(fm).items():
+            for mode, X in (("whole", X_dev), ("ooc", X_ram)):
+                for fuse in (True, False):
+                    mz.clear_plan_cache()
+                    kw = dict(mode=mode, fuse=fuse, backend=backend)
+                    res = work(X, **kw)
+                    us = time_call(lambda: work(X, **kw), iters=args.iters)
+                    derived = ""
+                    if fuse:
+                        outs = (summary_outs(fm, X) if wname == "summary"
+                                else (fm.crossprod(X),))
+                        plan, derived = _plan_counters(fm, outs)
+                        if backend == "pallas":
+                            # Acceptance check: engine-level kernel lowering
+                            # matches the generic trace on the same data.
+                            ref = work(X, mode=mode, fuse=True,
+                                       backend="xla")
+                            derived += ";" + pallas_dispatch_info(
+                                plan, res, ref)
+                    rows.append(
+                        (f"fusion/{wname}/{mode}/"
+                         f"{'fuse' if fuse else 'nofuse'}/{backend}",
+                         us, derived))
+    return emit(rows)
+
+
+def fusion_ablation():
+    """run.py entry: reduced size, restores engine config afterwards."""
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    try:
+        return run(["--n", "100000", "--pallas-n", "8000", "--iters", "2"])
+    finally:
+        matrix_mod.IO_PARTITION_BYTES = old
+
+
+ALL = [fusion_ablation]
+
+
+if __name__ == "__main__":
+    run()

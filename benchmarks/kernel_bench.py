@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
-from .common import emit, time_call
+from .common import emit, pallas_dispatch_info, summary_outs, time_call
 
 RNG = np.random.default_rng(0)
 
@@ -38,4 +38,37 @@ def kernels():
     return emit(rows)
 
 
-ALL = [kernels]
+def engine_dispatch():
+    """The same kernels reached THROUGH the engine (materialize → plan IR →
+    lowering), not standalone calls: each row names the kernels the pallas
+    backend dispatched to and the max abs deviation from the xla backend."""
+    from repro.core import fm
+    from repro.core.fusion import Plan
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(4096, 16)).astype(np.float32)
+    X = fm.conv_R2FM(A)
+    C = rng.normal(size=(8, 16)).astype(np.float32)
+
+    def lloyd_outs():
+        D = fm.inner_prod(X, C.T, "squared_diff", "sum")
+        labels = fm.which_min_row(D)
+        return (fm.rowsum(X, labels, 8), fm.table_(labels, 8),
+                fm.sum_(fm.rowMins(D)), labels)
+
+    rows = []
+    for name, outs_fn in (("summary", lambda: summary_outs(fm, X)),
+                          ("gram", lambda: (fm.crossprod(X),)),
+                          ("kmeans", lloyd_outs)):
+        plan = Plan([o.m for o in outs_fn()])
+        t = time_call(lambda: fm.materialize(*outs_fn(), backend="pallas"),
+                      iters=2)
+        px = [fm.as_np(o) for o in fm.materialize(*outs_fn(),
+                                                  backend="pallas")]
+        xx = [fm.as_np(o) for o in fm.materialize(*outs_fn(), backend="xla")]
+        rows.append((f"kern/engine/{name}/pallas", t,
+                     pallas_dispatch_info(plan, px, xx)))
+    return emit(rows)
+
+
+ALL = [kernels, engine_dispatch]

@@ -6,9 +6,10 @@ Public surface:
   * `repro.core.vudf` — VUDF registry (extend with register_*)
   * `repro.core.matrix` — FMMatrix handles + partition policy
 """
-from . import dtypes, vudf, matrix, dag, genops, fusion, materialize
+from . import (dtypes, vudf, matrix, dag, genops, plan_ir, lowering, fusion,
+               materialize)
 from . import rlike as fm
 from .matrix import FMMatrix
 
-__all__ = ["dtypes", "vudf", "matrix", "dag", "genops", "fusion",
-           "materialize", "fm", "FMMatrix"]
+__all__ = ["dtypes", "vudf", "matrix", "dag", "genops", "plan_ir",
+           "lowering", "fusion", "materialize", "fm", "FMMatrix"]

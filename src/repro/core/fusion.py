@@ -8,16 +8,16 @@ CPU-level partition, the thread passes the partition to the subsequent
 operation in the DAG, instead of materializing the next CPU-level partition
 in the same matrix").
 
-`Plan` compiles the induced subgraph of the requested outputs into
-
-    step(accs, source_blocks, offset) -> (accs', row_local_outputs)
-
-which the materializer invokes once per I/O-level partition (stream mode /
-out-of-core) or once for the whole matrix (whole mode — XLA then performs
-the cache-level fusion the paper implements by hand).  Because ``step`` is a
-single traced function, every intermediate virtual matrix lives only as a
-value inside one XLA computation: the analog of never writing intermediates
-to SSD/DRAM.
+`Plan` owns the *analysis* half of the engine: it cuts the DAG at persisted
+nodes, toposorts the induced subgraph, classifies sources/sinks/outputs and
+schedules the I/O-level partition size.  The executable halves live one
+layer down: `plan_ir.compile_ir` groups the cut into typed fused segments
+with per-segment processor-level tiles (the paper's second partition
+level), and a `lowering` backend turns those segments into the
+``step``/``combine`` program the materializer streams partitions through.
+Because ``step`` is a single traced function, every intermediate virtual
+matrix lives only as a value inside one computation: the analog of never
+writing intermediates to SSD/DRAM.
 
 The plan cuts the DAG at nodes that were previously persisted
 (`fm.set.mate.level` → ``node.cached_store``), mirroring the paper's
@@ -30,10 +30,9 @@ from __future__ import annotations
 
 from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 
-from . import dtypes
+from . import dtypes, plan_ir
 from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of)
 from .matrix import FMMatrix, io_partition_rows
 
@@ -100,14 +99,23 @@ class Plan:
                     self._small_pos[id(p)] = len(self.smalls)
                     self.smalls.append(p)
 
-        self._jit_step = jax.jit(self._step)
-        self._jit_step_donated = jax.jit(self._step, donate_argnums=(0, 1))
-        self._jit_combine = jax.jit(self._combine)
+        # Segment IR + processor-level tile schedule (paper §III-F level 2);
+        # lowered programs are built lazily per backend and cached here.
+        self.ir = plan_ir.compile_ir(self)
+        self._programs: dict[str, "object"] = {}
+
+    def program(self, backend: str):
+        """The lowered executable for ``backend`` (see core/lowering.py)."""
+        prog = self._programs.get(backend)
+        if prog is None:
+            from . import lowering  # deferred: lowering pulls in kernels
+            prog = lowering.lower(self, self.ir, backend)
+            self._programs[backend] = prog
+        return prog
 
     def signature(self) -> str:
         """Structural identity: two DAG cuts with the same signature can
         share one compiled plan (the compile-once/stream-many contract)."""
-        import numpy as _np
         parts = [f"L{self.long_dim}"]
         pos = {n.id: i for i, n in enumerate(self.order)}
         for n in self.order:
@@ -174,42 +182,7 @@ class Plan:
             visit(r)
         return order
 
-    # -- traced step -----------------------------------------------------------
-    def _step(self, accs, source_blocks, smalls, offset):
-        """One partition through the whole fused DAG.
-
-        ``source_blocks``: dict node-id -> partition array for every source.
-        ``smalls``: runtime values for broadcast operands, positionally
-        aligned with self.smalls.  ``offset``: global index of the
-        partition's first row (makes indexed aggregations like which.min
-        absolute across partitions).
-        """
-        values = dict(source_blocks)
-        outputs = {}
-        for n in self.order:
-            if self._is_source(n):
-                continue
-            blocks = []
-            for p in n.parents:
-                blocks.append(smalls[self._small_pos[id(p)]]
-                              if isinstance(p, Small) else values[p.id])
-            if n.is_sink:
-                accs = dict(accs)
-                accs[n.id] = n.block_update(accs[n.id], blocks, offset)
-            else:
-                values[n.id] = n.block_eval(blocks, offset)
-        for n in self.row_local_roots + self.saves:
-            outputs[n.id] = values[n.id]
-        return accs, outputs
-
-    def _combine(self, a, b):
-        by_id = self.sinks_by_id
-        return {nid: by_id[nid].combine(a[nid], b[nid]) for nid in a}
-
-    @property
-    def sinks_by_id(self):
-        return {n.id: n for n in self.sinks}
-
+    # -- sink accumulators -----------------------------------------------------
     def init_accs(self):
         return {n.id: n.identity() for n in self.sinks}
 
@@ -237,6 +210,7 @@ class Plan:
             role = ("source" if self._is_source(n)
                     else "sink" if n.is_sink else "fused")
             lines.append(f"  [{role:6s}] {n!r}")
+        lines.extend("  " + line for line in self.ir.describe().splitlines())
         lines.append(f"  flops={self.flop_count():.3e} bytes_in={self.bytes_in():.3e}"
                      f" bytes_out={self.bytes_out():.3e}")
         return "\n".join(lines)

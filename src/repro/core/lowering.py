@@ -1,0 +1,510 @@
+"""Pluggable lowering backends: plan IR → executable partition programs.
+
+Third layer of the execution engine (after `fusion.Plan` cut/schedule and
+`plan_ir` segment compilation).  A backend lowers the IR's segments into a
+`LoweredProgram` whose contract the materializer consumes:
+
+    partials, row_local_outputs = program.step(source_blocks, smalls, offset)
+    accs = program.combine(accs, partials)       # the paper's partial merge
+
+``step`` pushes ONE I/O-level partition through the whole fused cut and
+returns each sink's *partial* for that partition; ``combine`` merges
+partials into the running accumulators with the aggregation VUDFs'
+``combine`` — exactly the paper's "each thread computes partial aggregation
+results independently … in the end, FlashMatrix merges the partial
+aggregation results" (§III-F), with partitions standing in for threads.
+
+Backends:
+
+* ``xla``    — every segment is traced node-by-node through the generic
+  ``block_eval`` / ``block_update`` rules and XLA performs the cache-level
+  fusion (the engine's previous behavior).
+* ``pallas`` — eligible segments lower onto the hand-written kernels in
+  `repro/kernels/` (the VMEM-tier analog of the paper's CPU-cache fusion):
+  inner-product contractions → `gram`/`xty`, apply→agg.col chains sharing a
+  source → one `fused_apply_agg` call, and the k-means Lloyd pattern
+  (distances → which.min → groupby) → `kmeans_assign`.  Segments with no
+  kernel match fall back to the generic trace, and on non-TPU backends the
+  kernels run in interpret mode so the same lowering path is exercised in
+  tests.
+
+Backend selection: ``fm.set_conf(backend=...)`` ('auto' | 'xla' | 'pallas')
+or the ``backend=`` argument of ``fm.materialize``; 'auto' picks pallas on
+TPU and xla elsewhere.  The backend name and the IR's two-level partition
+schedule are both part of the plan-cache key, so switching backends or
+retuning either partition level retraces instead of reusing a stale
+executable.
+
+Registering a new kernel lowering = appending a matcher to
+``PallasBackend.MATCHERS``: a callable ``(plan, ir, claimed) -> list[unit]``
+that inspects unclaimed segments, marks the ones it consumes in ``claimed``
+and returns execution units (objects with ``run(values, partials, smalls,
+offset)``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import dtypes
+from .dag import (AggFullNode, GroupByRowNode, InnerProdContractNode,
+                  MapNode, Node, Small)
+
+# ---------------------------------------------------------------------------
+# Backend registry + selection
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, "Backend"] = {}
+
+#: Engine-wide default, settable via fm.set_conf(backend=...).
+DEFAULT_BACKEND = "auto"
+
+
+def register_backend(name: str, backend: "Backend"):
+    BACKENDS[name] = backend
+    return backend
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """'auto' (or None) → pallas on TPU, xla elsewhere."""
+    name = name or DEFAULT_BACKEND
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; have {sorted(BACKENDS)} + 'auto'")
+    return name
+
+
+def lower(plan, ir, backend: str) -> "LoweredProgram":
+    return BACKENDS[backend].lower(plan, ir)
+
+
+# ---------------------------------------------------------------------------
+# The lowered program
+# ---------------------------------------------------------------------------
+
+class LoweredProgram:
+    """An executable lowering of one plan: per-partition ``step`` plus the
+    sink-partial ``combine`` merge."""
+
+    def __init__(self, plan, ir, backend: str, units):
+        self.plan = plan
+        self.ir = ir
+        self.backend = backend
+        self.units = units
+        self._sinks_by_id = {n.id: n for n in plan.sinks}
+        self.step = jax.jit(self._step)
+        # Buffer donation = the paper's memory-chunk recycling: staged
+        # partition blocks are dead after the step consumes them, and the
+        # previous accumulators are dead after the merge.
+        self.step_donated = jax.jit(self._step, donate_argnums=(0,))
+        self.combine = jax.jit(self._combine, donate_argnums=(0,))
+
+    @property
+    def kernel_units(self):
+        """The units lowered onto hand-written kernels (empty under xla)."""
+        return [u for u in self.units if getattr(u, "kernel", None)]
+
+    def describe(self) -> str:
+        lines = [f"LoweredProgram(backend={self.backend}, "
+                 f"units={len(self.units)})"]
+        lines += ["  " + u.describe() for u in self.units]
+        return "\n".join(lines)
+
+    def _step(self, source_blocks, smalls, offset):
+        """One I/O-level partition through the fused cut.
+
+        Returns (sink_partials, row_local_outputs) for this partition;
+        partials start from each sink's identity so ``combine`` can merge
+        them into accumulators of the same structure.
+        """
+        values = dict(source_blocks)
+        partials = {n.id: n.identity() for n in self.plan.sinks}
+        for unit in self.units:
+            unit.run(values, partials, smalls, offset)
+        outputs = {n.id: values[n.id]
+                   for n in self.plan.row_local_roots + self.plan.saves}
+        return partials, outputs
+
+    def _combine(self, accs, partials):
+        return {nid: self._sinks_by_id[nid].combine(accs[nid], partials[nid])
+                for nid in accs}
+
+
+class Backend:
+    name = "?"
+
+    def lower(self, plan, ir) -> LoweredProgram:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Execution units
+# ---------------------------------------------------------------------------
+
+class GenericUnit:
+    """Trace a segment node-by-node through the dag eval rules (the xla
+    path, and the fallback for segments no kernel matcher claims)."""
+
+    kernel = None
+
+    def __init__(self, plan, segment):
+        self.plan = plan
+        self.segment = segment
+        self.nodes = segment.nodes
+
+    def describe(self) -> str:
+        return (f"generic seg#{self.segment.sid} [{self.segment.kind}] "
+                f"root={self.segment.root.name}")
+
+    def run(self, values, partials, smalls, offset):
+        for n in self.nodes:
+            blocks = [smalls[self.plan._small_pos[id(p)]]
+                      if isinstance(p, Small) else values[p.id]
+                      for p in n.parents]
+            if n.is_sink:
+                partials[n.id] = n.block_update(partials[n.id], blocks, offset)
+            else:
+                values[n.id] = n.block_eval(blocks, offset)
+
+
+class _KernelUnit:
+    """Base for units lowered onto a Pallas kernel.  ``interpret=None``
+    defers to kernels.common.default_interpret(): Mosaic on TPU,
+    interpreter elsewhere — the same call sites run in both worlds."""
+
+    def __init__(self, kernel: str, block_rows: int):
+        self.kernel = kernel
+        self.block_rows = int(block_rows)
+
+    @staticmethod
+    def _merge(partials, node, part):
+        partials[node.id] = node.combine(
+            partials[node.id], part.astype(partials[node.id].dtype))
+
+
+class ContractionUnit(_KernelUnit):
+    """InnerProdContractNode (mul, sum) → kernels.gram / kernels.xty."""
+
+    def __init__(self, node: InnerProdContractNode, block_rows: int):
+        left, right = node.parents
+        # crossprod(X) wraps one physical matrix in two LeafNodes: detect
+        # the shared backing so it lowers to gram (one read) rather than xty.
+        same = left is right or (
+            getattr(left, "mat", None) is not None
+            and left.mat is getattr(right, "mat", None))
+        super().__init__("gram" if same else "xty", block_rows)
+        self.node = node
+        self.left_id, self.right_id = left.id, right.id
+
+    def describe(self) -> str:
+        return f"pallas:{self.kernel} root={self.node.name}"
+
+    def run(self, values, partials, smalls, offset):
+        from ..kernels import gram as gram_mod
+        x = values[self.left_id]
+        if self.kernel == "gram":
+            part = gram_mod.gram(x, block_rows=min(self.block_rows, x.shape[0]))
+        else:
+            part = gram_mod.xty(x, values[self.right_id],
+                                block_rows=min(self.block_rows, x.shape[0]))
+        self._merge(partials, self.node, part)
+
+
+class ApplyAggUnit(_KernelUnit):
+    """N apply→agg.col chains over one source → one fused_apply_agg call
+    (the paper's sink co-materialization: X is read once for all stats)."""
+
+    def __init__(self, source_id: int, chains, sinks, block_rows: int):
+        super().__init__("fused_apply_agg", block_rows)
+        self.source_id = source_id
+        self.chains = tuple(chains)
+        self.sinks = list(sinks)
+
+    def describe(self) -> str:
+        return (f"pallas:{self.kernel} chains={len(self.chains)} "
+                f"sinks={[s.name for s in self.sinks]}")
+
+    def run(self, values, partials, smalls, offset):
+        from ..kernels import fused_apply_agg as faa
+        x = values[self.source_id]
+        parts = faa.fused_apply_agg(
+            x, self.chains, block_rows=min(self.block_rows, x.shape[0]))
+        for node, part in zip(self.sinks, parts):
+            self._merge(partials, node, part.reshape(node.identity().shape))
+
+
+class KMeansUnit(_KernelUnit):
+    """The Lloyd-step pattern → one kernels.kmeans_assign call per
+    partition: distances, argmin, groupby sums/counts and the objective all
+    from one VMEM-resident read of X."""
+
+    def __init__(self, *, x_id: int, centers_pos: int, labels: Node,
+                 sums: Node, counts: Node | None, wss: Node | None,
+                 block_rows: int):
+        super().__init__("kmeans_assign", block_rows)
+        self.x_id = x_id
+        self.centers_pos = centers_pos
+        self.labels, self.sums, self.counts, self.wss = (
+            labels, sums, counts, wss)
+
+    def describe(self) -> str:
+        outs = [self.labels.name, self.sums.name]
+        outs += [n.name for n in (self.counts, self.wss) if n is not None]
+        return f"pallas:{self.kernel} outs={outs}"
+
+    def run(self, values, partials, smalls, offset):
+        from ..kernels import kmeans_assign as ka
+        x = values[self.x_id]
+        centers = smalls[self.centers_pos].T  # matmul_small stores (p, k)
+        lab, sums, cnts, wss = ka.kmeans_assign(
+            x, centers, block_rows=min(self.block_rows, x.shape[0]))
+        values[self.labels.id] = lab.reshape(-1, 1)
+        self._merge(partials, self.sums, sums)
+        if self.counts is not None:
+            self._merge(partials, self.counts, cnts.reshape(-1, 1))
+        if self.wss is not None:
+            self._merge(partials, self.wss, wss.reshape(()))
+
+
+# ---------------------------------------------------------------------------
+# xla backend
+# ---------------------------------------------------------------------------
+
+class XlaBackend(Backend):
+    """Generic traced lowering: XLA performs the cache-level fusion."""
+
+    name = "xla"
+
+    def lower(self, plan, ir) -> LoweredProgram:
+        units = [GenericUnit(plan, seg) for seg in ir.segments]
+        return LoweredProgram(plan, ir, self.name, units)
+
+
+# ---------------------------------------------------------------------------
+# pallas backend
+# ---------------------------------------------------------------------------
+
+def _f32_acc(node) -> bool:
+    return dtypes.canon(node.acc_dtype) == jnp.dtype(jnp.float32)
+
+
+def _source_key(node: Node):
+    """Identity of the data a node's partition block carries.  Distinct
+    LeafNodes over one physical matrix (each GenOp call wraps its own leaf)
+    must compare equal so their chains fuse into one kernel read."""
+    mat = getattr(node, "mat", None)
+    if mat is not None:
+        return ("leaf", id(mat))
+    return ("node", node.id)
+
+
+def _same_source(a: Node, b: Node) -> bool:
+    return a is b or _source_key(a) == _source_key(b)
+
+
+def _is_pure_unary_chain(seg):
+    """segment = [sapply*, sink]: returns the unary-name tuple source→sink,
+    or None when the absorbed chain is not a linear unary pipeline."""
+    names = []
+    expect = seg.nodes[-1].parents[0]  # the sink's operand, walking upward
+    for n in reversed(seg.nodes[:-1]):
+        if n is not expect or n.kind != "sapply":
+            return None
+        names.append(n.fn_info["vudf"].name)
+        expect = n.parents[0]
+    if isinstance(expect, Small):
+        return None
+    return tuple(reversed(names))
+
+
+def _match_contractions(plan, ir, claimed):
+    from ..kernels import common as kcommon  # noqa: F401  (import check)
+    units = {}
+    for seg in ir.segments:
+        if seg.sid in claimed or seg.kind != "contraction":
+            continue
+        node = seg.root
+        if len(seg.nodes) != 1 or not isinstance(node, InnerProdContractNode):
+            continue
+        if node.mul.name != "mul" or node.add.name != "sum":
+            continue
+        if not _f32_acc(node):
+            continue  # f64 accumulation: the generic trace keeps full precision
+        if any(isinstance(p, Small) for p in node.parents):
+            continue
+        if not all(dtypes.is_floating(p.dtype) for p in node.parents):
+            continue
+        claimed.add(seg.sid)
+        units[seg.sid] = ContractionUnit(node, seg.block_rows)
+    return units
+
+
+def _match_apply_agg(plan, ir, claimed):
+    _AGG_MAP = {"sum": "sum", "min": "min", "max": "max",
+                "count": "count", "count_nonzero": "count_nonzero"}
+    from ..kernels.fused_apply_agg import CHAIN_UNARIES
+    # Group eligible chains by their shared source so N statistics become
+    # one kernel call (one read of X).
+    by_source: dict[int, list] = {}
+    for seg in ir.segments:
+        if seg.sid in claimed or seg.kind != "sink_update":
+            continue
+        node = seg.root
+        if node.kind != "agg_col" or node.agg.name not in _AGG_MAP:
+            continue
+        if not _f32_acc(node) and node.agg.name not in ("count",
+                                                        "count_nonzero"):
+            continue
+        unaries = _is_pure_unary_chain(seg)
+        if unaries is None or any(u not in CHAIN_UNARIES for u in unaries):
+            continue
+        source = seg.nodes[0].parents[0]
+        if isinstance(source, Small) or not dtypes.is_floating(source.dtype):
+            continue
+        by_source.setdefault(_source_key(source), []).append(
+            (seg, source.id, (unaries, _AGG_MAP[node.agg.name])))
+    units = {}
+    for entries in by_source.values():
+        segs = [seg for seg, _, _ in entries]
+        chains = tuple(chain for _, _, chain in entries)
+        for seg in segs:
+            claimed.add(seg.sid)
+        units[segs[0].sid] = ApplyAggUnit(
+            entries[0][1], chains, [seg.root for seg in segs],
+            min(seg.block_rows for seg in segs))
+    return units
+
+
+def _single_node_seg(ir, node, kind=None):
+    for seg in ir.segments:
+        if seg.root is node and len(seg.nodes) == 1:
+            if kind is None or seg.kind == kind:
+                return seg
+    return None
+
+
+def _match_kmeans(plan, ir, claimed):
+    """distances (squared_diff,sum) → which.min labels → groupby sums
+    [+ counts, + wss] → kernels.kmeans_assign."""
+    units = {}
+    value_roots = {n.id for n in plan.row_local_roots + plan.saves}
+    for seg in ir.segments:
+        if seg.sid in claimed or seg.kind != "row_local":
+            continue
+        labels = seg.root
+        if (len(seg.nodes) != 1 or not isinstance(labels, MapNode)
+                or labels.kind != "agg_row"
+                or labels.fn_info["vudf"].name != "which.min"):
+            continue
+        d = labels.parents[0]
+        if (isinstance(d, Small) or not isinstance(d, MapNode)
+                or d.kind != "matmul_small"
+                or d.fn_info["mul"].name != "squared_diff"
+                or d.fn_info["add"].name != "sum"
+                or d.id in value_roots):
+            continue
+        x = d.parents[0]
+        centers = d.parents[1]
+        if (isinstance(x, Small) or not isinstance(centers, Small)
+                or not dtypes.is_floating(x.dtype)
+                or dtypes.canon(x.dtype) == jnp.dtype(jnp.float64)):
+            continue
+        d_seg = _single_node_seg(ir, d)
+        if d_seg is None or d_seg.sid in claimed:
+            continue
+
+        # Consumers of d: labels (+ optionally rowMins feeding the wss sink).
+        d_consumers = ir.consumers.get(d.id, [])
+        mind = None
+        ok = True
+        for c in d_consumers:
+            if c is labels:
+                continue
+            if (isinstance(c, MapNode) and c.kind == "agg_row"
+                    and c.fn_info["vudf"].name == "min" and mind is None
+                    and c.id not in value_roots):
+                mind = c
+            else:
+                ok = False
+        if not ok:
+            continue
+
+        # Consumers of labels: the groupby sums sink (+ optionally counts).
+        lab_consumers = ir.consumers.get(labels.id, [])
+        sums = counts = None
+        for c in lab_consumers:
+            if (isinstance(c, GroupByRowNode) and c.agg.name == "sum"
+                    and _same_source(c.parents[0], x)
+                    and c.parents[1] is labels
+                    and _f32_acc(c) and sums is None):
+                sums = c
+            elif (isinstance(c, GroupByRowNode) and c.agg.name == "count"
+                  and c.parents[0] is labels and c.parents[1] is labels
+                  and counts is None):
+                counts = c
+            else:
+                ok = False
+        if not ok or sums is None:
+            continue
+        sums_seg = _single_node_seg(ir, sums, "sink_update")
+        counts_seg = (_single_node_seg(ir, counts, "sink_update")
+                      if counts is not None else None)
+        if sums_seg is None or (counts is not None and counts_seg is None):
+            continue
+        if counts is not None and sums.num_groups != counts.num_groups:
+            continue
+
+        # wss: AggFullNode(sum) exclusively over mind, absorbed in one seg.
+        wss = wss_seg = None
+        if mind is not None:
+            mind_consumers = ir.consumers.get(mind.id, [])
+            if (len(mind_consumers) == 1
+                    and isinstance(mind_consumers[0], AggFullNode)
+                    and mind_consumers[0].agg.name == "sum"
+                    and _f32_acc(mind_consumers[0])):
+                wss = mind_consumers[0]
+                for s in ir.segments:
+                    if s.root is wss and [n.id for n in s.nodes] == \
+                            [mind.id, wss.id]:
+                        wss_seg = s
+            if wss is None or wss_seg is None or wss_seg.sid in claimed:
+                continue  # mind exists but doesn't fold into the kernel
+
+        group = [seg, d_seg, sums_seg] + \
+            [s for s in (counts_seg, wss_seg) if s is not None]
+        if any(s.sid in claimed for s in group):
+            continue
+        for s in group:
+            claimed.add(s.sid)
+        units[min(s.sid for s in group)] = KMeansUnit(
+            x_id=x.id, centers_pos=plan._small_pos[id(centers)],
+            labels=labels, sums=sums, counts=counts, wss=wss,
+            block_rows=d_seg.block_rows)
+    return units
+
+
+class PallasBackend(Backend):
+    """Lower eligible segments onto the Pallas kernels; generic fallback
+    for the rest.  Matchers run in order and claim segments by sid."""
+
+    name = "pallas"
+    MATCHERS = [_match_kmeans, _match_contractions, _match_apply_agg]
+
+    def lower(self, plan, ir) -> LoweredProgram:
+        claimed: set[int] = set()
+        placed: dict[int, object] = {}
+        for matcher in self.MATCHERS:
+            placed.update(matcher(plan, ir, claimed))
+        units = []
+        for seg in ir.segments:
+            if seg.sid in placed:
+                units.append(placed[seg.sid])
+            elif seg.sid not in claimed:
+                units.append(GenericUnit(plan, seg))
+        return LoweredProgram(plan, ir, self.name, units)
+
+
+register_backend("xla", XlaBackend())
+register_backend("pallas", PallasBackend())

@@ -41,7 +41,7 @@ import numpy as np
 warnings.filterwarnings(
     "ignore", message="Some donated buffers were not usable")
 
-from . import dtypes
+from . import dtypes, lowering
 from .dag import LeafNode, Node, as_node, wrap
 from .fusion import Plan
 from .matrix import DenseStore, FMMatrix
@@ -75,7 +75,8 @@ def _mesh_key(mesh):
 
 def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
                 mesh=None, donate: bool = True, reuse_plans: bool = True,
-                prefetch: Optional[bool] = None) -> list[FMMatrix]:
+                prefetch: Optional[bool] = None,
+                backend: Optional[str] = None) -> list[FMMatrix]:
     """fm.materialize: force computation of virtual matrices.
 
     Returns one *physical* FMMatrix per argument (physical args pass
@@ -86,22 +87,32 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     ``prefetch`` controls the async partition pipeline in streaming modes:
     None = the storage config default (on for slow-tier sources), False =
     synchronous staging (the ablation the storage benchmark measures).
+
+    ``backend`` picks the lowering backend ('xla' | 'pallas' | 'auto');
+    None = the engine default (fm.set_conf(backend=...), 'auto' initially:
+    pallas on TPU, xla elsewhere).  See core/lowering.py.
     """
     virtuals = [m for m in mats if m.is_virtual]
     if not virtuals:
         return list(mats)
 
+    backend = lowering.resolve_backend(backend)
+
     if not fuse:
-        _materialize_eager([m.node for m in virtuals], mode=mode)
+        _materialize_eager([m.node for m in virtuals], mode=mode,
+                           backend=backend)
         return [_result_of(m) for m in mats]
 
     plan = Plan(virtuals)
     exec_plan = plan
     if reuse_plans:
-        # partition_rows is part of the key: it reads IO_PARTITION_BYTES at
-        # plan build, so a fm.set_conf(io_partition_bytes=...) change must
-        # miss the cache rather than stream with the old partition size.
-        sig = (plan.signature(), plan.partition_rows, _mesh_key(mesh))
+        # Both partition levels and the backend are part of the key: the
+        # I/O partition size reads IO_PARTITION_BYTES at plan build and the
+        # IR's block-row schedule reads VMEM_PARTITION_BYTES, so a
+        # fm.set_conf change — or a backend switch — must miss the cache
+        # rather than reuse an executable built for different tiling.
+        sig = (plan.signature(), plan.partition_rows,
+               plan.ir.schedule_key(), backend, _mesh_key(mesh))
         cached = _PLANS.get(sig)
         if cached is not None:
             _PLANS.move_to_end(sig)  # LRU touch
@@ -130,7 +141,8 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     try:
         _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
                  sources=[m for _, m in plan.sources],
-                 smalls=plan.small_values(), prefetch=prefetch)
+                 smalls=plan.small_values(), prefetch=prefetch,
+                 backend=backend)
         if exec_plan is not plan:
             for old_n, new_n in zip(exec_plan.result_nodes(),
                                     plan.result_nodes()):
@@ -160,20 +172,22 @@ def _result_of(m: FMMatrix) -> FMMatrix:
 
 
 def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
-             sources=None, smalls=None, prefetch: Optional[bool] = None):
+             sources=None, smalls=None, prefetch: Optional[bool] = None,
+             backend: Optional[str] = None):
     if sources is None:
         sources = [m for _, m in plan.sources]
     if smalls is None:
         smalls = plan.small_values()
+    prog = plan.program(lowering.resolve_backend(backend))
     mode = _pick_mode_src(sources, mode)
     if mode == "whole":
-        _execute_whole(plan, mesh, sources, smalls)
+        _execute_whole(plan, prog, mesh, sources, smalls)
     elif mode == "stream":
-        _execute_stream(plan, sources, smalls, to_host=False, donate=donate,
-                        prefetch=prefetch)
+        _execute_stream(plan, prog, sources, smalls, to_host=False,
+                        donate=donate, prefetch=prefetch)
     elif mode == "ooc":
-        _execute_stream(plan, sources, smalls, to_host=True, donate=donate,
-                        prefetch=prefetch)
+        _execute_stream(plan, prog, sources, smalls, to_host=True,
+                        donate=donate, prefetch=prefetch)
     else:
         raise ValueError(f"unknown mode {mode!r}")
     return plan
@@ -187,7 +201,7 @@ def _pick_mode_src(sources, mode: str) -> str:
     return "whole"
 
 
-def _execute_whole(plan: Plan, mesh, sources, smalls):
+def _execute_whole(plan: Plan, prog, mesh, sources, smalls):
     blocks = {}
     for (node, _), mat in zip(plan.sources, sources):
         data = mat.logical_data()
@@ -195,9 +209,9 @@ def _execute_whole(plan: Plan, mesh, sources, smalls):
         if mesh is not None and mat.shape[0] == plan.long_dim:
             arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
         blocks[node.id] = arr
-    accs = plan.init_accs()
     offset = jnp.zeros((), jnp.int32)
-    accs, outputs = plan._jit_step(accs, blocks, smalls, offset)
+    partials, outputs = prog.step(blocks, smalls, offset)
+    accs = prog.combine(plan.init_accs(), partials)
     finals = plan.finalize_accs(accs)
     _store_results(plan, finals, {nid: [v] for nid, v in outputs.items()},
                    to_host=False)
@@ -226,7 +240,7 @@ def _inline_partitions(src_pairs, rows: int, n: int, donate: bool):
         start = stop
 
 
-def _execute_stream(plan: Plan, sources, smalls, *, to_host: bool,
+def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
                     donate: bool = True, prefetch: Optional[bool] = None):
     from .. import storage  # deferred: storage depends on core.matrix
 
@@ -262,11 +276,15 @@ def _execute_stream(plan: Plan, sources, smalls, *, to_host: bool,
     else:
         parts = _inline_partitions(src_pairs, rows, n, donate)
 
-    step = plan._jit_step_donated if donate else plan._jit_step
+    step = prog.step_donated if donate else prog.step
     try:
         for start, stop, blocks in parts:
-            accs, outputs = step(accs, blocks, smalls,
-                                 jnp.asarray(start, jnp.int32))
+            partials, outputs = step(blocks, smalls,
+                                     jnp.asarray(start, jnp.int32))
+            # The paper's partial-merge: each partition's sink partials fold
+            # into the running accumulators with the aggregation VUDFs'
+            # ``combine`` (donated: the old acc buffers recycle in place).
+            accs = prog.combine(accs, partials)
             for nid, val in outputs.items():
                 if nid in disk_stores:
                     disk_stores[nid].write_rows(start, np.asarray(val))
@@ -329,7 +347,8 @@ def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,
 # Eager (unfused) execution — the ablation baseline
 # ---------------------------------------------------------------------------
 
-def _materialize_eager(nodes: Sequence[Node], *, mode: str = "auto"):
+def _materialize_eager(nodes: Sequence[Node], *, mode: str = "auto",
+                       backend: Optional[str] = None):
     """Materialize every DAG node separately, writing each intermediate out
     in full before the next operation reads it back.
 
@@ -351,6 +370,6 @@ def _materialize_eager(nodes: Sequence[Node], *, mode: str = "auto"):
             sub_mode = "ooc" if ooc else "whole"
         if ooc and not n.is_sink:
             n.save = "host"  # roundtrip the slow tier, as an unfused engine must
-        _execute(sub, mode=sub_mode)
+        _execute(sub, mode=sub_mode, backend=backend)
         temp.append(n)
     return temp

@@ -44,11 +44,25 @@ IO_PARTITION_BYTES = 64 * 1024 * 1024
 # VMEM tile (TPU).  Used by the Pallas kernels' BlockSpec defaults.
 CPU_PARTITION_BYTES = 128 * 1024
 
+# Processor-level (second tier) partition budget for the execution engine's
+# per-segment schedule: the VMEM working-set analog of the paper's CPU-cache
+# partition (§III-F).  Settable via ``fm.set_conf(vmem_partition_bytes=...)``;
+# read at plan-IR build, so it is part of the plan-cache key (the schedule).
+VMEM_PARTITION_BYTES = 4 * 1024 * 1024
+
 # TPU lane/sublane alignment: row counts that are multiples of 8 and column
 # tiles that are multiples of 128 vectorize cleanly (paper's "number of rows
 # in an I/O-level partition is always 2^i ... data well aligned ... to help
 # CPU vectorization").
 ROW_ALIGN = 8
+
+
+def _pow2_rows(ncol: int, dtype, n_live: int, budget_bytes: int) -> int:
+    """Largest power of two rows such that ``n_live`` arrays of that many
+    rows fit the byte budget (paper: partitions are always 2^i rows)."""
+    row_bytes = max(1, ncol) * dtypes.nbytes(dtype) * max(1, n_live)
+    rows = max(ROW_ALIGN, budget_bytes // max(1, row_bytes))
+    return 1 << (int(rows).bit_length() - 1)
 
 
 def io_partition_rows(ncol: int, dtype, n_live: int = 1,
@@ -61,11 +75,20 @@ def io_partition_rows(ncol: int, dtype, n_live: int = 1,
     every subsequently built plan."""
     if budget_bytes is None:
         budget_bytes = IO_PARTITION_BYTES
-    ncol = max(1, ncol)
-    row_bytes = ncol * dtypes.nbytes(dtype) * max(1, n_live)
-    rows = max(ROW_ALIGN, budget_bytes // max(1, row_bytes))
-    # Round down to a power of two (paper: always 2^i).
-    return 1 << (int(rows).bit_length() - 1)
+    return _pow2_rows(ncol, dtype, n_live, budget_bytes)
+
+
+def proc_partition_rows(ncol: int, dtype, n_live: int = 1,
+                        budget_bytes: Optional[int] = None) -> int:
+    """Rows per processor-level (VMEM-tile) partition for a fused segment:
+    the same 2^i rule as the I/O level, one tier down (paper §III-F's
+    second partitioning level).
+
+    ``budget_bytes=None`` reads ``VMEM_PARTITION_BYTES`` at call time so
+    ``fm.set_conf(vmem_partition_bytes=...)`` reschedules later plans."""
+    if budget_bytes is None:
+        budget_bytes = VMEM_PARTITION_BYTES
+    return _pow2_rows(ncol, dtype, n_live, budget_bytes)
 
 
 def cpu_partition_rows(ncol: int, dtype,

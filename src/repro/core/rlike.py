@@ -341,7 +341,7 @@ def conv_store(x, where: str, *, name: str = "") -> FM:
 # -- the disk tier / EM-matrix registry (repro/storage/) ----------------------
 def set_conf(**kw) -> dict:
     """fm.set.conf: data_dir / prefetch / prefetch_depth /
-    io_partition_bytes."""
+    io_partition_bytes / vmem_partition_bytes / backend / direct_io."""
     from ..storage import registry
     return registry.set_conf(**kw)
 

@@ -1,16 +1,27 @@
 """Fused apply→aggregate streaming kernel — the GenOps cache-fuse hot-spot.
 
 This is the paper's statistical-summary workload (§IV-A) as ONE Pallas
-kernel: a tall matrix streams HBM→VMEM block-by-block and every column
-statistic (sum, sum-of-squares, min, max, L1, nnz) updates from the same
-resident tile.  The elementwise "apply" stage (here x², |x|, x≠0) never
-touches HBM — exactly the paper's CPU-cache operation fusion, restated for
-the HBM→VMEM tier.
+kernel, generalized: a tall matrix streams HBM→VMEM block-by-block and an
+arbitrary set of *chains* — each a pipeline of unary VUDFs followed by a
+column aggregation — updates from the same resident tile.  The elementwise
+"apply" stages (x², |x|, √x, …) never touch HBM — exactly the paper's
+CPU-cache operation fusion, restated for the HBM→VMEM tier.
 
-Grid: 1-D over row blocks (the I/O-level partition axis).  Accumulators
-live in VMEM scratch for the whole grid sweep (TPU grids execute
-sequentially per core), initialized at step 0 and written back at the last
-step — the same identity→update→combine contract as core/dag.py sinks.
+``fused_apply_agg(x, chains)`` takes a static chain spec
+
+    chains = (((unary_name, ...), agg_name), ...)
+
+where each unary name resolves in the core VUDF registry (core/vudf.py) and
+agg_name ∈ {sum, min, max, count, count_nonzero}.  The engine's pallas
+lowering (core/lowering.py) compiles eligible agg.col sink segments sharing
+one source into a single call, so N statistics cost one read of X.
+``fused_summary`` is the paper's six-statistic instance.
+
+Grid: 1-D over row blocks (the processor-level partition axis).
+Accumulators live in VMEM scratch for the whole grid sweep (TPU grids
+execute sequentially per core), initialized at step 0 and written back at
+the last step — the same identity→update→combine contract as core/dag.py
+sinks.
 
 Rows are padded to the block multiple with neutral values handled by
 masking inside the kernel (min/max need ±inf, so padding cannot be plain
@@ -27,52 +38,82 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .common import default_interpret, pad_rows, pick_block_rows
 
+#: Aggregations the chain kernel can accumulate in a VMEM scratch register.
+CHAIN_AGGS = ("sum", "min", "max", "count", "count_nonzero")
 
-def _kernel(x_ref, nrows_ref, sum_ref, sq_ref, mn_ref, mx_ref, l1_ref, nnz_ref,
-            acc_sum, acc_sq, acc_mn, acc_mx, acc_l1, acc_nnz, *, block_rows):
+#: Unary VUDFs safe to evaluate on an f32 tile inside the kernel body
+#: (pure float→float, no dtype-rule surprises).
+CHAIN_UNARIES = ("identity", "abs", "sq", "sqrt", "exp", "log", "log1p",
+                 "neg", "sigmoid", "floor", "ceil", "round", "sign")
+
+#: fused_summary's chain spec: (sum, sum-of-squares, min, max, L1, nnz).
+SUMMARY_CHAINS = (((), "sum"), (("sq",), "sum"), ((), "min"), ((), "max"),
+                  (("abs",), "sum"), ((), "count_nonzero"))
+
+
+def _unary_fn(name):
+    from ..core import vudf as vudf_mod  # deferred: keep kernels importable alone
+    return vudf_mod.unary(name).fn
+
+
+def _chain_kernel(x_ref, nrows_ref, *refs, chains, block_rows):
+    n_out = len(chains)
+    out_refs, accs = refs[:n_out], refs[n_out:]
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
-        acc_sum[...] = jnp.zeros_like(acc_sum)
-        acc_sq[...] = jnp.zeros_like(acc_sq)
-        acc_mn[...] = jnp.full_like(acc_mn, jnp.inf)
-        acc_mx[...] = jnp.full_like(acc_mx, -jnp.inf)
-        acc_l1[...] = jnp.zeros_like(acc_l1)
-        acc_nnz[...] = jnp.zeros_like(acc_nnz)
+        for (_, agg), acc in zip(chains, accs):
+            if agg == "min":
+                acc[...] = jnp.full_like(acc, jnp.inf)
+            elif agg == "max":
+                acc[...] = jnp.full_like(acc, -jnp.inf)
+            else:
+                acc[...] = jnp.zeros_like(acc)
 
     x = x_ref[...].astype(jnp.float32)
     # Rows beyond the true length are padding: mask them out of every stat.
     row_ids = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) + i * block_rows
     valid = row_ids < nrows_ref[0]
-    zero = jnp.zeros_like(x)
 
-    xz = jnp.where(valid, x, zero)
-    acc_sum[...] += xz.sum(axis=0)
-    acc_sq[...] += (xz * xz).sum(axis=0)
-    acc_l1[...] += jnp.abs(xz).sum(axis=0)
-    acc_nnz[...] += jnp.where(valid & (x != 0), 1.0, 0.0).sum(axis=0)
-    acc_mn[...] = jnp.minimum(acc_mn[...],
-                              jnp.where(valid, x, jnp.inf).min(axis=0))
-    acc_mx[...] = jnp.maximum(acc_mx[...],
-                              jnp.where(valid, x, -jnp.inf).max(axis=0))
+    for (unaries, agg), acc in zip(chains, accs):
+        v = x
+        for u in unaries:
+            v = _unary_fn(u)(v)
+        if agg == "sum":
+            acc[...] += jnp.where(valid, v, 0.0).sum(axis=0)
+        elif agg == "count":
+            acc[...] += jnp.where(valid, 1.0, 0.0).sum(axis=0)
+        elif agg == "count_nonzero":
+            acc[...] += jnp.where(valid & (v != 0), 1.0, 0.0).sum(axis=0)
+        elif agg == "min":
+            acc[...] = jnp.minimum(acc[...],
+                                   jnp.where(valid, v, jnp.inf).min(axis=0))
+        elif agg == "max":
+            acc[...] = jnp.maximum(acc[...],
+                                   jnp.where(valid, v, -jnp.inf).max(axis=0))
 
     @pl.when(i == pl.num_programs(0) - 1)
     def _writeback():
-        sum_ref[...] = acc_sum[...]
-        sq_ref[...] = acc_sq[...]
-        mn_ref[...] = acc_mn[...]
-        mx_ref[...] = acc_mx[...]
-        l1_ref[...] = acc_l1[...]
-        nnz_ref[...] = acc_nnz[...]
+        for o, acc in zip(out_refs, accs):
+            o[...] = acc[...]
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def fused_summary(x, *, block_rows: int = 0, interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("chains", "block_rows",
+                                             "interpret"))
+def fused_apply_agg(x, chains, *, block_rows: int = 0,
+                    interpret: bool | None = None):
     """Column statistics of a tall (n, p) matrix in one HBM pass.
 
-    Returns (sum, sumsq, min, max, l1, nnz) each of shape (p,), float32.
+    ``chains``: static tuple of ``((unary_name, ...), agg_name)`` pairs.
+    Returns one (p,) float32 array per chain.
     """
+    for unaries, agg in chains:
+        if agg not in CHAIN_AGGS:
+            raise ValueError(f"unsupported chain aggregation {agg!r}")
+        for u in unaries:
+            if u not in CHAIN_UNARIES:
+                raise ValueError(f"unsupported chain unary {u!r}")
     interpret = default_interpret() if interpret is None else interpret
     n, p = x.shape
     if not block_rows:
@@ -82,7 +123,8 @@ def fused_summary(x, *, block_rows: int = 0, interpret: bool | None = None):
     nrows = jnp.full((1,), n_true, jnp.int32)
 
     col = jax.ShapeDtypeStruct((p,), jnp.float32)
-    kernel = functools.partial(_kernel, block_rows=block_rows)
+    kernel = functools.partial(_chain_kernel, chains=chains,
+                               block_rows=block_rows)
     outs = pl.pallas_call(
         kernel,
         grid=grid,
@@ -90,9 +132,18 @@ def fused_summary(x, *, block_rows: int = 0, interpret: bool | None = None):
             pl.BlockSpec((block_rows, p), lambda i: (i, 0)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=[pl.BlockSpec((p,), lambda i: (0,))] * 6,
-        out_shape=[col] * 6,
-        scratch_shapes=[pltpu.VMEM((p,), jnp.float32)] * 6,
+        out_specs=[pl.BlockSpec((p,), lambda i: (0,))] * len(chains),
+        out_shape=[col] * len(chains),
+        scratch_shapes=[pltpu.VMEM((p,), jnp.float32)] * len(chains),
         interpret=interpret,
     )(xp, nrows)
-    return outs
+    return tuple(outs)
+
+
+def fused_summary(x, *, block_rows: int = 0, interpret: bool | None = None):
+    """Column statistics of a tall (n, p) matrix in one HBM pass.
+
+    Returns (sum, sumsq, min, max, l1, nnz) each of shape (p,), float32.
+    """
+    return fused_apply_agg(x, SUMMARY_CHAINS, block_rows=block_rows,
+                           interpret=interpret)

@@ -12,13 +12,13 @@ import jax
 from . import ref
 from .common import default_interpret
 from .flash_attention import flash_attention
-from .fused_apply_agg import fused_summary
+from .fused_apply_agg import fused_apply_agg, fused_summary
 from .gram import gram, xty
 from .kmeans_assign import kmeans_assign
 
 __all__ = [
-    "fused_summary", "gram", "xty", "kmeans_assign", "flash_attention",
-    "attention", "ref", "default_interpret",
+    "fused_apply_agg", "fused_summary", "gram", "xty", "kmeans_assign",
+    "flash_attention", "attention", "ref", "default_interpret",
 ]
 
 

@@ -39,8 +39,11 @@ _WHILE = re.compile(
 _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLED = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+# Operands may carry inline types depending on XLA version:
+#   dot(%lhs, %rhs)  or  dot(f32[64,128]{1,0} %lhs, f32[128,64]{1,0} %rhs)
 _DOT = re.compile(
-    r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\(%([\w\.\-]+),")
+    r"=\s*(\w+)\[([\d,]*)\][^\s]*\s+dot\("
+    r"(?:\w+\[([\d,]*)\][^\s]*\s+)?%([\w\.\-]+),")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _DEF = re.compile(r"^\s*%([\w\.\-]+) = (\w+)\[([\d,]*)\]")
 
@@ -113,7 +116,10 @@ def _parse(hlo: str):
             for d in dm.group(2).split(","):
                 if d:
                     out_n *= int(d)
-            lhs_dims = symbols.get(dm.group(3), [])
+            if dm.group(3) is not None:  # inline lhs type
+                lhs_dims = [int(d) for d in dm.group(3).split(",") if d]
+            else:
+                lhs_dims = symbols.get(dm.group(4), [])
             km = _CONTRACT.search(line)
             contracted = 1
             if km and lhs_dims:

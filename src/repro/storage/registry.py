@@ -25,6 +25,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..core import lowering as lowering_mod
 from ..core import matrix as matrix_mod
 from ..core.matrix import FMMatrix
 from . import format as fmt
@@ -33,6 +34,7 @@ _CONF = {
     "data_dir": None,       # pathlib.Path once configured / first used
     "prefetch": True,       # default for ooc execution (overridable per call)
     "prefetch_depth": 2,    # bounded-queue depth (2 = double buffering)
+    "direct_io": False,     # best-effort page-cache bypass on partition reads
 }
 
 _spill_ids = itertools.count()
@@ -41,12 +43,22 @@ _spill_ids = itertools.count()
 def set_conf(*, data_dir: Optional[str] = None,
              prefetch: Optional[bool] = None,
              prefetch_depth: Optional[int] = None,
-             io_partition_bytes: Optional[int] = None) -> dict:
-    """fm.set.conf: configure the storage tier.  Returns the live config.
+             io_partition_bytes: Optional[int] = None,
+             vmem_partition_bytes: Optional[int] = None,
+             backend: Optional[str] = None,
+             direct_io: Optional[bool] = None) -> dict:
+    """fm.set.conf: configure the storage tier + execution engine.
+    Returns the live config.
 
     ``io_partition_bytes`` adjusts the I/O-level partition budget engine-
     wide (core.matrix.IO_PARTITION_BYTES) — the knob the out-of-core
     examples/benchmarks turn to make matrices many partitions long.
+    ``vmem_partition_bytes`` adjusts the processor-level (second tier)
+    budget the plan IR schedules per-segment block rows from.
+    ``backend`` picks the lowering backend ('auto' | 'xla' | 'pallas',
+    core/lowering.py).  ``direct_io`` enables best-effort page-cache bypass
+    (posix_fadvise/madvise DONTNEED) after each disk partition read, so
+    benchmarks can measure genuinely cold reads.
     """
     if data_dir is not None:
         p = pathlib.Path(data_dir)
@@ -60,12 +72,28 @@ def set_conf(*, data_dir: Optional[str] = None,
         _CONF["prefetch_depth"] = int(prefetch_depth)
     if io_partition_bytes is not None:
         matrix_mod.IO_PARTITION_BYTES = int(io_partition_bytes)
-    return dict(_CONF, io_partition_bytes=matrix_mod.IO_PARTITION_BYTES)
+    if vmem_partition_bytes is not None:
+        matrix_mod.VMEM_PARTITION_BYTES = int(vmem_partition_bytes)
+    if backend is not None:
+        if backend != "auto" and backend not in lowering_mod.BACKENDS:
+            raise ValueError(
+                f"unknown backend {backend!r}; have "
+                f"{sorted(lowering_mod.BACKENDS)} + 'auto'")
+        lowering_mod.DEFAULT_BACKEND = backend
+    if direct_io is not None:
+        _CONF["direct_io"] = bool(direct_io)
+    return dict(_CONF, io_partition_bytes=matrix_mod.IO_PARTITION_BYTES,
+                vmem_partition_bytes=matrix_mod.VMEM_PARTITION_BYTES,
+                backend=lowering_mod.DEFAULT_BACKEND)
 
 
 def get_conf(key: str):
     if key == "io_partition_bytes":
         return matrix_mod.IO_PARTITION_BYTES
+    if key == "vmem_partition_bytes":
+        return matrix_mod.VMEM_PARTITION_BYTES
+    if key == "backend":
+        return lowering_mod.DEFAULT_BACKEND
     return _CONF[key]
 
 

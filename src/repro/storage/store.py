@@ -31,6 +31,7 @@ class MmapStore(MatrixStore):
         self.header = header
         self.mode = mode
         self.layout = _layout if _layout is not None else header.layout
+        self._fd: Optional[int] = None  # fadvise handle (direct_io mode)
         if _mm is not None:
             self._mm = _mm
         else:
@@ -53,9 +54,51 @@ class MmapStore(MatrixStore):
         return self._mm.T if self.layout == "col" else self._mm
 
     def block(self, start: int, stop: int):
+        if self._direct_io():
+            # Cache-bypass mode: materialize the partition, then tell the
+            # kernel to drop its pages so the next pass re-reads from the
+            # device (cold-read benchmarking; fm.set_conf(direct_io=True)).
+            if self.layout == "col":
+                out = np.ascontiguousarray(self._mm[:, start:stop].T)
+            else:
+                out = np.array(self._mm[start:stop])
+            self.drop_cache(start, stop)
+            return out
         if self.layout == "col":
             return self._mm[:, start:stop].T
         return self._mm[start:stop]
+
+    @staticmethod
+    def _direct_io() -> bool:
+        from . import registry  # deferred: registry imports core at load
+        return bool(registry.get_conf("direct_io"))
+
+    def drop_cache(self, start: Optional[int] = None,
+                   stop: Optional[int] = None):
+        """Best-effort page-cache eviction of logical rows [start, stop)
+        (or the whole body) via ``posix_fadvise(DONTNEED)``.
+
+        'col'-layout stores interleave every logical row across the file,
+        so a row range degrades to dropping the whole body.  No-op on
+        platforms without posix_fadvise (macOS)."""
+        fadvise = getattr(os, "posix_fadvise", None)
+        if fadvise is None or self._mm is None:  # pragma: no cover
+            return
+        h = self.header
+        itemsize = np.dtype(h.dtype).itemsize
+        if start is None or stop is None or self.layout == "col":
+            offset, length = h.body_offset, self._mm.size * itemsize
+        else:
+            row_bytes = self._mm.shape[1] * itemsize
+            offset = h.body_offset + start * row_bytes
+            length = (stop - start) * row_bytes
+        try:
+            if self._fd is None:
+                self._fd = os.open(self.path, os.O_RDONLY)
+            os.posix_fadvise(self._fd, offset, length,
+                             os.POSIX_FADV_DONTNEED)
+        except OSError:  # pragma: no cover - best effort by design
+            pass
 
     def nbytes(self) -> int:
         return int(self._mm.size) * self._mm.dtype.itemsize
@@ -87,6 +130,12 @@ class MmapStore(MatrixStore):
 
     def close(self):
         """Flush and drop the mapping (further reads fault).  Idempotent."""
+        if self._fd is not None:
+            try:
+                os.close(self._fd)
+            except OSError:  # pragma: no cover
+                pass
+            self._fd = None
         if self._mm is None:
             return
         self.flush()

@@ -18,6 +18,8 @@ from repro.configs.base import SHAPES
 from repro.models import build, input_specs, zoo
 from repro.models.base import tree_unbox
 
+pytestmark = pytest.mark.slow  # ~90s: full arch sweep forward+train
+
 RNG = np.random.default_rng(0)
 KEY = jax.random.PRNGKey(0)
 

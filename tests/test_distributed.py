@@ -13,6 +13,8 @@ import pytest
 
 from repro.distributed.sharding import resolve
 
+pytestmark = pytest.mark.slow  # ~20s: subprocess mesh smoke runs
+
 
 class _FakeMesh:
     def __init__(self, shape, names):

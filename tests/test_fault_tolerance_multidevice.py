@@ -15,6 +15,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow  # ~100s: subprocess multi-device trainings
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -38,8 +41,8 @@ def test_elastic_remesh_restore(tmp_path):
         from repro.runtime import replan_mesh, rescale_grad_accum
 
         # "Before failure": 8 devices, (4, 2) mesh, params FSDP+TP sharded.
-        mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                               axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_host_mesh
+        mesh_a = make_host_mesh(8, model=2)
         w = jnp.arange(64.0 * 32).reshape(64, 32)
         sh_a = NamedSharding(mesh_a, P("data", "model"))
         tree = {{"w": jax.device_put(w, sh_a),
@@ -69,11 +72,14 @@ def test_int8_crosspod_gradient_reduction():
         import json, functools
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
+        try:
+            from jax import shard_map
+        except ImportError:  # jax < 0.6 keeps it under experimental
+            from jax.experimental.shard_map import shard_map
         from repro.optim import compression
+        from repro.launch.mesh import mesh_axis_kwargs
 
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = jax.make_mesh((4,), ("pod",), **mesh_axis_kwargs(1))
         rng = np.random.default_rng(0)
         # per-pod gradients (leading axis = pod shard)
         g_all = jnp.asarray(rng.normal(size=(4, 256)) * 1e-3, jnp.float32)

@@ -1,0 +1,235 @@
+"""Lowering-layer tests: plan IR segmentation, backend parity, dispatch.
+
+The contract under test (ISSUE 2 acceptance): the pallas backend — running
+in interpret mode on this CPU container, Mosaic on TPU — must produce the
+same results as the xla backend for the fused summary-statistics, Gram and
+k-means/groupby workloads, dispatching through the ENGINE (materialize →
+plan IR → lowering → kernels/), not standalone kernel calls; and the plan
+cache must key on backend + both partition levels so compile-once/stream-
+many still holds per backend.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core import matrix as matrix_mod
+from repro.core.fusion import Plan
+from repro.core.lowering import resolve_backend
+
+RNG = np.random.default_rng(7)
+
+DTYPES = [np.float32, "bfloat16", np.int32]
+
+
+def _tol(dtype):
+    if str(dtype) == "bfloat16":
+        return dict(rtol=2e-2, atol=2e-2)
+    return dict(rtol=1e-4, atol=1e-5)
+
+
+def _data(n, p, dtype):
+    a = RNG.normal(size=(n, p)) * 3.0
+    if np.issubdtype(np.dtype(dtype) if dtype != "bfloat16" else np.float32,
+                     np.integer):
+        return a.astype(np.int32)
+    return a.astype(np.float32)  # bf16 cast happens in conv below
+
+
+def _fmx(a, dtype):
+    if dtype == "bfloat16":
+        return fm.conv_R2FM(jnp.asarray(a, jnp.bfloat16))
+    return fm.conv_R2FM(a.astype(dtype))
+
+
+def _summary_outs(X):
+    return (fm.colSums(X), fm.colSums(fm.abs_(X)), fm.colSums(X ** 2),
+            fm.colMins(X), fm.colMaxs(X), fm.agg_col(X, "count_nonzero"))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("mode", ["whole", "stream"])
+def test_summary_chain_parity(dtype, mode):
+    """Fused apply→agg.col chains: pallas-interpret == xla per backend."""
+    a = _data(1000, 5, dtype)
+    X = _fmx(a, dtype)
+    res = {}
+    for backend in ("xla", "pallas"):
+        outs = fm.materialize(*_summary_outs(X), mode=mode, backend=backend)
+        res[backend] = [fm.as_np(o).reshape(-1) for o in outs]
+    for ox, op in zip(res["xla"], res["pallas"]):
+        np.testing.assert_allclose(op.astype(np.float64),
+                                   ox.astype(np.float64), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+@pytest.mark.parametrize("mode", ["whole", "stream"])
+def test_gram_parity(dtype, mode):
+    a = _data(800, 6, np.float32)
+    X = _fmx(a, dtype)
+    (gx,) = fm.materialize(fm.crossprod(X), mode=mode, backend="xla")
+    (gp,) = fm.materialize(fm.crossprod(X), mode=mode, backend="pallas")
+    np.testing.assert_allclose(fm.as_np(gp), fm.as_np(gx), **_tol(dtype))
+
+
+def test_xty_parity():
+    a = _data(600, 5, np.float32)
+    b = _data(600, 3, np.float32)
+    X, Y = fm.conv_R2FM(a), fm.conv_R2FM(b)
+    (cx,) = fm.materialize(fm.crossprod(X, Y), backend="xla")
+    (cp,) = fm.materialize(fm.crossprod(X, Y), backend="pallas")
+    np.testing.assert_allclose(fm.as_np(cp), fm.as_np(cx), rtol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["whole", "stream"])
+def test_kmeans_groupby_parity(mode):
+    """The Lloyd pattern (distances → which.min → groupby sums/counts +
+    objective) through both backends, multi-partition in stream mode."""
+    rng = np.random.default_rng(0)
+    true_c = rng.normal(size=(4, 6)) * 10          # well-separated clusters
+    a = np.concatenate(
+        [c + rng.normal(size=(300, 6)) for c in true_c]).astype(np.float32)
+    centers = (true_c + rng.normal(size=true_c.shape)).astype(np.float32)
+    X = fm.conv_R2FM(a)
+
+    def lloyd(backend):
+        D = fm.inner_prod(X, centers.T, "squared_diff", "sum")
+        labels = fm.which_min_row(D)
+        sums = fm.rowsum(X, labels, 4)
+        counts = fm.table_(labels, 4)
+        wss = fm.sum_(fm.rowMins(D))
+        outs = fm.materialize(sums, counts, wss, labels, mode=mode,
+                              backend=backend)
+        return [fm.as_np(o) for o in outs]
+
+    sx, cx, wx, lx = lloyd("xla")
+    sp, cp, wp, lp = lloyd("pallas")
+    np.testing.assert_array_equal(lp, lx)
+    np.testing.assert_array_equal(cp, cx)
+    np.testing.assert_allclose(sp, sx, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(wp, wx, rtol=1e-4)
+
+
+def test_int_dtype_parity():
+    """Integer sources are ineligible for f32 kernel accumulation; both
+    backends must still agree exactly (pallas falls back to generic eval)."""
+    a = RNG.integers(-50, 50, size=(500, 4)).astype(np.int32)
+    X = fm.conv_R2FM(a)
+    outs_x = fm.materialize(fm.colSums(X), fm.colMaxs(X), backend="xla")
+    outs_p = fm.materialize(fm.colSums(X), fm.colMaxs(X), backend="pallas")
+    for ox, op in zip(outs_x, outs_p):
+        np.testing.assert_array_equal(fm.as_np(op), fm.as_np(ox))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: the ENGINE must reach the kernels, not just standalone calls
+# ---------------------------------------------------------------------------
+
+def test_engine_dispatches_to_kernels():
+    a = _data(512, 4, np.float32)
+    X = fm.conv_R2FM(a)
+    plan = Plan([fm.crossprod(X).m, fm.colSums(fm.abs_(X)).m])
+    prog = plan.program("pallas")
+    kernels = sorted(u.kernel for u in prog.kernel_units)
+    assert kernels == ["fused_apply_agg", "gram"], prog.describe()
+    # xla lowering of the same plan has no kernel units
+    assert plan.program("xla").kernel_units == []
+
+
+def test_apply_agg_chains_share_one_source_read():
+    """N agg.col chains over one matrix fuse into ONE kernel call."""
+    a = _data(512, 4, np.float32)
+    X = fm.conv_R2FM(a)
+    plan = Plan([o.m for o in _summary_outs(X)])
+    units = plan.program("pallas").kernel_units
+    assert len(units) == 1
+    assert len(units[0].chains) == 6
+
+
+def test_kmeans_pattern_single_kernel():
+    a = _data(512, 4, np.float32)
+    X = fm.conv_R2FM(a)
+    centers = RNG.normal(size=(3, 4)).astype(np.float32)
+    D = fm.inner_prod(X, centers.T, "squared_diff", "sum")
+    labels = fm.which_min_row(D)
+    plan = Plan([fm.rowsum(X, labels, 3).m, fm.table_(labels, 3).m,
+                 fm.sum_(fm.rowMins(D)).m, labels.m])
+    units = plan.program("pallas").kernel_units
+    assert [u.kernel for u in units] == ["kmeans_assign"], \
+        plan.program("pallas").describe()
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: backend + both partition levels in the key
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_misses_on_backend_change():
+    mz.clear_plan_cache()
+    a = _data(4096, 4, np.float32)
+    X = fm.conv_R2FM(a)
+    fm.materialize(fm.colSums(X), backend="xla")
+    assert len(mz._PLANS) == 1
+    fm.materialize(fm.colSums(X), backend="pallas")
+    assert len(mz._PLANS) == 2  # backend is part of the key
+    fm.materialize(fm.colSums(X), backend="pallas")
+    assert len(mz._PLANS) == 2  # … and the second pallas run is a hit
+    mz.clear_plan_cache()
+
+
+def test_plan_cache_misses_on_vmem_budget_change():
+    """The processor-level schedule is the second partition tier of the
+    cache key: retuning the VMEM budget must retrace, not reuse."""
+    mz.clear_plan_cache()
+    old = matrix_mod.VMEM_PARTITION_BYTES
+    try:
+        a = _data(8192, 4, np.float32)
+        X = fm.conv_R2FM(a)
+        fm.materialize(fm.colSums(X), backend="pallas")
+        assert len(mz._PLANS) == 1
+        fm.set_conf(vmem_partition_bytes=64 * 1024)
+        (s,) = fm.materialize(fm.colSums(X), backend="pallas")
+        assert len(mz._PLANS) == 2
+        np.testing.assert_allclose(fm.as_np(s).reshape(-1), a.sum(0),
+                                   rtol=1e-4)
+    finally:
+        matrix_mod.VMEM_PARTITION_BYTES = old
+        mz.clear_plan_cache()
+
+
+def test_compile_once_stream_many_per_backend():
+    """k-means-style iteration: new centers (Smalls) reuse one cached plan
+    per backend — the compile-once/stream-many contract."""
+    mz.clear_plan_cache()
+    a = _data(2048, 4, np.float32)
+    X = fm.conv_R2FM(a)
+    for backend in ("xla", "pallas"):
+        for it in range(3):
+            centers = RNG.normal(size=(3, 4)).astype(np.float32)
+            D = fm.inner_prod(X, centers.T, "squared_diff", "sum")
+            labels = fm.which_min_row(D)
+            fm.materialize(fm.rowsum(X, labels, 3), fm.table_(labels, 3),
+                           fm.sum_(fm.rowMins(D)), labels, backend=backend)
+    assert len(mz._PLANS) == 2  # one entry per backend, not per iteration
+    mz.clear_plan_cache()
+
+
+def test_resolve_backend():
+    assert resolve_backend("xla") == "xla"
+    assert resolve_backend("pallas") == "pallas"
+    assert resolve_backend("auto") in ("xla", "pallas")
+    with pytest.raises(ValueError):
+        resolve_backend("tpu2000")
+
+
+def test_set_conf_backend_roundtrip():
+    conf = fm.set_conf(backend="pallas")
+    try:
+        assert conf["backend"] == "pallas"
+        a = _data(256, 3, np.float32)
+        X = fm.conv_R2FM(a)
+        (s,) = fm.materialize(fm.colSums(X))  # default now pallas
+        np.testing.assert_allclose(fm.as_np(s).reshape(-1), a.sum(0),
+                                   rtol=1e-4)
+    finally:
+        fm.set_conf(backend="auto")

@@ -231,6 +231,31 @@ def test_ooc_disk_equals_memory_kmeans(data_dir):
     assert abs(r_disk.wss - r_mem.wss) <= 1e-4 * max(1.0, abs(r_mem.wss))
 
 
+@pytest.mark.parametrize("layout", ["row", "col"])
+def test_direct_io_reads_correct_and_cold(data_dir, layout):
+    """direct_io=True (cache-bypass benchmarking) must not change results:
+    blocks are materialized copies and the pages are dropped after the
+    read (best-effort posix_fadvise DONTNEED)."""
+    A = _arr(3000, 4)
+    Xd = fm.load_dense_matrix(A, f"dio_{layout}", layout=layout)
+    fm.set_conf(direct_io=True)
+    try:
+        blk = Xd.m.store.block(100, 200)
+        assert isinstance(blk, np.ndarray) and not isinstance(blk, np.memmap)
+        np.testing.assert_array_equal(blk, A[100:200])
+        G, s = fm.materialize(fm.crossprod(Xd), fm.colSums(Xd))
+        np.testing.assert_allclose(
+            fm.as_np(G), A.T.astype(np.float64) @ A.astype(np.float64),
+            rtol=1e-4)
+        np.testing.assert_allclose(fm.as_np(s).reshape(-1), A.sum(0),
+                                   rtol=1e-4)
+    finally:
+        fm.set_conf(direct_io=False)
+    # normal mode again serves lazy views
+    blk2 = Xd.m.store.block(0, 10)
+    np.testing.assert_array_equal(np.asarray(blk2), A[:10])
+
+
 def test_spill_to_disk_output(data_dir):
     """save='disk' long-dimension outputs stream into an on-disk matrix and
     equal the in-memory result."""

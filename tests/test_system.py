@@ -11,6 +11,8 @@ import pytest
 
 from repro.core import fm
 
+pytestmark = pytest.mark.slow  # ~25s: end-to-end user journeys
+
 
 def test_flashr_user_journey():
     rng = np.random.default_rng(0)
