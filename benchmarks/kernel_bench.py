@@ -48,6 +48,7 @@ def engine_dispatch():
     rng = np.random.default_rng(0)
     A = rng.normal(size=(4096, 16)).astype(np.float32)
     X = fm.conv_R2FM(A)
+    wv = fm.conv_R2FM(np.abs(rng.normal(size=4096)).astype(np.float32))
     C = rng.normal(size=(8, 16)).astype(np.float32)
 
     def lloyd_outs():
@@ -56,9 +57,14 @@ def engine_dispatch():
         return (fm.rowsum(X, labels, 8), fm.table_(labels, 8),
                 fm.sum_(fm.rowMins(D)), labels)
 
+    def wgram_outs():
+        # The IRLS XᵀWX segment (algorithms/glm.py) — must show 'wgram'.
+        return (fm.crossprod(fm.mapply_col(X, wv, "mul"), X),)
+
     rows = []
     for name, outs_fn in (("summary", lambda: summary_outs(fm, X)),
                           ("gram", lambda: (fm.crossprod(X),)),
+                          ("wgram", wgram_outs),
                           ("kmeans", lloyd_outs)):
         plan = Plan([o.m for o in outs_fn()])
         t = time_call(lambda: fm.materialize(*outs_fn(), backend="pallas"),

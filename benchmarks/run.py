@@ -18,10 +18,11 @@ def main(argv=None) -> None:
                     help="skip fig8 device-scaling subprocesses")
     args = ap.parse_args(argv)
 
-    from . import (fusion_ablation, kernel_bench, paper_figures, scaling,
-                   storage_bench)
+    from . import (algorithms_bench, fusion_ablation, kernel_bench,
+                   paper_figures, scaling, storage_bench)
     fns = (list(paper_figures.ALL) + list(kernel_bench.ALL)
-           + list(fusion_ablation.ALL) + list(storage_bench.ALL))
+           + list(fusion_ablation.ALL) + list(storage_bench.ALL)
+           + list(algorithms_bench.ALL))
     if not args.skip_slow:
         fns += list(scaling.ALL)
     if args.only:

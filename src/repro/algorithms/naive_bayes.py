@@ -1,0 +1,113 @@
+"""Naive Bayes classifiers (paper §IV-A) on GenOps.
+
+Training is the ``groupby.row`` showcase: every per-class moment is one
+grouped sink, and ALL of them co-materialize in ONE streaming pass over X —
+labels fuse straight into the scatter-add exactly like k-means.
+
+Gaussian NB (continuous features):
+
+    cnt  <- table(y)                            # per-class counts   (sink)
+    s1   <- rowsum(X, y)                        # per-class sums     (sink)
+    s2   <- rowsum(X * X, y)                    # per-class sq-sums  (sink)
+    mu   <- s1 / cnt;  var <- s2 / cnt - mu^2   # small tier
+
+Multinomial NB (count features, e.g. term counts): per-class feature
+totals via rowsum.  Integer GenOp chains over a count matrix (e.g.
+``colSums(X)``) lower onto the ``fused_apply_agg`` kernel with an exact
+i32 accumulator (the acc-dtype widening; see
+core/lowering._match_apply_agg) instead of falling back to the generic
+trace.
+
+Prediction is one row-local pass: per-class log-likelihood columns, cbind,
+which.max — the same shape as the k-means assignment step, so it fuses and
+streams on any tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import fm
+
+_VAR_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class NaiveBayesModel:
+    kind: str                  # 'gaussian' | 'multinomial'
+    class_log_prior: np.ndarray    # (k,)
+    # gaussian: per-class means/variances; multinomial: log feature probs.
+    means: np.ndarray | None       # (k, p)
+    variances: np.ndarray | None   # (k, p)
+    feature_log_prob: np.ndarray | None  # (k, p)
+    class_count: np.ndarray        # (k,)
+
+
+def naive_bayes(X: fm.FM, y: fm.FM, num_classes: int, *,
+                kind: str = "gaussian", alpha: float = 1.0,
+                mode: str = "auto", fuse: bool = True,
+                backend=None) -> NaiveBayesModel:
+    """Train on an n×p matrix and an n×1 integer label vector (0-based),
+    both row-aligned on any storage tier."""
+    n, p = X.shape
+    k = int(num_classes)
+    if kind == "gaussian":
+        cnt, s1, s2 = fm.materialize(
+            fm.table_(y, k),
+            fm.rowsum(X, y, k),
+            fm.rowsum(X * X, y, k),
+            mode=mode, fuse=fuse, backend=backend)
+        c = fm.as_np(cnt).reshape(-1).astype(np.float64)
+        safe = np.maximum(c, 1.0).reshape(-1, 1)
+        mu = fm.as_np(s1).astype(np.float64) / safe
+        var = fm.as_np(s2).astype(np.float64) / safe - mu ** 2
+        var = np.maximum(var, _VAR_EPS)
+        return NaiveBayesModel(
+            kind=kind, class_log_prior=np.log(np.maximum(c, 1e-300) / n),
+            means=mu, variances=var, feature_log_prob=None, class_count=c)
+    if kind == "multinomial":
+        # Per-class feature totals + class counts, one pass.  (Integer
+        # apply→agg chains like colSums(X_int) dispatch to the i32
+        # fused_apply_agg path — covered by tests/test_lowering.py.)
+        cnt, F = fm.materialize(
+            fm.table_(y, k),
+            fm.rowsum(X, y, k),
+            mode=mode, fuse=fuse, backend=backend)
+        c = fm.as_np(cnt).reshape(-1).astype(np.float64)
+        Fc = fm.as_np(F).astype(np.float64) + alpha
+        flp = np.log(Fc) - np.log(Fc.sum(1, keepdims=True))
+        return NaiveBayesModel(
+            kind=kind, class_log_prior=np.log(np.maximum(c, 1e-300) / n),
+            means=None, variances=None, feature_log_prob=flp, class_count=c)
+    raise ValueError(f"unknown kind {kind!r}; have gaussian|multinomial")
+
+
+def nb_score(model: NaiveBayesModel, X: fm.FM) -> fm.FM:
+    """Per-class log-likelihood columns (n × k, LAZY row-local chain)."""
+    k = model.class_count.shape[0]
+    cols = []
+    if model.kind == "gaussian":
+        for j in range(k):
+            mu = model.means[j].astype(np.float32)
+            var = model.variances[j].astype(np.float32)
+            Z = fm.mapply_row(X, mu, "sub")
+            q = fm.rowSums(fm.mapply_row(Z * Z, 2.0 * var, "div"))
+            const = float(model.class_log_prior[j]
+                          - 0.5 * np.log(2.0 * np.pi * model.variances[j]).sum())
+            cols.append(const - q)
+    else:
+        # scores = X %*% t(log P) + log prior: X (possibly int) casts
+        # lazily into the tall·small inner product.
+        W = model.feature_log_prob.astype(np.float32).T      # p × k
+        return fm.mapply_row(X @ W,
+                             model.class_log_prior.astype(np.float32), "add")
+    return fm.cbind(*cols)
+
+
+def nb_predict(model: NaiveBayesModel, X: fm.FM, *, mode: str = "auto",
+               fuse: bool = True, backend=None) -> fm.FM:
+    """Predicted class labels (n × 1, int32), one fused row-local pass."""
+    labels = fm.which_max_row(nb_score(model, X))
+    (out,) = fm.materialize(labels, mode=mode, fuse=fuse, backend=backend)
+    return out

@@ -64,6 +64,26 @@ class Plan:
             elif getattr(n, "cached_store", None) is not None:
                 self.sources.append((n, n.cached_store))
 
+        # Staging groups: every GenOp call wraps its own LeafNode, so a DAG
+        # referencing one physical matrix through k leaves (crossprod(X) +
+        # colSums(X), the IRLS weighted-gram pair, ...) would read each
+        # partition k times in stream/ooc modes.  Group source nodes by the
+        # identity of their physical matrix; the executor stages one block
+        # per group and the lowered program fans it out to every alias.
+        self.source_groups: list[list[Node]] = []
+        self.source_aliases: dict[int, int] = {}
+        by_mat: dict[int, int] = {}
+        for node, mat in self.sources:
+            gi = by_mat.get(id(mat))
+            if gi is None:
+                by_mat[id(mat)] = len(self.source_groups)
+                self.source_groups.append([node])
+            else:
+                self.source_groups[gi].append(node)
+        for group in self.source_groups:
+            for node in group:
+                self.source_aliases[node.id] = group[0].id
+
         self.long_dim = long_dim_of(self.order)
         for node, mat in self.sources:
             if mat.shape[0] != self.long_dim and max(mat.shape) != 1:
@@ -113,11 +133,25 @@ class Plan:
             self._programs[backend] = prog
         return prog
 
+    def staged_sources(self, sources=None) -> list[tuple[int, FMMatrix]]:
+        """One ``(canonical_node_id, matrix)`` pair per staging group — the
+        unit the executor reads/stages per partition.  ``sources`` may
+        override the matrices positionally (a borrowed cached plan executes
+        with the new caller's data)."""
+        if sources is None:
+            sources = [m for _, m in self.sources]
+        id_to_mat = {node.id: mat
+                     for (node, _), mat in zip(self.sources, sources)}
+        return [(group[0].id, id_to_mat[group[0].id])
+                for group in self.source_groups]
+
     def signature(self) -> str:
         """Structural identity: two DAG cuts with the same signature can
         share one compiled plan (the compile-once/stream-many contract)."""
         parts = [f"L{self.long_dim}"]
         pos = {n.id: i for i, n in enumerate(self.order)}
+        group_of = {n.id: gi for gi, group in enumerate(self.source_groups)
+                    for n in group}
         for n in self.order:
             ps = []
             # sources are cut points: their parents are outside this plan
@@ -146,8 +180,12 @@ class Plan:
             ng = getattr(n, "num_groups", "")
             role = "q" if self._is_source(n) else ("s" if n.is_sink else "m")
             sv = n.save or ""
+            # Staging-group index: two cuts that alias their sources
+            # differently (one matrix read through two leaves vs two distinct
+            # matrices) must not share a compiled executable.
+            grp = f"g{group_of[n.id]}" if n.id in group_of else ""
             parts.append(f"{role}|{n.kind}|{n.shape}|{n.dtype.name}|{fname}"
-                         f"|{extra}|{ng}|{sv}|{','.join(ps)}")
+                         f"|{extra}|{ng}|{sv}|{grp}|{','.join(ps)}")
         return ";".join(parts)
 
     def result_nodes(self):
@@ -195,7 +233,10 @@ class Plan:
                          for n in self.order if not self._is_source(n)))
 
     def bytes_in(self) -> int:
-        return int(sum(mat.nbytes() for _, mat in self.sources))
+        """Bytes actually read per pass: one read per STAGING GROUP — a
+        matrix referenced through several leaves is staged once (see
+        source_groups), so it counts once."""
+        return int(sum(mat.nbytes() for _, mat in self.staged_sources()))
 
     def bytes_out(self) -> int:
         total = 0

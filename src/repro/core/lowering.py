@@ -118,8 +118,14 @@ class LoweredProgram:
         Returns (sink_partials, row_local_outputs) for this partition;
         partials start from each sink's identity so ``combine`` can merge
         them into accumulators of the same structure.
+
+        ``source_blocks`` holds ONE staged block per physical matrix
+        (keyed by the staging group's canonical node id); every aliasing
+        source node sees the same traced value, so a matrix referenced
+        through k leaves is read and transferred once per partition.
         """
-        values = dict(source_blocks)
+        values = {nid: source_blocks[canon]
+                  for nid, canon in self.plan.source_aliases.items()}
         partials = {n.id: n.identity() for n in self.plan.sinks}
         for unit in self.units:
             unit.run(values, partials, smalls, offset)
@@ -209,6 +215,29 @@ class ContractionUnit(_KernelUnit):
         else:
             part = gram_mod.xty(x, values[self.right_id],
                                 block_rows=min(self.block_rows, x.shape[0]))
+        self._merge(partials, self.node, part)
+
+
+class WeightedGramUnit(_KernelUnit):
+    """The IRLS weighted-Gram pattern — ``mapply.col(X, w, mul)`` feeding an
+    (mul, sum) contraction of the same X — → one kernels.wgram call: the
+    reweighted rows never exist outside the VMEM tile."""
+
+    def __init__(self, node: InnerProdContractNode, x_id: int, w_id: int,
+                 block_rows: int):
+        super().__init__("wgram", block_rows)
+        self.node = node
+        self.x_id = x_id
+        self.w_id = w_id
+
+    def describe(self) -> str:
+        return f"pallas:{self.kernel} root={self.node.name}"
+
+    def run(self, values, partials, smalls, offset):
+        from ..kernels import weighted_gram as wg
+        x = values[self.x_id]
+        w = values[self.w_id]
+        part = wg.wgram(x, w, block_rows=min(self.block_rows, x.shape[0]))
         self._merge(partials, self.node, part)
 
 
@@ -341,12 +370,72 @@ def _match_contractions(plan, ir, claimed):
     return units
 
 
+def _match_weighted_gram(plan, ir, claimed):
+    """crossprod(X * w, X) — a contraction segment that absorbed exactly one
+    ``mapply_col(·, ·, mul)`` reweighting of the contraction's own source —
+    → kernels.wgram.  XᵀWX is symmetric in which operand carries the
+    weights, so both orientations match."""
+    units = {}
+    for seg in ir.segments:
+        if seg.sid in claimed or seg.kind != "contraction":
+            continue
+        if len(seg.nodes) != 2:
+            continue
+        m, node = seg.nodes
+        if not isinstance(node, InnerProdContractNode) or \
+                not isinstance(m, MapNode) or m.kind != "mapply_col":
+            continue
+        if node.mul.name != "mul" or node.add.name != "sum":
+            continue
+        if m.fn_info["vudf"].name != "mul":
+            continue
+        if not _f32_acc(node):
+            continue
+        left, right = node.parents
+        other = right if left is m else left if right is m else None
+        if other is None or isinstance(other, Small):
+            continue
+        xx, ww = m.parents
+        if isinstance(xx, Small) or isinstance(ww, Small):
+            continue
+        if not _same_source(xx, other):
+            continue  # weights against a different matrix: not XᵀWX
+        if not all(dtypes.is_floating(p.dtype) for p in (xx, ww, other)):
+            continue
+        claimed.add(seg.sid)
+        units[seg.sid] = WeightedGramUnit(node, xx.id, ww.id, seg.block_rows)
+    return units
+
+
+def _chain_acc_dtype(node) -> str | None:
+    """Kernel accumulator dtype for an agg.col sink, or None if ineligible.
+
+    Float accumulation runs in f32 (f64 keeps the generic trace's full
+    precision); integer accumulation runs in i32 — EXACT for integer
+    sums/counts, unlike the old f32-only kernel, which is what makes int
+    apply→agg chains eligible (ROADMAP item)."""
+    acc = dtypes.canon(node.acc_dtype)
+    if acc == jnp.dtype(jnp.float32):
+        return "float32"
+    if acc.kind == "i":
+        return "int32"
+    return None
+
+
+def _chain_source_ok(source) -> bool:
+    """int64/f64 stay on the generic trace (no TPU-native 64-bit); bool
+    sources have no meaningful sum/min/max algebra in the kernel."""
+    dt = dtypes.canon(source.dtype)
+    return dt.kind in ("i", "f") and dt.itemsize <= 4
+
+
 def _match_apply_agg(plan, ir, claimed):
     _AGG_MAP = {"sum": "sum", "min": "min", "max": "max",
                 "count": "count", "count_nonzero": "count_nonzero"}
     from ..kernels.fused_apply_agg import CHAIN_UNARIES
     # Group eligible chains by their shared source so N statistics become
-    # one kernel call (one read of X).
+    # one kernel call (one read of X).  Chains carry a per-chain accumulator
+    # dtype, so float stats and exact integer counts share the call.
     by_source: dict[int, list] = {}
     for seg in ir.segments:
         if seg.sid in claimed or seg.kind != "sink_update":
@@ -354,17 +443,17 @@ def _match_apply_agg(plan, ir, claimed):
         node = seg.root
         if node.kind != "agg_col" or node.agg.name not in _AGG_MAP:
             continue
-        if not _f32_acc(node) and node.agg.name not in ("count",
-                                                        "count_nonzero"):
+        acc = _chain_acc_dtype(node)
+        if acc is None:
             continue
         unaries = _is_pure_unary_chain(seg)
         if unaries is None or any(u not in CHAIN_UNARIES for u in unaries):
             continue
         source = seg.nodes[0].parents[0]
-        if isinstance(source, Small) or not dtypes.is_floating(source.dtype):
+        if isinstance(source, Small) or not _chain_source_ok(source):
             continue
         by_source.setdefault(_source_key(source), []).append(
-            (seg, source.id, (unaries, _AGG_MAP[node.agg.name])))
+            (seg, source.id, (unaries, _AGG_MAP[node.agg.name], acc)))
     units = {}
     for entries in by_source.values():
         segs = [seg for seg, _, _ in entries]
@@ -490,7 +579,8 @@ class PallasBackend(Backend):
     for the rest.  Matchers run in order and claim segments by sid."""
 
     name = "pallas"
-    MATCHERS = [_match_kmeans, _match_contractions, _match_apply_agg]
+    MATCHERS = [_match_kmeans, _match_weighted_gram, _match_contractions,
+                _match_apply_agg]
 
     def lower(self, plan, ir) -> LoweredProgram:
         claimed: set[int] = set()

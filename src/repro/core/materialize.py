@@ -202,13 +202,15 @@ def _pick_mode_src(sources, mode: str) -> str:
 
 
 def _execute_whole(plan: Plan, prog, mesh, sources, smalls):
+    # One staged array per physical matrix; leaves aliasing it share the
+    # buffer through plan.source_aliases (see LoweredProgram._step).
     blocks = {}
-    for (node, _), mat in zip(plan.sources, sources):
+    for nid, mat in plan.staged_sources(sources):
         data = mat.logical_data()
         arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
         if mesh is not None and mat.shape[0] == plan.long_dim:
             arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
-        blocks[node.id] = arr
+        blocks[nid] = arr
     offset = jnp.zeros((), jnp.int32)
     partials, outputs = prog.step(blocks, smalls, offset)
     accs = prog.combine(plan.init_accs(), partials)
@@ -263,7 +265,9 @@ def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
         elif target == "host":
             host_bufs[x.id] = np.empty((x.nrow, x.ncol), dtypes.np_equiv(x.dtype))
 
-    src_pairs = [(node.id, mat) for (node, _), mat in zip(plan.sources, sources)]
+    # Deduped staging: one disk/RAM read + device_put per PHYSICAL matrix
+    # per partition, however many leaves reference it (ROADMAP open item).
+    src_pairs = plan.staged_sources(sources)
     if prefetch is None:
         # Default on for slow-tier sources; a single-partition stream has
         # nothing to overlap, so skip the thread.

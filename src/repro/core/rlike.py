@@ -6,9 +6,12 @@ operator vocabulary; every method lowers to a GenOp, so an arbitrary chain
 of these calls builds one lazy DAG that `fm.materialize` fuses.
 
     >>> X = fm.runif_matrix(1_000_000, 16)
-    >>> Z = (X - colMeans(X)) / colSds(X)     # lazy: 5 GenOps, one DAG
+    >>> Z = (X - colMeans(X)) / colSds(X)      # standardize (lazy GenOps)
     >>> G = crossprod(Z)                       # Gram sink
-    >>> (G,) = fm.materialize(G)               # one fused pass over X
+    >>> (G,) = fm.materialize(G)               # one fused pass computes G
+
+(colMeans/colSds are sink-backed: each runs one moment pass; the
+standardized Z itself stays virtual and fuses into the Gram pass.)
 
 All functions accept and return `FM`.  `conv_FM2R` drops to numpy.
 """
@@ -72,17 +75,29 @@ class FM:
     def _recycle(self, other: "FM", op):
         """R-style recycling of a vector across a matrix: a length-ncol
         vector applies per row (mapply.row); length-nrow per column
-        (mapply.col)."""
+        (mapply.col).
+
+        Ambiguity rule: when the matrix is square (nrow == ncol), a
+        length-n vector pairs with the ROW INDEX (mapply.col) — R stores
+        matrices column-major, so recycling walks down each column.
+        """
         n = max(other.shape)
         if min(other.shape) != 1:
-            raise ValueError(f"shape mismatch: {self.shape} vs {other.shape}")
+            raise ValueError(
+                f"recycling needs a vector (an n×1 or 1×n matrix); got "
+                f"shape {other.shape} against {self.shape} — for "
+                f"elementwise matrix∘matrix the shapes must match exactly")
         if n == self.ncol and n != self.nrow:
             return FM(genops.mapply_row(self.m, _vec_data(other.m), op))
         if n == self.nrow:
+            # Includes the square-matrix case: R's column-major recycling
+            # pairs vector element i with row i.
             return FM(genops.mapply_col(self.m, other.m, op))
-        if n == self.ncol:
-            return FM(genops.mapply_row(self.m, _vec_data(other.m), op))
-        raise ValueError(f"cannot recycle {other.shape} across {self.shape}")
+        raise ValueError(
+            f"cannot recycle a length-{n} vector across a "
+            f"{self.nrow}×{self.ncol} matrix: R recycling needs length "
+            f"{self.nrow} (pairs with each row index, mapply.col) or "
+            f"{self.ncol} (pairs with each column index, mapply.row)")
 
     def __add__(self, o):
         return self._bin(o, "add")
@@ -225,6 +240,15 @@ def log(x) -> FM:
     return sapply(x, "log")
 
 
+def log1p(x) -> FM:
+    return sapply(x, "log1p")
+
+
+def sigmoid(x) -> FM:
+    """1 / (1 + exp(-x)) — the logistic link inverse (GLM/IRLS)."""
+    return sapply(x, "sigmoid")
+
+
 def abs_(x) -> FM:
     return sapply(x, "abs")
 
@@ -291,10 +315,69 @@ def all_(x) -> FM:
     return agg(x, "all")
 
 
+def colMeans(x) -> FM:
+    """R colMeans.  A sink's value cannot feed further lazy GenOps inside
+    the SAME DAG (the engine evaluates post-sink math on the small tier),
+    so this materializes the colSums sink — one streaming pass — and
+    returns a small physical (1, p) vector, ready to recycle across the
+    matrix (``X - colMeans(X)``)."""
+    mu = conv_FM2R(colSums(x)).astype(np.float64) / float(_fm(x).nrow)
+    return conv_R2FM(mu.reshape(1, -1).astype(np.float32))
+
+
+def rowMeans(x) -> FM:
+    """R rowMeans — row-local and LAZY (keeps the long dimension), unlike
+    the sink-backed colMeans."""
+    return rowSums(x) / float(_fm(x).ncol)
+
+
+def colSds(x) -> FM:
+    """Column standard deviations (matrixStats::colSds) via the one-pass
+    moment form: the colSums and colSums(x²) sinks co-materialize in ONE
+    streaming pass; sqrt((Σx² − n·mean²)/(n−1)) runs on the small tier."""
+    n = float(_fm(x).nrow)
+    (s, s2) = materialize(colSums(x), colSums(x ** 2))
+    mu = conv_FM2R(s).reshape(-1) / n
+    var = (conv_FM2R(s2).reshape(-1) - n * mu ** 2) / (n - 1.0)
+    return conv_R2FM(np.sqrt(np.maximum(var, 0.0)).reshape(1, -1)
+                     .astype(np.float32))
+
+
+def mean_(x) -> float:
+    """R mean(): grand mean over all elements (scalar, small tier)."""
+    m = _fm(x)
+    return as_scalar(agg(x, "sum")) / float(m.nrow * m.ncol)
+
+
 def crossprod(x, y: Optional[FM] = None) -> FM:
     """R crossprod: t(x) %*% y (y defaults to x) — the Gram sink."""
     y = x if y is None else y
     return FM(genops.inner_prod(_fm(x).transpose(), _fm(y), "mul", "sum"))
+
+
+def diag(x) -> FM:
+    """R diag(): the diagonal of a (small, materialized) matrix as a
+    vector, or a diagonal matrix from a vector.  Small-tier math — the
+    operand is materialized if virtual."""
+    arr = conv_FM2R(x) if isinstance(x, FM) else np.asarray(x)
+    if arr.ndim == 2 and min(arr.shape) == 1:
+        arr = arr.reshape(-1)
+    if arr.ndim <= 1:
+        return conv_R2FM(np.diag(arr.reshape(-1)))
+    return conv_R2FM(np.diag(arr).copy())
+
+
+def solve(a, b=None) -> FM:
+    """R solve(): a⁻¹ (b=None) or the solution of a x = b, on the small
+    tier (numpy, float64) — the IRLS/Newton companion of the weighted-Gram
+    sink."""
+    A = np.asarray(conv_FM2R(a) if isinstance(a, FM) else a, np.float64)
+    if b is None:
+        return conv_R2FM(np.linalg.inv(A))
+    B = np.asarray(conv_FM2R(b) if isinstance(b, FM) else b, np.float64)
+    if B.ndim <= 1:
+        B = B.reshape(-1, 1)   # R: a bare vector is a one-column RHS
+    return conv_R2FM(np.linalg.solve(A, B))
 
 
 def rowsum(x, groups, num_groups: int) -> FM:

@@ -4,18 +4,24 @@ This is the paper's statistical-summary workload (§IV-A) as ONE Pallas
 kernel, generalized: a tall matrix streams HBM→VMEM block-by-block and an
 arbitrary set of *chains* — each a pipeline of unary VUDFs followed by a
 column aggregation — updates from the same resident tile.  The elementwise
-"apply" stages (x², |x|, √x, …) never touch HBM — exactly the paper's
-CPU-cache operation fusion, restated for the HBM→VMEM tier.
+"apply" stages (x², |x|, √x, casts, …) never touch HBM — exactly the
+paper's CPU-cache operation fusion, restated for the HBM→VMEM tier.
 
 ``fused_apply_agg(x, chains)`` takes a static chain spec
 
-    chains = (((unary_name, ...), agg_name), ...)
+    chains = (((unary_name, ...), agg_name[, acc_dtype]), ...)
 
-where each unary name resolves in the core VUDF registry (core/vudf.py) and
-agg_name ∈ {sum, min, max, count, count_nonzero}.  The engine's pallas
-lowering (core/lowering.py) compiles eligible agg.col sink segments sharing
-one source into a single call, so N statistics cost one read of X.
-``fused_summary`` is the paper's six-statistic instance.
+where each unary name resolves in the core VUDF registry (core/vudf.py),
+agg_name ∈ {sum, min, max, count, count_nonzero}, and the optional
+per-chain ``acc_dtype`` ('float32' | 'int32', default = the call-level
+``acc_dtype`` parameter) selects the VMEM accumulator element type.  An
+int32 accumulator makes integer sums/counts EXACT (a float32 accumulator
+loses integer exactness past 2²⁴), which is what lets the engine's pallas
+lowering claim integer apply→agg chains and chains containing lazy cast
+nodes instead of falling back to the generic trace (ROADMAP item).  The
+engine's pallas lowering (core/lowering.py) compiles eligible agg.col sink
+segments sharing one source into a single call, so N statistics cost one
+read of X.  ``fused_summary`` is the paper's six-statistic instance.
 
 Grid: 1-D over row blocks (the processor-level partition axis).
 Accumulators live in VMEM scratch for the whole grid sweep (TPU grids
@@ -24,8 +30,8 @@ the last step — the same identity→update→combine contract as core/dag.py
 sinks.
 
 Rows are padded to the block multiple with neutral values handled by
-masking inside the kernel (min/max need ±inf, so padding cannot be plain
-zeros).
+masking inside the kernel (min/max need ±inf / int extrema, so padding
+cannot be plain zeros).
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -41,10 +48,15 @@ from .common import default_interpret, pad_rows, pick_block_rows
 #: Aggregations the chain kernel can accumulate in a VMEM scratch register.
 CHAIN_AGGS = ("sum", "min", "max", "count", "count_nonzero")
 
-#: Unary VUDFs safe to evaluate on an f32 tile inside the kernel body
-#: (pure float→float, no dtype-rule surprises).
+#: Unary VUDFs safe to evaluate on a VMEM tile inside the kernel body.
+#: The cast family keeps lazily-inserted dtype conversions (paper §III-D)
+#: inside the kernel so mixed-dtype chains stay eligible.
 CHAIN_UNARIES = ("identity", "abs", "sq", "sqrt", "exp", "log", "log1p",
-                 "neg", "sigmoid", "floor", "ceil", "round", "sign")
+                 "neg", "sigmoid", "floor", "ceil", "round", "sign",
+                 "cast_float32", "cast_int32", "cast_bfloat16")
+
+#: Accumulator dtypes a chain may request.
+CHAIN_ACC_DTYPES = ("float32", "int32")
 
 #: fused_summary's chain spec: (sum, sum-of-squares, min, max, L1, nnz).
 SUMMARY_CHAINS = (((), "sum"), (("sq",), "sum"), ((), "min"), ((), "max"),
@@ -56,6 +68,28 @@ def _unary_fn(name):
     return vudf_mod.unary(name).fn
 
 
+def _acc_extreme(dtype, *, biggest: bool):
+    dt = jnp.dtype(dtype)
+    if dt.kind == "f":
+        return jnp.inf if biggest else -jnp.inf
+    info = np.iinfo(dt.name)
+    return info.max if biggest else info.min
+
+
+def normalize_chains(chains, acc_dtype: str = "float32"):
+    """Canonicalize a chain spec to ((unaries, agg, acc_dtype), ...);
+    2-tuples take the call-level default accumulator dtype."""
+    out = []
+    for chain in chains:
+        if len(chain) == 2:
+            unaries, agg = chain
+            acc = acc_dtype
+        else:
+            unaries, agg, acc = chain
+        out.append((tuple(unaries), agg, acc))
+    return tuple(out)
+
+
 def _chain_kernel(x_ref, nrows_ref, *refs, chains, block_rows):
     n_out = len(chains)
     out_refs, accs = refs[:n_out], refs[n_out:]
@@ -63,35 +97,42 @@ def _chain_kernel(x_ref, nrows_ref, *refs, chains, block_rows):
 
     @pl.when(i == 0)
     def _init():
-        for (_, agg), acc in zip(chains, accs):
+        for (_, agg, _), acc in zip(chains, accs):
             if agg == "min":
-                acc[...] = jnp.full_like(acc, jnp.inf)
+                acc[...] = jnp.full_like(
+                    acc, _acc_extreme(acc.dtype, biggest=True))
             elif agg == "max":
-                acc[...] = jnp.full_like(acc, -jnp.inf)
+                acc[...] = jnp.full_like(
+                    acc, _acc_extreme(acc.dtype, biggest=False))
             else:
                 acc[...] = jnp.zeros_like(acc)
 
-    x = x_ref[...].astype(jnp.float32)
+    x = x_ref[...]
     # Rows beyond the true length are padding: mask them out of every stat.
     row_ids = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) + i * block_rows
     valid = row_ids < nrows_ref[0]
 
-    for (unaries, agg), acc in zip(chains, accs):
-        v = x
+    for (unaries, agg, _), acc in zip(chains, accs):
+        at = acc.dtype
+        # Float accumulators evaluate the chain in f32 (the MXU/VPU-native
+        # mode); int accumulators keep the source's integer algebra exact.
+        v = x.astype(jnp.float32) if jnp.dtype(at).kind == "f" else x
         for u in unaries:
             v = _unary_fn(u)(v)
         if agg == "sum":
-            acc[...] += jnp.where(valid, v, 0.0).sum(axis=0)
+            acc[...] += jnp.where(valid, v, 0).astype(at).sum(axis=0)
         elif agg == "count":
-            acc[...] += jnp.where(valid, 1.0, 0.0).sum(axis=0)
+            acc[...] += valid.astype(at).sum(axis=0)
         elif agg == "count_nonzero":
-            acc[...] += jnp.where(valid & (v != 0), 1.0, 0.0).sum(axis=0)
+            acc[...] += (valid & (v != 0)).astype(at).sum(axis=0)
         elif agg == "min":
-            acc[...] = jnp.minimum(acc[...],
-                                   jnp.where(valid, v, jnp.inf).min(axis=0))
+            big = _acc_extreme(at, biggest=True)
+            acc[...] = jnp.minimum(
+                acc[...], jnp.where(valid, v.astype(at), big).min(axis=0))
         elif agg == "max":
-            acc[...] = jnp.maximum(acc[...],
-                                   jnp.where(valid, v, -jnp.inf).max(axis=0))
+            small = _acc_extreme(at, biggest=False)
+            acc[...] = jnp.maximum(
+                acc[...], jnp.where(valid, v.astype(at), small).max(axis=0))
 
     @pl.when(i == pl.num_programs(0) - 1)
     def _writeback():
@@ -99,18 +140,27 @@ def _chain_kernel(x_ref, nrows_ref, *refs, chains, block_rows):
             o[...] = acc[...]
 
 
-@functools.partial(jax.jit, static_argnames=("chains", "block_rows",
-                                             "interpret"))
-def fused_apply_agg(x, chains, *, block_rows: int = 0,
-                    interpret: bool | None = None):
+@functools.partial(jax.jit, static_argnames=("chains", "acc_dtype",
+                                             "block_rows", "interpret"))
+def fused_apply_agg(x, chains, *, acc_dtype: str = "float32",
+                    block_rows: int = 0, interpret: bool | None = None):
     """Column statistics of a tall (n, p) matrix in one HBM pass.
 
-    ``chains``: static tuple of ``((unary_name, ...), agg_name)`` pairs.
-    Returns one (p,) float32 array per chain.
+    ``chains``: static tuple of ``((unary_name, ...), agg_name)`` or
+    ``((unary_name, ...), agg_name, acc_dtype)`` entries; ``acc_dtype`` is
+    the default accumulator element type for the 2-tuple form.
+    Returns one (p,) array per chain, in that chain's accumulator dtype.
     """
-    for unaries, agg in chains:
+    if acc_dtype not in CHAIN_ACC_DTYPES:
+        raise ValueError(f"unsupported accumulator dtype {acc_dtype!r}; "
+                         f"have {CHAIN_ACC_DTYPES}")
+    chains = normalize_chains(chains, acc_dtype)
+    for unaries, agg, acc in chains:
         if agg not in CHAIN_AGGS:
             raise ValueError(f"unsupported chain aggregation {agg!r}")
+        if acc not in CHAIN_ACC_DTYPES:
+            raise ValueError(f"unsupported accumulator dtype {acc!r}; "
+                             f"have {CHAIN_ACC_DTYPES}")
         for u in unaries:
             if u not in CHAIN_UNARIES:
                 raise ValueError(f"unsupported chain unary {u!r}")
@@ -122,7 +172,6 @@ def fused_apply_agg(x, chains, *, block_rows: int = 0,
     grid = (xp.shape[0] // block_rows,)
     nrows = jnp.full((1,), n_true, jnp.int32)
 
-    col = jax.ShapeDtypeStruct((p,), jnp.float32)
     kernel = functools.partial(_chain_kernel, chains=chains,
                                block_rows=block_rows)
     outs = pl.pallas_call(
@@ -133,8 +182,10 @@ def fused_apply_agg(x, chains, *, block_rows: int = 0,
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=[pl.BlockSpec((p,), lambda i: (0,))] * len(chains),
-        out_shape=[col] * len(chains),
-        scratch_shapes=[pltpu.VMEM((p,), jnp.float32)] * len(chains),
+        out_shape=[jax.ShapeDtypeStruct((p,), jnp.dtype(acc))
+                   for _, _, acc in chains],
+        scratch_shapes=[pltpu.VMEM((p,), jnp.dtype(acc))
+                        for _, _, acc in chains],
         interpret=interpret,
     )(xp, nrows)
     return tuple(outs)

@@ -15,10 +15,12 @@ from .flash_attention import flash_attention
 from .fused_apply_agg import fused_apply_agg, fused_summary
 from .gram import gram, xty
 from .kmeans_assign import kmeans_assign
+from .weighted_gram import wgram
 
 __all__ = [
-    "fused_apply_agg", "fused_summary", "gram", "xty", "kmeans_assign",
-    "flash_attention", "attention", "ref", "default_interpret",
+    "fused_apply_agg", "fused_summary", "gram", "xty", "wgram",
+    "kmeans_assign", "flash_attention", "attention", "ref",
+    "default_interpret",
 ]
 
 

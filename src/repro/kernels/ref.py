@@ -24,6 +24,12 @@ def xty_ref(x, y):
     return x.astype(jnp.float32).T @ y.astype(jnp.float32)
 
 
+def wgram_ref(x, w):
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32).reshape(-1, 1)
+    return (xf * wf).T @ xf
+
+
 def kmeans_assign_ref(x, centers):
     x = x.astype(jnp.float32)
     c = centers.astype(jnp.float32)

@@ -1,0 +1,67 @@
+"""Docs cannot rot: every fenced ```python block in README.md and docs/
+executes, in order, sharing one namespace per document (ISSUE 3 satellite).
+
+Conventions for doc authors:
+  * ```python blocks are EXECUTED (cumulatively, top to bottom);
+  * blocks whose first line contains ``doc-only`` are rendered but skipped
+    (illustrative sketches that reference internals out of context);
+  * non-python fences (```r, ```bash, ```text, …) are never executed.
+"""
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+DOCS = [
+    ROOT / "README.md",
+    ROOT / "docs" / "api.md",
+    ROOT / "docs" / "lowering.md",
+]
+
+_FENCE = re.compile(r"^```python[ \t]*$(.*?)^```[ \t]*$",
+                    re.MULTILINE | re.DOTALL)
+
+
+def python_blocks(path: pathlib.Path):
+    text = path.read_text()
+    blocks = []
+    for m in _FENCE.finditer(text):
+        code = m.group(1).strip("\n")
+        first = code.splitlines()[0] if code else ""
+        if "doc-only" in first:
+            continue
+        line = text[:m.start()].count("\n") + 2  # 1-based, after the fence
+        blocks.append((line, code))
+    return blocks
+
+
+def test_all_docs_exist_and_have_executable_examples():
+    for path in DOCS:
+        assert path.exists(), f"missing documentation file {path}"
+    assert sum(len(python_blocks(p)) for p in DOCS) >= 8
+
+
+@pytest.mark.parametrize("path", DOCS, ids=lambda p: p.name)
+def test_doc_snippets_execute(path, tmp_path):
+    """Execute the document's python blocks in one shared namespace, like a
+    reader pasting them into a REPL top-to-bottom."""
+    from repro.core import fm
+    from repro import storage
+
+    blocks = python_blocks(path)
+    assert blocks, f"{path.name} has no executable python examples"
+    old_dir = storage.registry._CONF["data_dir"]
+    fm.set_conf(data_dir=str(tmp_path / "fm-docs"))
+    ns: dict = {"__name__": f"doc_{path.stem}"}
+    try:
+        for line, code in blocks:
+            try:
+                exec(compile(code, f"{path.name}:{line}", "exec"), ns)
+            except Exception as e:  # pragma: no cover - failure reporting
+                pytest.fail(
+                    f"{path.name} snippet at line {line} failed: "
+                    f"{type(e).__name__}: {e}\n--- snippet ---\n{code}")
+    finally:
+        storage.registry._CONF["data_dir"] = old_dir

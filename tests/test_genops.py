@@ -208,3 +208,92 @@ class TestDtypesAndLazy:
         T = X.t()
         assert T.shape == (Xn.shape[1], Xn.shape[0])
         np.testing.assert_allclose(fm.as_np(T), Xn.T)
+
+
+class TestRecycling:
+    """R-style vector recycling across a matrix (FM._recycle): direction
+    selection, the square-matrix ambiguity, and the error surface."""
+
+    def test_length_ncol_recycles_per_row(self):
+        Xn = data(40, 7)
+        X = fm.conv_R2FM(Xn)
+        v = fm.conv_R2FM(np.arange(7, dtype=np.float32))   # 7×1 vector
+        (m,) = fm.materialize(X - v.T)                     # 1×7: per-row
+        np.testing.assert_allclose(fm.as_np(m), Xn - np.arange(7)[None],
+                                   rtol=1e-6)
+
+    def test_length_nrow_recycles_per_column(self):
+        Xn = data(40, 7)
+        X = fm.conv_R2FM(Xn)
+        v = fm.conv_R2FM(np.arange(40, dtype=np.float32))
+        (m,) = fm.materialize(X - v)
+        np.testing.assert_allclose(fm.as_np(m), Xn - np.arange(40)[:, None],
+                                   rtol=1e-6)
+
+    def test_square_matrix_prefers_column_major_pairing(self):
+        """nrow == ncol is ambiguous; R's column-major recycling pairs
+        vector element i with ROW i (mapply.col), which we follow."""
+        Xn = data(6, 6)
+        X = fm.conv_R2FM(Xn)
+        v = np.arange(6, dtype=np.float32)
+        (m,) = fm.materialize(X + fm.conv_R2FM(v))
+        np.testing.assert_allclose(fm.as_np(m), Xn + v[:, None], rtol=1e-6)
+
+    def test_wrong_length_vector_raises_with_both_options(self):
+        X = fm.conv_R2FM(data(40, 7))
+        bad = fm.conv_R2FM(np.ones(13, np.float32))
+        with pytest.raises(ValueError) as ei:
+            X + bad
+        msg = str(ei.value)
+        assert "length-13" in msg and "40" in msg and "7" in msg
+
+    def test_matrix_operand_shape_mismatch_raises(self):
+        X = fm.conv_R2FM(data(40, 7))
+        Y = fm.conv_R2FM(data(20, 2))
+        with pytest.raises(ValueError, match="shapes must match exactly"):
+            X * Y
+
+    def test_virtual_vector_recycles(self):
+        """A recycled vector may itself be lazy (e.g. rowMeans output)."""
+        Xn = data(50, 4)
+        X = fm.conv_R2FM(Xn)
+        (m,) = fm.materialize(X - fm.rowMeans(X))
+        np.testing.assert_allclose(fm.as_np(m), Xn - Xn.mean(1, keepdims=True),
+                                   rtol=1e-5)
+
+
+class TestSmallTierVocabulary:
+    """diag / solve / colMeans / colSds — the small-tier R vocabulary."""
+
+    def test_diag_both_directions(self):
+        A = data(5, 5)
+        d = fm.as_np(fm.diag(fm.conv_R2FM(A))).reshape(-1)
+        np.testing.assert_allclose(d, np.diag(A))
+        D = fm.as_np(fm.diag(np.arange(3, dtype=np.float32)))
+        np.testing.assert_allclose(D, np.diag(np.arange(3)))
+
+    def test_solve(self):
+        A = data(4, 4) + 10 * np.eye(4, dtype=np.float32)
+        b = data(4, 1)
+        x = fm.as_np(fm.solve(fm.conv_R2FM(A), fm.conv_R2FM(b)))
+        np.testing.assert_allclose(A @ x, b, atol=1e-4)
+        Ainv = fm.as_np(fm.solve(fm.conv_R2FM(A)))
+        np.testing.assert_allclose(Ainv, np.linalg.inv(A), atol=1e-5)
+
+    def test_col_moments(self):
+        Xn = data(200, 6)
+        X = fm.conv_R2FM(Xn)
+        np.testing.assert_allclose(fm.as_np(fm.colMeans(X)).reshape(-1),
+                                   Xn.mean(0), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(fm.as_np(fm.colSds(X)).reshape(-1),
+                                   Xn.std(0, ddof=1), rtol=1e-3)
+
+    def test_standardize_then_gram_pipeline(self):
+        """The README quickstart: standardize lazily, Gram in one pass."""
+        Xn = data(300, 5)
+        X = fm.conv_R2FM(Xn)
+        Z = (X - fm.colMeans(X)) / fm.colSds(X)
+        (G,) = fm.materialize(fm.crossprod(Z))
+        Zn = (Xn - Xn.mean(0)) / Xn.std(0, ddof=1)
+        np.testing.assert_allclose(fm.as_np(G), Zn.T @ Zn, rtol=1e-3,
+                                   atol=1e-3)

@@ -52,6 +52,24 @@ def test_xty(n):
 
 
 @pytest.mark.parametrize("n", ROWS)
+@pytest.mark.parametrize("p", [4, 12])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_wgram(n, p, dtype):
+    x = jnp.asarray(RNG.normal(size=(n, p)), dtype)
+    w = jnp.asarray(RNG.uniform(size=(n,)), jnp.float32)
+    g = ops.wgram(x, w, block_rows=64)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref.wgram_ref(x, w)),
+                               **_tol(dtype))
+
+
+def test_wgram_unit_weights_equal_gram():
+    x = jnp.asarray(RNG.normal(size=(300, 6)), jnp.float32)
+    g = ops.wgram(x, jnp.ones((300,), jnp.float32), block_rows=64)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ops.gram(
+        x, block_rows=64)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", ROWS)
 @pytest.mark.parametrize("k", [2, 5])
 @pytest.mark.parametrize("dtype", DTYPES)
 def test_kmeans_assign(n, k, dtype):

@@ -111,15 +111,118 @@ def test_kmeans_groupby_parity(mode):
     np.testing.assert_allclose(wp, wx, rtol=1e-4)
 
 
+@pytest.mark.parametrize("mode", ["whole", "stream"])
+def test_weighted_gram_parity(mode):
+    """crossprod(X*w, X) (the IRLS step's XᵀWX): pallas wgram == xla."""
+    a = _data(900, 5, np.float32)
+    wv = np.abs(RNG.normal(size=(900,))).astype(np.float32)
+    X = fm.conv_R2FM(a)
+    w = fm.conv_R2FM(wv)
+
+    def build():
+        Xw = fm.mapply_col(X, w, "mul")
+        return fm.crossprod(Xw, X)
+
+    (gx,) = fm.materialize(build(), mode=mode, backend="xla")
+    (gp,) = fm.materialize(build(), mode=mode, backend="pallas")
+    expected = (a * wv[:, None]).T.astype(np.float64) @ a
+    np.testing.assert_allclose(fm.as_np(gp), fm.as_np(gx), rtol=1e-4)
+    np.testing.assert_allclose(fm.as_np(gp), expected, rtol=1e-3)
+
+
+def test_weighted_gram_dispatch_both_orientations():
+    """Both crossprod(Xw, X) and crossprod(X, Xw) lower onto wgram (XᵀWX is
+    symmetric in which operand carries the diagonal weights)."""
+    a = _data(256, 4, np.float32)
+    wv = np.abs(RNG.normal(size=(256,))).astype(np.float32)
+    X, w = fm.conv_R2FM(a), fm.conv_R2FM(wv)
+    for build in (lambda: fm.crossprod(fm.mapply_col(X, w, "mul"), X),
+                  lambda: fm.crossprod(X, fm.mapply_col(X, w, "mul"))):
+        plan = Plan([build().m])
+        kernels = [u.kernel for u in plan.program("pallas").kernel_units]
+        assert kernels == ["wgram"], plan.program("pallas").describe()
+
+
+def test_weighted_gram_not_matched_for_distinct_matrices():
+    """Weights applied to a DIFFERENT matrix than the contraction partner
+    is XᵀW Y, not XᵀWX — must fall back (xty may still claim nothing here
+    because the mapply chain is absorbed)."""
+    a = _data(128, 3, np.float32)
+    b = _data(128, 4, np.float32)
+    wv = np.abs(RNG.normal(size=(128,))).astype(np.float32)
+    X, Y, w = fm.conv_R2FM(a), fm.conv_R2FM(b), fm.conv_R2FM(wv)
+    plan = Plan([fm.crossprod(fm.mapply_col(X, w, "mul"), Y).m])
+    assert all(u.kernel != "wgram"
+               for u in plan.program("pallas").kernel_units)
+    (gx,) = fm.materialize(
+        fm.crossprod(fm.mapply_col(X, w, "mul"), Y), backend="pallas")
+    np.testing.assert_allclose(
+        fm.as_np(gx), (a * wv[:, None]).T @ b, rtol=1e-3)
+
+
 def test_int_dtype_parity():
-    """Integer sources are ineligible for f32 kernel accumulation; both
-    backends must still agree exactly (pallas falls back to generic eval)."""
+    """Integer apply→agg chains accumulate in i32 inside the kernel
+    (acc-dtype parameter), so both backends agree EXACTLY."""
     a = RNG.integers(-50, 50, size=(500, 4)).astype(np.int32)
     X = fm.conv_R2FM(a)
     outs_x = fm.materialize(fm.colSums(X), fm.colMaxs(X), backend="xla")
     outs_p = fm.materialize(fm.colSums(X), fm.colMaxs(X), backend="pallas")
     for ox, op in zip(outs_x, outs_p):
         np.testing.assert_array_equal(fm.as_np(op), fm.as_np(ox))
+
+
+def test_int_chains_dispatch_to_fused_apply_agg():
+    """int sources are now ELIGIBLE for the chain kernel (i32 accumulator),
+    closing the ROADMAP fallback item — and stay exact where a float32
+    accumulator would round (values past 2²⁴)."""
+    a = np.zeros((64, 2), np.int32)
+    a[0] = (1 << 24) + 1          # not representable in float32
+    a[1:] = 1
+    X = fm.conv_R2FM(a)
+    outs = (fm.colSums(X), fm.colMaxs(X), fm.colMins(X))
+    plan = Plan([o.m for o in outs])
+    units = plan.program("pallas").kernel_units
+    assert [u.kernel for u in units] == ["fused_apply_agg"]
+    assert sorted(c[2] for c in units[0].chains) == ["int32"] * 3
+    op = [fm.as_np(o) for o in fm.materialize(*outs, backend="pallas")]
+    np.testing.assert_array_equal(op[0].reshape(-1), a.sum(0))  # exact
+    np.testing.assert_array_equal(op[1].reshape(-1), a.max(0))
+    np.testing.assert_array_equal(op[2].reshape(-1), a.min(0))
+
+
+def test_cast_chains_dispatch_to_fused_apply_agg():
+    """Chains containing lazy cast nodes (paper §III-D) stay in the kernel
+    instead of falling back to the generic trace."""
+    a = RNG.integers(0, 100, size=(300, 3)).astype(np.int32)
+    X = fm.conv_R2FM(a)
+    Xf = fm.sapply(X, "cast_float32")
+    outs = (fm.colSums(Xf), fm.colSums(Xf ** 2))
+    plan = Plan([o.m for o in outs])
+    units = plan.program("pallas").kernel_units
+    assert [u.kernel for u in units] == ["fused_apply_agg"], \
+        plan.program("pallas").describe()
+    assert len(units[0].chains) == 2
+    op = [fm.as_np(o).reshape(-1)
+          for o in fm.materialize(*outs, backend="pallas")]
+    np.testing.assert_allclose(op[0], a.sum(0), rtol=1e-6)
+    np.testing.assert_allclose(op[1], (a.astype(np.float64) ** 2).sum(0),
+                               rtol=1e-5)
+
+
+def test_mixed_acc_dtypes_share_one_kernel_call():
+    """float stats and exact integer counts over one source still fuse into
+    ONE kernel read (per-chain accumulator dtypes)."""
+    a = _data(400, 3, np.float32)
+    X = fm.conv_R2FM(a)
+    outs = (fm.colSums(X), fm.agg_col(X, "count_nonzero"))
+    plan = Plan([o.m for o in outs])
+    units = plan.program("pallas").kernel_units
+    assert len(units) == 1
+    accs = sorted(c[2] for c in units[0].chains)
+    assert accs == ["float32", "int32"]
+    sp, cp = fm.materialize(*outs, backend="pallas")
+    np.testing.assert_allclose(fm.as_np(sp).reshape(-1), a.sum(0), rtol=1e-4)
+    np.testing.assert_array_equal(fm.as_np(cp).reshape(-1), (a != 0).sum(0))
 
 
 # ---------------------------------------------------------------------------

@@ -256,6 +256,56 @@ def test_direct_io_reads_correct_and_cold(data_dir, layout):
     np.testing.assert_array_equal(np.asarray(blk2), A[:10])
 
 
+def test_staging_dedupes_shared_matrix_reads(data_dir):
+    """Regression (ROADMAP open item): a DAG referencing one physical
+    matrix through k leaves (crossprod + two agg.col chains here) must read
+    each partition from the store ONCE, not k times."""
+    from repro.core.fusion import Plan
+    A = _arr(20_000, 4)
+    fm.set_conf(io_partition_bytes=1 << 18)  # force many partitions
+    try:
+        Xd = fm.load_dense_matrix(A, "dedupe")
+        store = Xd.m.store
+        reads = []
+        orig_block = store.block
+        store.block = lambda start, stop: (reads.append((start, stop)),
+                                           orig_block(start, stop))[1]
+        outs = (fm.crossprod(Xd), fm.colSums(Xd), fm.colSums(Xd ** 2))
+        plan = Plan([o.m for o in outs])
+        assert len(plan.sources) >= 3          # three leaves ...
+        assert len(plan.source_groups) == 1    # ... one physical matrix
+        Gm, sm, qm = fm.materialize(*outs, prefetch=False)
+        n_partitions = -(-A.shape[0] // plan.partition_rows)
+        assert len(reads) == n_partitions, \
+            f"{len(reads)} reads for {n_partitions} partitions"
+        np.testing.assert_allclose(
+            fm.as_np(Gm), A.T.astype(np.float64) @ A, rtol=1e-4)
+        np.testing.assert_allclose(fm.as_np(sm).reshape(-1), A.sum(0),
+                                   rtol=1e-4)
+        np.testing.assert_allclose(fm.as_np(qm).reshape(-1), (A * A).sum(0),
+                                   rtol=1e-4)
+    finally:
+        fm.set_conf(io_partition_bytes=64 << 20)
+
+
+def test_staging_alias_structure_in_plan_signature():
+    """Two structurally identical cuts that alias sources differently (one
+    matrix through two leaves vs two distinct matrices) must not share a
+    compiled plan — the staged-block layout differs."""
+    from repro.core.fusion import Plan
+    A = _arr(256, 3)
+    X = fm.conv_R2FM(A)
+    Y = fm.conv_R2FM(A.copy())
+    shared = Plan([fm.crossprod(X, X).m])
+    distinct = Plan([fm.crossprod(X, Y).m])
+    assert len(shared.source_groups) == 1
+    assert len(distinct.source_groups) == 2
+    assert shared.signature() != distinct.signature()
+    (g1,) = fm.materialize(fm.crossprod(X, X))
+    (g2,) = fm.materialize(fm.crossprod(X, Y))  # same sig shape, new aliases
+    np.testing.assert_allclose(fm.as_np(g1), fm.as_np(g2), rtol=1e-5)
+
+
 def test_spill_to_disk_output(data_dir):
     """save='disk' long-dimension outputs stream into an on-disk matrix and
     equal the in-memory result."""
