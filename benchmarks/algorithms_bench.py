@@ -12,11 +12,15 @@ Each cell prints TWO lines:
   * the repo-wide ``name,us_per_call,derived`` CSV row, and
   * a machine-readable ``BENCH {json}`` row with the timing plus the
     engine evidence: the iteration Plan's cost counters —
-    ``passes_over_x`` = bytes_in / bytes(sources), the proof that one
-    IRLS iteration (or one NMF half-update) streams X exactly ONCE however
-    many leaves reference it (staging dedupe) — and, for pallas cells, the
-    kernels the engine dispatched to (the weighted-gram segment must show
-    ``wgram``) with the max abs deviation from the xla backend.
+    ``passes_over_sources`` = bytes_in / bytes(sources), the proof that
+    one IRLS iteration (or one NMF half-update) streams X exactly ONCE
+    however many leaves reference it (staging dedupe);
+    ``epilogue_nodes`` / ``epilogue_launches_per_materialize`` = the
+    post-sink math (the GLM Newton solve, the NB moment division) running
+    as ONE on-device epilogue launch inside the same plan — and, for
+    pallas cells, the kernels the engine dispatched to (the weighted-gram
+    segment must show ``wgram``) with the max abs deviation from the xla
+    backend.
 
 On this CPU container the pallas backend runs the interpreter (expect
 O(100×) slower rows — correctness evidence, not speed); on TPU the same
@@ -93,8 +97,10 @@ def _workloads(fm, k):
         return m.means
 
     def plan_nb(X, yb, yc):
-        return Plan([fm.table_(yc, k).m, fm.rowsum(X, yc, k).m,
-                     fm.rowsum(X * X, yc, k).m])
+        # The exact gaussian training DAG (grouped sinks + lazy per-class
+        # moment epilogue), from the algorithm's own builder.
+        from repro.algorithms.naive_bayes import nb_gaussian_outputs
+        return Plan([o.m for o in nb_gaussian_outputs(X, yc, k)])
 
     def run_kmeans(X, yb, yc, mode, backend):
         C = np.abs(np.random.default_rng(0).normal(
@@ -157,7 +163,9 @@ def run(argv=None):
                     # engine-wide backend default.
                     fm.set_conf(backend=backend)
                     exec_mode = _exec_mode(mode)
+                    mz.reset_exec_stats()
                     res = np.asarray(work(X, yb, yc, exec_mode, backend))
+                    st = mz.exec_stats()
                     us = time_call(
                         lambda: work(X, yb, yc, exec_mode, backend),
                         iters=args.iters)
@@ -175,6 +183,16 @@ def run(argv=None):
                         "passes_over_sources": round(
                             plan.bytes_in() / max(src_bytes, 1), 3),
                         "flops": plan.flop_count(),
+                        # Epilogue-stage evidence: nodes the iteration plan
+                        # evaluates after the merge (the GLM Newton solve,
+                        # the NB moment division), and the launches the
+                        # measured run actually performed — 1.0 per
+                        # materialize = the whole post-sink chain ran as
+                        # ONE on-device launch inside the same plan.
+                        "epilogue_nodes": len(plan.epilogue_nodes),
+                        "epilogue_launches_per_materialize": round(
+                            st["epilogue_launches"]
+                            / max(st["materialize_calls"], 1), 3),
                     }
                     if mode == "mem":
                         # The cell every other mode/backend is judged
@@ -199,6 +217,8 @@ def run(argv=None):
                         (f"algorithms/{algo}/{mode}/{backend}", us,
                          f"passes={record['passes_over_sources']};"
                          f"bytes_in={record['bytes_in']:.2e};"
+                         f"epilogue="
+                         f"{record['epilogue_launches_per_materialize']};"
                          f"maxerr={err:.2e}"))
     finally:
         fm.set_conf(backend="auto")

@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python benchmarks/fusion_ablation.py [--n N] [--p P]
 
-Two paper workloads — the six-statistic summary (apply→agg.col chains) and
-the Gram contraction (correlation/SVD hot loop) — are timed over every
-combination of:
+Three paper workloads — the six-statistic summary (apply→agg.col chains),
+the Gram contraction (correlation/SVD hot loop), and the colMeans/colSds
+moment pair (sink + post-sink EPILOGUE math in one plan) — are timed over
+every combination of:
 
     fuse     on | off    off = materialize every DAG node separately (the
                          paper's "MLlib materializes aggregation separately"
@@ -20,10 +21,15 @@ combination of:
                          dispatching to the kernels and the results
                          matching; on TPU the same rows time Mosaic.
 
-Derived columns report the Plan cost counters (FLOPs, bytes in/out) and,
-for pallas rows, the kernels the engine dispatched to plus the max abs
-deviation from the xla result — the acceptance check that engine-level
-kernel lowering matches the generic trace.
+Derived columns report the Plan cost counters (FLOPs, bytes in/out), the
+EXECUTION counters for the measured cell — ``passes_over_sources`` (bytes
+read / bytes of sources: 1.0 = each matrix streamed once) and
+``epilogue_launches`` per materialize (1 for fused epilogue plans; the
+nofuse arm shows the post-sink math exploding into separate tiny
+executions instead) — and, for pallas rows, the kernels the engine
+dispatched to plus the max abs deviation from the xla result — the
+acceptance check that engine-level kernel lowering matches the generic
+trace.
 
 Rows follow the repo-wide ``name,us_per_call,derived`` contract.
 """
@@ -39,21 +45,34 @@ except ImportError:  # direct `python benchmarks/fusion_ablation.py`
     from common import emit, pallas_dispatch_info, summary_outs, time_call
 
 
+def _moment_outs(fm, X):
+    """colSums sinks + the /n and sqrt((Σx²−(Σx)²/n)/(n−1)) EPILOGUE
+    chains — the post-sink lazy math the engine evaluates once after the
+    partition-loop merge.  One definition feeds both the timed workload
+    and the plan-counter evidence."""
+    return (fm.colMeans(X), fm.colSds(X))
+
+
 def _workloads(fm):
     return {
         "summary": lambda X, **kw: [
             fm.as_np(o) for o in fm.materialize(*summary_outs(fm, X), **kw)],
         "gram": lambda X, **kw: [
             fm.as_np(fm.materialize(fm.crossprod(X), **kw)[0])],
+        "moments": lambda X, **kw: [
+            fm.as_np(o)
+            for o in fm.materialize(*_moment_outs(fm, X), **kw)],
     }
 
 
 def _plan_counters(fm, outs):
     from repro.core.fusion import Plan
     plan = Plan([o.m for o in outs])
+    src_bytes = max(1, sum(m.nbytes() for _, m in plan.staged_sources()))
     return plan, (f"flops={plan.flop_count():.2e};"
                   f"bytes_in={plan.bytes_in():.2e};"
-                  f"bytes_out={plan.bytes_out():.2e}")
+                  f"bytes_out={plan.bytes_out():.2e};"
+                  f"passes_over_sources={plan.bytes_in() / src_bytes:.3f}")
 
 
 def run(argv=None):
@@ -88,13 +107,23 @@ def run(argv=None):
                 for fuse in (True, False):
                     mz.clear_plan_cache()
                     kw = dict(mode=mode, fuse=fuse, backend=backend)
+                    mz.reset_exec_stats()
                     res = work(X, **kw)
+                    st = mz.exec_stats()
                     us = time_call(lambda: work(X, **kw), iters=args.iters)
-                    derived = ""
+                    # Execution evidence for ONE materialize of this cell:
+                    # a fused epilogue plan launches exactly once; the
+                    # nofuse arm materializes every post-sink node as its
+                    # own tiny execution (partition_steps balloons).
+                    derived = (f"epilogue_launches={st['epilogue_launches']};"
+                               f"partition_steps={st['partition_steps']}")
                     if fuse:
                         outs = (summary_outs(fm, X) if wname == "summary"
+                                else _moment_outs(fm, X)
+                                if wname == "moments"
                                 else (fm.crossprod(X),))
-                        plan, derived = _plan_counters(fm, outs)
+                        plan, counters = _plan_counters(fm, outs)
+                        derived = counters + ";" + derived
                         if backend == "pallas":
                             # Acceptance check: engine-level kernel lowering
                             # matches the generic trace on the same data.

@@ -1,12 +1,13 @@
 """Generalized linear models via IRLS (paper §IV-A's logistic regression,
 generalized to the gaussian/logistic/poisson families) on GenOps.
 
-Every IRLS iteration is ONE fused pass over X: the weighted Gram XᵀWX, the
-weighted moment XᵀWz and the log-likelihood sink all co-materialize while a
-partition is resident in the fast tier.  The weighted-Gram segment
-(``mapply.col(X, w, mul) → inner.prod(mul, sum)``) is the pattern the
-pallas backend lowers onto ``kernels/weighted_gram.py``.  The p×p Newton
-solve runs on the small tier.
+Every IRLS iteration is ONE fused plan over X: the weighted Gram XᵀWX, the
+weighted moment XᵀWz and the log-likelihood sink co-materialize while a
+partition is resident in the fast tier, and the p×p Newton solve runs as a
+lazy EPILOGUE op in the SAME plan — one launch after the partial merge, on
+device, so the whole R expression below executes as a single DAG.  The
+weighted-Gram segment (``mapply.col(X, w, mul) → inner.prod(mul, sum)``)
+is the pattern the pallas backend lowers onto ``kernels/weighted_gram.py``.
 
 Equivalent FlashR R code (paper Fig. 4 style):
 
@@ -17,7 +18,7 @@ Equivalent FlashR R code (paper Fig. 4 style):
     XtWX <- crossprod(X * w, X)                # weighted Gram  (sink)
     XtWz <- crossprod(X, w * z)                # weighted moment (sink)
     ll   <- sum(y * eta - log(1 + exp(eta)))   # log-likelihood (sink)
-    beta <- solve(XtWX, XtWz)                  # small tier
+    beta <- solve(XtWX, XtWz)                  # plan epilogue
 
 Complexity per iteration: O(n·p²) compute, O(n·p) I/O — the correlation/SVD
 row of Table IV, with the same out-of-core behavior.
@@ -59,8 +60,8 @@ def glm_irls_sinks(X: fm.FM, y: fm.FM, beta: np.ndarray, family: str):
     eta = X @ b                                   # n×1, row-local
     if family == "gaussian":
         # Constant unit weights: IRLS is ordinary least squares, one step.
-        # The sink is the residual sum of squares (a sink's value cannot
-        # feed further lazy math; glm() finishes −RSS/2 on the small tier).
+        # The sink is the RSS at the pre-step coefficients; glm() finishes
+        # −RSS(β_new)/2 via the quadratic expansion on the small tier.
         w = y * 0.0 + 1.0
         z = y
         ll = fm.sum_((y - eta) ** 2)
@@ -82,11 +83,29 @@ def glm_irls_sinks(X: fm.FM, y: fm.FM, beta: np.ndarray, family: str):
     return XtWX, XtWz, ll
 
 
+def glm_irls_outputs(X: fm.FM, y: fm.FM, beta: np.ndarray, family: str,
+                     ridge: float = 0.0):
+    """One WHOLE IRLS iteration as a single lazy DAG: the three sinks plus
+    ``beta_next = solve(XᵀWX (+ ridge·I), XᵀWz)`` running in the plan
+    epilogue — the Newton step materializes in the same fused pass over X.
+    Returns (beta_next, ll, XtWX, XtWz) lazy handles."""
+    XtWX, XtWz, ll = glm_irls_sinks(X, y, beta, family)
+    A = XtWX
+    if ridge:
+        # The ridge eye matrix is an epilogue-only source: handed whole to
+        # the post-merge callable, never streamed.
+        A = A + fm.conv_R2FM((ridge * np.eye(X.ncol)).astype(np.float32))
+    beta_next = fm.solve(A, XtWz)
+    return beta_next, ll, XtWX, XtWz
+
+
 def glm_iteration_plan(X: fm.FM, y: fm.FM, beta: np.ndarray,
                        family: str) -> Plan:
-    """The fusion Plan of one IRLS iteration — exposes the cost counters
-    (bytes_in vs nbytes(X): the proof each iteration streams X once)."""
-    return Plan([o.m for o in glm_irls_sinks(X, y, beta, family)])
+    """The fusion Plan of one IRLS iteration, INCLUDING the epilogue Newton
+    solve — exposes the cost counters (bytes_in vs nbytes(X): the proof
+    each iteration streams X once) and the epilogue stage evidence."""
+    beta_next, ll, _, _ = glm_irls_outputs(X, y, beta, family)
+    return Plan([beta_next.m, ll.m])
 
 
 def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
@@ -106,22 +125,37 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
     converged = False
     it = 0
     for it in range(1, max_iter + 1):
-        sinks = glm_irls_sinks(X, y, beta, family)
-        XtWX_m, XtWz_m, ll_m = fm.materialize(*sinks, mode=mode, fuse=fuse,
-                                              backend=backend)
-        A = fm.as_np(XtWX_m).astype(np.float64)
-        b = fm.as_np(XtWz_m).astype(np.float64).reshape(-1)
-        A0 = A
-        if ridge:
-            A = A + ridge * np.eye(p)
-        beta = np.linalg.solve(A, b)
+        # The ENTIRE iteration — sinks and the epilogue Newton solve — is
+        # one plan: a single streaming pass over X and one epilogue launch.
+        beta_fm, ll_fm, XtWX_fm, XtWz_fm = glm_irls_outputs(
+            X, y, beta, family, ridge)
+        if family == "gaussian":
+            # Also pull the (unridged) normal-equation sinks: the quadratic
+            # RSS expansion below needs them on the small tier.
+            beta_m, ll_m, A_m, b_m = fm.materialize(
+                beta_fm, ll_fm, XtWX_fm, XtWz_fm, mode=mode, fuse=fuse,
+                backend=backend)
+        else:
+            beta_m, ll_m = fm.materialize(beta_fm, ll_fm, mode=mode,
+                                          fuse=fuse, backend=backend)
+        beta = fm.as_np(beta_m).astype(np.float64).reshape(-1)
+        if not np.isfinite(beta).all():
+            # The on-device epilogue solve cannot raise like the old eager
+            # float64 numpy path did — restore the diagnostic here.
+            raise np.linalg.LinAlgError(
+                f"IRLS normal equations are singular or too ill-conditioned "
+                f"for the on-device solve at iteration {it} (family="
+                f"{family!r}); add a ridge penalty (glm(..., ridge=...)) or "
+                f"drop collinear columns")
         ll = float(fm.as_scalar(ll_m))
         if family == "gaussian":
             # The streamed sink is RSS at the pre-step coefficients — zeros
             # on this single OLS step, so it equals yᵀy.  Finish the
             # quadratic expansion at the new beta on the small tier:
             # RSS(β) = yᵀy − 2βᵀXᵀy + βᵀ(XᵀX)β.
-            rss = ll - 2.0 * float(b @ beta) + float(beta @ (A0 @ beta))
+            A0 = fm.as_np(A_m).astype(np.float64)
+            bvec = fm.as_np(b_m).astype(np.float64).reshape(-1)
+            rss = ll - 2.0 * float(bvec @ beta) + float(beta @ (A0 @ beta))
             trace.append(-0.5 * rss)
             converged = True        # constant weights: one Newton step
             break

@@ -9,7 +9,7 @@ Gaussian NB (continuous features):
     cnt  <- table(y)                            # per-class counts   (sink)
     s1   <- rowsum(X, y)                        # per-class sums     (sink)
     s2   <- rowsum(X * X, y)                    # per-class sq-sums  (sink)
-    mu   <- s1 / cnt;  var <- s2 / cnt - mu^2   # small tier
+    mu   <- s1 / cnt;  var <- s2 / cnt - mu^2   # plan epilogue (lazy)
 
 Multinomial NB (count features, e.g. term counts): per-class feature
 totals via rowsum.  Integer GenOp chains over a count matrix (e.g.
@@ -44,6 +44,22 @@ class NaiveBayesModel:
     class_count: np.ndarray        # (k,)
 
 
+def nb_gaussian_outputs(X: fm.FM, y: fm.FM, k: int):
+    """The gaussian training DAG as lazy handles: per-class counts plus
+    the mu/var EPILOGUE chains over the grouped sinks — mu = s1/cnt and
+    var = s2/cnt − mu² evaluate once after the partial merge, inside the
+    SAME single-pass plan (the `cnt` recycling lowers onto mapply.col of
+    two merged sink values).  Exposed so benchmark iteration plans build
+    the exact DAG the algorithm executes."""
+    cnt = fm.table_(y, k)
+    s1 = fm.rowsum(X, y, k)
+    s2 = fm.rowsum(X * X, y, k)
+    safe = fm.pmax(fm.sapply(cnt, "cast_float32"), 1.0)
+    mu = s1 / safe
+    var = fm.pmax(s2 / safe - mu * mu, _VAR_EPS)
+    return cnt, mu, var
+
+
 def naive_bayes(X: fm.FM, y: fm.FM, num_classes: int, *,
                 kind: str = "gaussian", alpha: float = 1.0,
                 mode: str = "auto", fuse: bool = True,
@@ -53,33 +69,32 @@ def naive_bayes(X: fm.FM, y: fm.FM, num_classes: int, *,
     n, p = X.shape
     k = int(num_classes)
     if kind == "gaussian":
-        cnt, s1, s2 = fm.materialize(
-            fm.table_(y, k),
-            fm.rowsum(X, y, k),
-            fm.rowsum(X * X, y, k),
-            mode=mode, fuse=fuse, backend=backend)
-        c = fm.as_np(cnt).reshape(-1).astype(np.float64)
-        safe = np.maximum(c, 1.0).reshape(-1, 1)
-        mu = fm.as_np(s1).astype(np.float64) / safe
-        var = fm.as_np(s2).astype(np.float64) / safe - mu ** 2
-        var = np.maximum(var, _VAR_EPS)
+        cnt, mu, var = nb_gaussian_outputs(X, y, k)
+        cnt_m, mu_m, var_m = fm.materialize(
+            cnt, mu, var, mode=mode, fuse=fuse, backend=backend)
+        c = fm.as_np(cnt_m).reshape(-1).astype(np.float64)
         return NaiveBayesModel(
             kind=kind, class_log_prior=np.log(np.maximum(c, 1e-300) / n),
-            means=mu, variances=var, feature_log_prob=None, class_count=c)
+            means=fm.as_np(mu_m).astype(np.float64),
+            variances=fm.as_np(var_m).astype(np.float64),
+            feature_log_prob=None, class_count=c)
     if kind == "multinomial":
-        # Per-class feature totals + class counts, one pass.  (Integer
-        # apply→agg chains like colSums(X_int) dispatch to the i32
-        # fused_apply_agg path — covered by tests/test_lowering.py.)
-        cnt, F = fm.materialize(
-            fm.table_(y, k),
-            fm.rowsum(X, y, k),
-            mode=mode, fuse=fuse, backend=backend)
-        c = fm.as_np(cnt).reshape(-1).astype(np.float64)
-        Fc = fm.as_np(F).astype(np.float64) + alpha
-        flp = np.log(Fc) - np.log(Fc.sum(1, keepdims=True))
+        # Per-class feature totals + class counts + smoothed log-probs, one
+        # pass: the Laplace smoothing and row normalization are epilogue
+        # math over the rowsum sink.  (Integer apply→agg chains like
+        # colSums(X_int) dispatch to the i32 fused_apply_agg path — covered
+        # by tests/test_lowering.py.)
+        cnt = fm.table_(y, k)
+        Fc = fm.rowsum(X, y, k) + float(alpha)
+        flp = fm.log(Fc) - fm.log(fm.rowSums(Fc))
+        cnt_m, flp_m = fm.materialize(
+            cnt, flp, mode=mode, fuse=fuse, backend=backend)
+        c = fm.as_np(cnt_m).reshape(-1).astype(np.float64)
         return NaiveBayesModel(
             kind=kind, class_log_prior=np.log(np.maximum(c, 1e-300) / n),
-            means=None, variances=None, feature_log_prob=flp, class_count=c)
+            means=None, variances=None,
+            feature_log_prob=fm.as_np(flp_m).astype(np.float64),
+            class_count=c)
     raise ValueError(f"unknown kind {kind!r}; have gaussian|multinomial")
 
 

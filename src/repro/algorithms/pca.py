@@ -7,7 +7,7 @@ contraction sink and the p×p eigendecomposition runs on the small tier.
 
 Equivalent FlashR R code:
 
-    mu <- colMeans(X)                      # moment pass (sink)
+    mu <- colMeans(X)                      # moment pass (sink + epilogue)
     Z  <- sweep(X, 2, mu)                  # lazy mapply.row
     ev <- eigen(crossprod(Z) / (n - 1))    # one streaming pass + small tier
     scores <- Z %*% ev$vectors[, 1:k]      # optional second pass
@@ -51,16 +51,18 @@ def pca(X: fm.FM, k: int = 10, *, center: bool = True, scale: bool = False,
     Z = X
     if center or scale:
         # ONE co-materialized moment pass yields both the means and (when
-        # scaling) the sds — colMeans + colSds separately would scan X twice.
-        s_m, s2_m = fm.materialize(fm.colSums(X), fm.colSums(X ** 2),
-                                   mode=mode, fuse=fuse)
-        s = fm.as_np(s_m).reshape(-1).astype(np.float64)
-        s2 = fm.as_np(s2_m).reshape(-1).astype(np.float64)
+        # scaling) the sds: the colMeans/colSds epilogue chains share the
+        # staged read of X and finish in a single post-merge launch.
+        wants = []
         if center:
-            mu = (s / n).astype(np.float32)
+            wants.append(fm.colMeans(X))
         if scale:
-            var = (s2 - n * (s / n) ** 2) / max(n - 1, 1)
-            sd = np.sqrt(np.maximum(var, 0.0)).astype(np.float32)
+            wants.append(fm.colSds(X))
+        outs = fm.materialize(*wants, mode=mode, fuse=fuse)
+        if center:
+            mu = fm.as_np(outs[0]).reshape(-1).astype(np.float32)
+        if scale:
+            sd = fm.as_np(outs[-1]).reshape(-1).astype(np.float32)
     if center:
         Z = fm.mapply_row(Z, mu, "sub")
     if scale:

@@ -40,6 +40,11 @@ from .matrix import FMMatrix, DenseStore
 
 _ids = itertools.count()
 
+#: Ops that only ever run in the plan EPILOGUE (post-sink small-tier math):
+#: they are classified post-sink even when their operands are physical, so
+#: e.g. ``solve`` is never streamed through the partition loop.
+EPILOGUE_ONLY_KINDS = frozenset({"solve"})
+
 
 # ---------------------------------------------------------------------------
 # Operands
@@ -194,6 +199,21 @@ class MapNode(Node):
                 return base @ onehot
             raise NotImplementedError(
                 f"groupby_col with agg {agg_name!r}; supported: sum/count")
+        if op == "solve":
+            # Epilogue-only op (EPILOGUE_ONLY_KINDS): a·x = b on the merged
+            # sink values.  One same-precision iterative-refinement step
+            # recovers most of the accuracy the old eager float64 small-tier
+            # path had; the system is p×p so the extra solve is free.
+            a = blocks[0].astype(self.dtype)
+            b = blocks[1]
+            if b.ndim == 1:
+                b = b.reshape(-1, 1)
+            elif b.shape[0] != a.shape[0]:
+                b = b.reshape(a.shape[0], -1)  # (1, n) vector sink → column
+            b = b.astype(self.dtype)
+            x = jnp.linalg.solve(a, b)
+            r = b - a @ x
+            return x + jnp.linalg.solve(a, r)
         raise AssertionError(f"unknown map op {op}")
 
 
@@ -432,6 +452,31 @@ def toposort(roots: Sequence[Node]) -> list[Node]:
     return order
 
 
+def post_sink_ids(order: Sequence[Node], is_source=None) -> set:
+    """Ids of nodes DOWNSTREAM of a sink within ``order`` — the plan's
+    *epilogue* set (paper §III-E post-aggregation math like
+    ``colSums(X) / n``).  Such a node's operands only exist after the
+    partition-loop partial merge, so it cannot run inside the loop; the
+    engine evaluates the whole set once, after the merge
+    (fusion.Plan → lowering.LoweredProgram.epilogue).
+
+    ``is_source`` marks cut points (previously persisted nodes count as
+    sources, not sinks); epilogue-only ops (``solve``) are always post-sink.
+    """
+    src = is_source or (lambda n: isinstance(n, LeafNode)
+                        or getattr(n, "cached_store", None) is not None)
+    post: set = set()
+    for n in order:
+        if src(n):
+            continue
+        if n.kind in EPILOGUE_ONLY_KINDS or any(
+                isinstance(p, Node) and not src(p)
+                and (p.is_sink or p.id in post)
+                for p in n.parents):
+            post.add(n.id)
+    return post
+
+
 def long_dim_of(roots: Sequence[Node]) -> int:
     """All matrices in a DAG share one streaming dimension (paper §III-E).
 
@@ -439,16 +484,44 @@ def long_dim_of(roots: Sequence[Node]) -> int:
     simply short streams (the paper handles them as transposed-tall groups;
     our lazy transpose feeds `inner_prod` the tall orientation, so by the
     time a node is in a DAG its rows are the stream)."""
+    # Cut-aware walk: a previously-persisted node (cached_store) is a
+    # SOURCE of this cut — its upstream DAG belongs to other plans and must
+    # not constrain this plan's streaming dimension.
+    seen: set = set()
+    order: list[Node] = []
+
+    def visit(n: Node):
+        if n.id in seen:
+            return
+        seen.add(n.id)
+        if getattr(n, "cached_store", None) is None:
+            for p in n.parent_nodes():
+                visit(p)
+        order.append(n)
+
+    for r in roots:
+        visit(r)
+    post = post_sink_ids(order)
+    consumers: dict = {}
+    for n in order:
+        for p in n.parent_nodes():
+            consumers.setdefault(p.id, []).append(n)
     dims = set()
-    for n in toposort(roots):
-        if isinstance(n, LeafNode):
+    for n in order:
+        if n.id in post:
+            continue  # epilogue math is small-tier: exempt from streaming
+        if (isinstance(n, LeafNode)
+                or getattr(n, "cached_store", None) is not None):
+            cons = consumers.get(n.id, [])
+            if cons and all(c.id in post for c in cons):
+                continue  # epilogue-only operand (e.g. a ridge eye matrix)
             if max(n.shape) > 1:
                 dims.add(n.shape[0])
         elif not n.is_sink:
             dims.add(n.shape[0])
         else:
             for p in n.parent_nodes():
-                if not p.is_sink:
+                if not p.is_sink and p.id not in post:
                     dims.add(p.shape[0])
     dims.discard(1)
     if len(dims) > 1:

@@ -33,7 +33,8 @@ from typing import Sequence
 import jax.numpy as jnp
 
 from . import dtypes, plan_ir
-from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of)
+from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of,
+                  post_sink_ids)
 from .matrix import FMMatrix, io_partition_rows
 
 
@@ -45,24 +46,96 @@ class Plan:
         self.fuse = fuse
 
         self.order = self._cut_toposort(list(self.requested))
-        self.sinks: list[SinkNode] = [n for n in self.order if n.is_sink]
+
+        # EPILOGUE classification (paper §III-E's post-aggregation math):
+        # a node downstream of a sink inside this cut — colSums(X)/n,
+        # sqrt(ss/n − mean²), solve(XᵀWX, XᵀWz) — cannot run in the
+        # partition loop because its operands only exist after the partial
+        # merge.  Those nodes form the plan's epilogue: the lowered program
+        # evaluates them exactly once, on device, after the combine
+        # (LoweredProgram.epilogue).  A sink whose operands are themselves
+        # post-sink (e.g. sum(colMeans(X))) is evaluated there too.
+        self.epilogue_ids: set[int] = post_sink_ids(
+            self.order, is_source=self._is_source)
+        self.epilogue_nodes: list[Node] = [
+            n for n in self.order if n.id in self.epilogue_ids]
+
+        # NOTE: a previously-persisted sink reused as a cut SOURCE must not
+        # re-register as a sink here — the executor would re-initialize it
+        # to its identity and clobber the persisted value with zeros (only
+        # reachable since sink-consumers became plannable).
+        self.sinks: list[SinkNode] = [
+            n for n in self.order
+            if n.is_sink and not self._is_source(n)
+            and n.id not in self.epilogue_ids]
         self.row_local_roots: list[Node] = [
             n for n in self.requested
-            if not n.is_sink and not self._is_source(n)]
+            if not n.is_sink and not self._is_source(n)
+            and n.id not in self.epilogue_ids]
         # Nodes flagged fm.set.mate.level persist during this execution
         # (paper's write-through materialization of non-sink matrices).
         self.saves: list[Node] = [
             n for n in self.order
             if n.save is not None and not n.is_sink and not self._is_source(n)
-            and n not in self.row_local_roots]
+            and n not in self.row_local_roots
+            and n.id not in self.epilogue_ids]
+        # Epilogue result slots: requested or save-flagged epilogue nodes.
+        seen_roots: set[int] = set()
+        self.epilogue_roots: list[Node] = []
+        for n in list(self.requested) + [m for m in self.order
+                                         if m.save is not None]:
+            if n.id in self.epilogue_ids and n.id not in seen_roots:
+                seen_roots.add(n.id)
+                self.epilogue_roots.append(n)
 
-        # Sources = physical leaves + previously-persisted cut points.
+        # Sources = physical leaves + previously-persisted cut points.  A
+        # source consumed ONLY by epilogue nodes (e.g. the ridge eye matrix
+        # of a regularized solve) is not streamed: it is handed whole to the
+        # epilogue callable.
+        consumers: dict[int, list[Node]] = {}
+        for n in self.order:
+            if self._is_source(n):
+                continue
+            for p in n.parents:
+                if isinstance(p, Node):
+                    consumers.setdefault(p.id, []).append(n)
         self.sources: list[tuple[Node, FMMatrix]] = []
+        self.epilogue_sources: list[tuple[Node, FMMatrix]] = []
         for n in self.order:
             if isinstance(n, LeafNode):
-                self.sources.append((n, n.mat))
+                mat = n.mat
             elif getattr(n, "cached_store", None) is not None:
-                self.sources.append((n, n.cached_store))
+                mat = n.cached_store
+            else:
+                continue
+            cons = consumers.get(n.id, [])
+            if cons and all(c.id in self.epilogue_ids for c in cons):
+                self.epilogue_sources.append((n, mat))
+            elif any(c.id in self.epilogue_ids for c in cons):
+                raise ValueError(
+                    f"source {n.name} is consumed by both the partition "
+                    f"loop and the plan epilogue; materialize the epilogue "
+                    f"expression separately")
+            else:
+                self.sources.append((n, mat))
+        self._epi_src_ids = {n.id for n, _ in self.epilogue_sources}
+
+        # Epilogue operands must exist after the merge: loop sinks, other
+        # epilogue values, small epilogue-only sources, or broadcast Smalls.
+        # A streaming intermediate (row-local chain) would need a second
+        # pass over the data — reject it with a actionable message.
+        for n in self.epilogue_nodes:
+            for p in n.parents:
+                if isinstance(p, Small) or self._is_source(p):
+                    continue
+                if p.is_sink or p.id in self.epilogue_ids:
+                    continue
+                raise ValueError(
+                    f"epilogue op {n.name} consumes the streaming "
+                    f"intermediate {p.name}: post-sink lazy math may only "
+                    f"touch aggregation results, small operands or other "
+                    f"epilogue values inside one DAG — materialize "
+                    f"{p.name} first (it needs its own pass)")
 
         # Staging groups: every GenOp call wraps its own LeafNode, so a DAG
         # referencing one physical matrix through k leaves (crossprod(X) +
@@ -100,7 +173,8 @@ class Plan:
         for node, mat in self.sources:
             widths.append(mat.ncol)
         for n in self.order:
-            if not self._is_source(n) and not n.is_sink:
+            if (not self._is_source(n) and not n.is_sink
+                    and n.id not in self.epilogue_ids):
                 widths.append(n.ncol)
         widest_dtype = max((n.dtype for n in self.order), key=dtypes.rank)
         self.partition_rows = io_partition_rows(max(widths), widest_dtype, n_live)
@@ -178,7 +252,17 @@ class Plan:
                 if v is not None:
                     extra += f":{v.name}"
             ng = getattr(n, "num_groups", "")
-            role = "q" if self._is_source(n) else ("s" if n.is_sink else "m")
+            # Role is part of the cache key: the SAME structural node must
+            # not collide between a loop evaluation and an epilogue one
+            # (e.g. a requested sink vs that sink feeding post-sink math).
+            if self._is_source(n):
+                role = "E" if n.id in self._epi_src_ids else "q"
+            elif n.id in self.epilogue_ids:
+                role = "e"
+            elif n.is_sink:
+                role = "s"
+            else:
+                role = "m"
             sv = n.save or ""
             # Staging-group index: two cuts that alias their sources
             # differently (one matrix read through two leaves vs two distinct
@@ -189,8 +273,19 @@ class Plan:
         return ";".join(parts)
 
     def result_nodes(self):
-        """Deterministic result slots (sinks + requested + saves)."""
-        return list(self.sinks) + self.row_local_roots + self.saves
+        """Deterministic result slots (sinks + requested + saves +
+        epilogue outputs)."""
+        return (list(self.sinks) + self.row_local_roots + self.saves
+                + self.epilogue_roots)
+
+    def epilogue_source_pairs(self, mats=None) -> list[tuple[int, FMMatrix]]:
+        """``(node_id, matrix)`` per epilogue-only source.  ``mats`` may
+        override the matrices positionally (borrowed cached plans execute
+        with the new caller's data, exactly like staged_sources)."""
+        if mats is None:
+            mats = [m for _, m in self.epilogue_sources]
+        return [(node.id, mat)
+                for (node, _), mat in zip(self.epilogue_sources, mats)]
 
     def small_values(self):
         return [jnp.asarray(s.value) if hasattr(s.value, "shape")
@@ -229,8 +324,13 @@ class Plan:
 
     # -- cost counters (feed complexity + roofline reports) -----------------------
     def flop_count(self) -> float:
+        # Epilogue nodes run ONCE after the merge, not once per row — their
+        # O(p²)-ish cost is noise next to the streamed loop, so they are
+        # excluded rather than multiplied by the long dimension.
         return float(sum(n.flops_per_row() * self.long_dim
-                         for n in self.order if not self._is_source(n)))
+                         for n in self.order
+                         if not self._is_source(n)
+                         and n.id not in self.epilogue_ids))
 
     def bytes_in(self) -> int:
         """Bytes actually read per pass: one read per STAGING GROUP — a
@@ -240,7 +340,8 @@ class Plan:
 
     def bytes_out(self) -> int:
         total = 0
-        for n in self.row_local_roots + self.saves + list(self.sinks):
+        for n in (self.row_local_roots + self.saves + list(self.sinks)
+                  + self.epilogue_roots):
             total += n.nrow * n.ncol * dtypes.nbytes(n.dtype)
         return int(total)
 
@@ -249,6 +350,7 @@ class Plan:
                  f" fuse={self.fuse})"]
         for n in self.order:
             role = ("source" if self._is_source(n)
+                    else "epilog" if n.id in self.epilogue_ids
                     else "sink" if n.is_sink else "fused")
             lines.append(f"  [{role:6s}] {n!r}")
         lines.extend("  " + line for line in self.ir.describe().splitlines())

@@ -279,6 +279,48 @@ def inner_prod(a: MatLike, b, f1="mul", f2="sum") -> FMMatrix:
 
 
 # ---------------------------------------------------------------------------
+# epilogue-only linear algebra
+# ---------------------------------------------------------------------------
+
+def solve(a: MatLike, b=None) -> FMMatrix:
+    """Lazy R ``solve()``: a⁻¹ (b=None) or the solution x of a·x = b.
+
+    The operands are small (p×p / p×q) — typically aggregation sinks like
+    the IRLS XᵀWX / XᵀWz pair — so the node is an *epilogue* op
+    (dag.EPILOGUE_ONLY_KINDS): the engine evaluates it exactly once after
+    the partition-loop merge, on device, inside the same fused plan as the
+    sinks it consumes (core/fusion.py epilogue stage).
+    """
+    x = as_node(a)
+    if x.nrow != x.ncol:
+        raise ValueError(f"solve needs a square matrix, got {x.shape}")
+    if b is None:
+        rhs: "Operand" = Small(jnp.eye(x.nrow, dtype=jnp.float32))
+        rhs_ncol, rhs_dt = x.nrow, jnp.dtype(jnp.float32)
+    elif isinstance(b, (FMMatrix, Node)):
+        bn = as_node(b)
+        if bn.nrow == x.nrow:
+            rhs, rhs_ncol, rhs_dt = bn, bn.ncol, bn.dtype
+        elif bn.nrow == 1 and bn.ncol == x.nrow:
+            # R: a bare length-n vector is a one-column RHS; accept the
+            # (1, n) sink orientation (agg.col outputs) the same way.
+            rhs, rhs_ncol, rhs_dt = bn, 1, bn.dtype
+        else:
+            raise ValueError(
+                f"solve shape mismatch: {x.shape} vs {bn.shape}")
+    else:
+        arr = _small_array(b)
+        if arr.ndim == 1 or arr.shape[0] != x.nrow:
+            arr = arr.reshape(x.nrow, -1)
+        rhs = Small(arr)
+        rhs_ncol, rhs_dt = arr.shape[1], arr.dtype
+    dt = dtypes.to_floating(dtypes.promote(x.dtype, rhs_dt))
+    node = MapNode("solve", (x.nrow, rhs_ncol), dt, [x, rhs], {},
+                   name="solve")
+    return wrap(node)
+
+
+# ---------------------------------------------------------------------------
 # materialization control (paper Table II, Control rows)
 # ---------------------------------------------------------------------------
 

@@ -85,8 +85,11 @@ def lower(plan, ir, backend: str) -> "LoweredProgram":
 # ---------------------------------------------------------------------------
 
 class LoweredProgram:
-    """An executable lowering of one plan: per-partition ``step`` plus the
-    sink-partial ``combine`` merge."""
+    """An executable lowering of one plan: per-partition ``step``, the
+    sink-partial ``combine`` merge, and — when the plan has post-sink lazy
+    math — an ``epilogue`` callable the executor invokes exactly ONCE after
+    the merge: ``epilogue(merged_sinks, epilogue_sources, smalls) →
+    outputs`` (the engine's fourth stage)."""
 
     def __init__(self, plan, ir, backend: str, units):
         self.plan = plan
@@ -100,6 +103,8 @@ class LoweredProgram:
         # previous accumulators are dead after the merge.
         self.step_donated = jax.jit(self._step, donate_argnums=(0,))
         self.combine = jax.jit(self._combine, donate_argnums=(0,))
+        self.epilogue = (jax.jit(self._epilogue)
+                         if plan.epilogue_nodes else None)
 
     @property
     def kernel_units(self):
@@ -110,6 +115,9 @@ class LoweredProgram:
         lines = [f"LoweredProgram(backend={self.backend}, "
                  f"units={len(self.units)})"]
         lines += ["  " + u.describe() for u in self.units]
+        if self.epilogue is not None:
+            lines.append(f"  epilogue nodes={len(self.plan.epilogue_nodes)} "
+                         f"outs={[n.name for n in self.plan.epilogue_roots]}")
         return "\n".join(lines)
 
     def _step(self, source_blocks, smalls, offset):
@@ -136,6 +144,33 @@ class LoweredProgram:
     def _combine(self, accs, partials):
         return {nid: self._sinks_by_id[nid].combine(accs[nid], partials[nid])
                 for nid in accs}
+
+    def _epilogue(self, sink_finals, epi_sources, smalls):
+        """The plan's post-sink lazy math (paper §III-E: expressions like
+        ``colSums(X) / n`` fuse into the same execution job), evaluated on
+        the FINALIZED sink values — one on-device launch per materialize,
+        cached with the rest of the plan.
+
+        ``sink_finals``: {sink node id: finalized value} out of the merge;
+        ``epi_sources``: {leaf id: whole array} for small physical operands
+        only the epilogue consumes (e.g. a ridge eye matrix).  A sink-kind
+        node appearing here (``sum(colMeans(X))``) contracts an
+        already-merged small value, so it runs its identity→update→finalize
+        quartet once with offset 0.
+        """
+        values = dict(epi_sources)
+        values.update(sink_finals)
+        zero = jnp.zeros((), jnp.int32)
+        for n in self.plan.epilogue_nodes:
+            blocks = [smalls[self.plan._small_pos[id(p)]]
+                      if isinstance(p, Small) else values[p.id]
+                      for p in n.parents]
+            if n.is_sink:
+                acc = n.block_update(n.identity(), blocks, zero)
+                values[n.id] = n.finalize(acc)
+            else:
+                values[n.id] = n.block_eval(blocks, zero)
+        return {n.id: values[n.id] for n in self.plan.epilogue_roots}
 
 
 class Backend:
@@ -307,7 +342,10 @@ class XlaBackend(Backend):
     name = "xla"
 
     def lower(self, plan, ir) -> LoweredProgram:
-        units = [GenericUnit(plan, seg) for seg in ir.segments]
+        # The epilogue segment is not a partition unit: LoweredProgram
+        # compiles it into the separate post-merge callable.
+        units = [GenericUnit(plan, seg) for seg in ir.segments
+                 if seg.kind != "epilogue"]
         return LoweredProgram(plan, ir, self.name, units)
 
 
@@ -589,6 +627,8 @@ class PallasBackend(Backend):
             placed.update(matcher(plan, ir, claimed))
         units = []
         for seg in ir.segments:
+            if seg.kind == "epilogue":
+                continue  # post-merge math: LoweredProgram.epilogue, once
             if seg.sid in placed:
                 units.append(placed[seg.sid])
             elif seg.sid not in claimed:

@@ -12,7 +12,11 @@ segments — the unit a backend lowers as a whole:
   row-local chain it exclusively consumes: the classic apply→aggregate
   fusion the paper streams through the CPU cache;
 * ``contraction`` — an inner-product sink contracting the long dimension
-  (Gram/XᵀY): the MXU-bound pattern.
+  (Gram/XᵀY): the MXU-bound pattern;
+* ``epilogue``    — the plan's post-sink lazy math (``colSums(X)/n``,
+  ``solve(XᵀWX, XᵀWz)``): one segment holding every node downstream of a
+  sink, compiled into the lowered program's third callable and evaluated
+  exactly ONCE after the partition-loop merge (never per partition).
 
 Each segment carries width/dtype/FLOP metadata and a **processor-level
 block-row count** — the second tier of the paper's two-level partitioning
@@ -40,7 +44,7 @@ class Segment:
     """One fused lowering unit of the plan."""
 
     sid: int
-    kind: str                 # 'row_local' | 'sink_update' | 'contraction'
+    kind: str   # 'row_local' | 'sink_update' | 'contraction' | 'epilogue'
     nodes: List[Node]         # topological order; nodes[-1] is the root
     root: Node
     width: int                # widest live row (elements) inside the segment
@@ -89,7 +93,9 @@ def compile_ir(plan) -> PlanIR:
     intermediates root their own ``row_local`` segments; every sink roots a
     ``sink_update`` / ``contraction`` segment.
     """
-    exec_nodes = [n for n in plan.order if not _is_source(n)]
+    epilogue_ids = getattr(plan, "epilogue_ids", set())
+    exec_nodes = [n for n in plan.order
+                  if not _is_source(n) and n.id not in epilogue_ids]
     pos = {n.id: i for i, n in enumerate(plan.order)}
     value_roots = {n.id for n in plan.row_local_roots + plan.saves}
 
@@ -142,6 +148,16 @@ def compile_ir(plan) -> PlanIR:
             Segment(sid=len(segments), kind=kinds[sid], nodes=nodes,
                     root=roots[sid], width=1, dtype=roots[sid].dtype,
                     flops_per_row=0.0, n_live=1)))
+    epi_nodes = getattr(plan, "epilogue_nodes", [])
+    if epi_nodes:
+        # All post-sink math is ONE segment: it executes once, after the
+        # merge, so there is nothing to tile or interleave — kernels never
+        # claim it (matchers filter on the loop kinds).
+        segments.append(_with_metadata(
+            Segment(sid=len(segments), kind="epilogue",
+                    nodes=list(epi_nodes), root=epi_nodes[-1], width=1,
+                    dtype=epi_nodes[-1].dtype, flops_per_row=0.0,
+                    n_live=1)))
     return PlanIR(segments=segments, long_dim=plan.long_dim,
                   consumers=consumers)
 

@@ -10,8 +10,10 @@ of these calls builds one lazy DAG that `fm.materialize` fuses.
     >>> G = crossprod(Z)                       # Gram sink
     >>> (G,) = fm.materialize(G)               # one fused pass computes G
 
-(colMeans/colSds are sink-backed: each runs one moment pass; the
-standardized Z itself stays virtual and fuses into the Gram pass.)
+(colMeans/colSds are pure lazy chains — a colSums sink plus post-sink
+epilogue math evaluated once after the partition-loop merge; recycling
+them across X materializes the moment pass, and the standardized Z itself
+stays virtual and fuses into the Gram pass.)
 
 All functions accept and return `FM`.  `conv_FM2R` drops to numpy.
 """
@@ -316,13 +318,12 @@ def all_(x) -> FM:
 
 
 def colMeans(x) -> FM:
-    """R colMeans.  A sink's value cannot feed further lazy GenOps inside
-    the SAME DAG (the engine evaluates post-sink math on the small tier),
-    so this materializes the colSums sink — one streaming pass — and
-    returns a small physical (1, p) vector, ready to recycle across the
-    matrix (``X - colMeans(X)``)."""
-    mu = conv_FM2R(colSums(x)).astype(np.float64) / float(_fm(x).nrow)
-    return conv_R2FM(mu.reshape(1, -1).astype(np.float32))
+    """R colMeans — a pure lazy chain: the colSums sink divided by n in the
+    plan EPILOGUE (post-sink lazy math, evaluated once after the
+    partition-loop merge), so colMeans fuses into whatever pass
+    materializes it.  Recycling across the matrix (``X - colMeans(X)``)
+    materializes the chain first, as any virtual recycled vector does."""
+    return colSums(x) / float(_fm(x).nrow)
 
 
 def rowMeans(x) -> FM:
@@ -332,21 +333,44 @@ def rowMeans(x) -> FM:
 
 
 def colSds(x) -> FM:
-    """Column standard deviations (matrixStats::colSds) via the one-pass
-    moment form: the colSums and colSums(x²) sinks co-materialize in ONE
-    streaming pass; sqrt((Σx² − n·mean²)/(n−1)) runs on the small tier."""
+    """Column standard deviations (matrixStats::colSds), fully lazy: the
+    colSums and colSums(x²) sinks co-materialize in ONE streaming pass and
+    sqrt((Σx² − (Σx)²/n)/(n−1)) runs as an epilogue chain in the same
+    plan — nothing computes until the result is materialized."""
     n = float(_fm(x).nrow)
-    (s, s2) = materialize(colSums(x), colSums(x ** 2))
-    mu = conv_FM2R(s).reshape(-1) / n
-    var = (conv_FM2R(s2).reshape(-1) - n * mu ** 2) / (n - 1.0)
-    return conv_R2FM(np.sqrt(np.maximum(var, 0.0)).reshape(1, -1)
-                     .astype(np.float32))
+    s, s2 = colSums(x), colSums(x ** 2)
+    var = (s2 - s * s / n) / (n - 1.0)
+    return sqrt(pmax(var, 0.0))
 
 
-def mean_(x) -> float:
-    """R mean(): grand mean over all elements (scalar, small tier)."""
+def mean_(x) -> FM:
+    """R mean(): grand mean over all elements — a lazy epilogue scalar
+    (1×1); use ``fm.as_scalar`` for a python float."""
     m = _fm(x)
-    return as_scalar(agg(x, "sum")) / float(m.nrow * m.ncol)
+    return agg(x, "sum") / float(m.nrow * m.ncol)
+
+
+def scale(x, center=True, scale=True) -> FM:
+    """R scale(): center/standardize columns.  The column moments come from
+    ONE fused pass (the colMeans/colSds epilogue chains co-materialize);
+    the standardized matrix itself stays LAZY, ready to fuse into a
+    downstream Gram or IRLS pass — FlashR's ``scale(as.double(...))``
+    ingestion idiom.  Constant columns follow R: division yields non-finite
+    values rather than being silently clamped."""
+    wants = []
+    if center:
+        wants.append(colMeans(x))
+    if scale:
+        wants.append(colSds(x))
+    z = x if isinstance(x, FM) else FM(x)
+    if not wants:
+        return z
+    moments = materialize(*wants)
+    if center:
+        z = mapply_row(z, moments[0], "sub")
+    if scale:
+        z = mapply_row(z, moments[-1], "div")
+    return z
 
 
 def crossprod(x, y: Optional[FM] = None) -> FM:
@@ -368,9 +392,19 @@ def diag(x) -> FM:
 
 
 def solve(a, b=None) -> FM:
-    """R solve(): a⁻¹ (b=None) or the solution of a x = b, on the small
-    tier (numpy, float64) — the IRLS/Newton companion of the weighted-Gram
-    sink."""
+    """R solve(): a⁻¹ (b=None) or the solution of a x = b.
+
+    With a VIRTUAL operand (the XᵀWX / XᵀWz sinks of an IRLS step) this is
+    a LAZY GenOp evaluated in the plan epilogue: the Newton solve joins the
+    same fused pass as the sinks it consumes, one launch after the merge.
+    Like all on-device linear algebra it does NOT raise on singular
+    systems — non-finite values propagate into the result (check with
+    ``np.isfinite``; ``glm`` does).  Physical operands keep the eager
+    small-tier path (numpy, float64, raises ``LinAlgError``)."""
+    a_virtual = isinstance(a, FM) and a.is_virtual
+    b_virtual = isinstance(b, FM) and b.is_virtual
+    if a_virtual or b_virtual:
+        return FM(genops.solve(_fm(a), _fm(b) if isinstance(b, FM) else b))
     A = np.asarray(conv_FM2R(a) if isinstance(a, FM) else a, np.float64)
     if b is None:
         return conv_R2FM(np.linalg.inv(A))

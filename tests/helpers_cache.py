@@ -1,0 +1,56 @@
+"""Shared plan-cache / epilogue instrumentation helpers.
+
+Reused by test_lowering.py, test_epilogue.py and test_parity_fuzz.py: the
+engine exposes raw counters (repro.core.materialize.exec_stats), and these
+helpers turn them into delta assertions so tests state intent
+("this block must MISS once then HIT twice, with one epilogue launch per
+materialize") instead of poking at the counter dict.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+from repro.core import materialize as mz
+
+
+@dataclasses.dataclass
+class CacheActivity:
+    """Counter deltas observed across a ``cache_activity()`` block."""
+
+    hits: int = 0
+    misses: int = 0
+    materialize_calls: int = 0
+    epilogue_launches: int = 0
+    epilogue_host_inputs: int = 0
+    partition_steps: int = 0
+
+
+@contextlib.contextmanager
+def cache_activity():
+    """Record plan-cache and epilogue counter deltas over a with-block."""
+    before = mz.exec_stats()
+    act = CacheActivity()
+    try:
+        yield act
+    finally:
+        after = mz.exec_stats()
+        act.hits = after["plan_cache_hits"] - before["plan_cache_hits"]
+        act.misses = after["plan_cache_misses"] - before["plan_cache_misses"]
+        act.materialize_calls = (after["materialize_calls"]
+                                 - before["materialize_calls"])
+        act.epilogue_launches = (after["epilogue_launches"]
+                                 - before["epilogue_launches"])
+        act.epilogue_host_inputs = (after["epilogue_host_inputs"]
+                                    - before["epilogue_host_inputs"])
+        act.partition_steps = (after["partition_steps"]
+                               - before["partition_steps"])
+
+
+def assert_activity(act: CacheActivity, **expected):
+    """Assert exact counter deltas, e.g. ``assert_activity(act, misses=1,
+    hits=2, epilogue_launches=3)``.  Unmentioned counters are unchecked."""
+    for name, want in expected.items():
+        got = getattr(act, name)
+        assert got == want, (
+            f"{name}: expected {want}, got {got} (full activity: {act})")

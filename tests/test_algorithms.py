@@ -171,6 +171,15 @@ def test_glm_poisson(logit_data):
     assert res.converged
 
 
+def test_glm_singular_raises(logit_data):
+    """The on-device epilogue solve cannot raise like the old eager f64
+    path — glm restores the diagnostic with a finite check on beta."""
+    X, y = logit_data
+    Xs = np.concatenate([X[:, :3], X[:, :1]], axis=1)  # duplicated column
+    with pytest.raises(np.linalg.LinAlgError, match="ridge"):
+        glm(fm.conv_R2FM(Xs), fm.conv_R2FM(y), family="logistic")
+
+
 def test_glm_predict(logit_data):
     X, y = logit_data
     res = glm(fm.conv_R2FM(X), fm.conv_R2FM(y), family="logistic")

@@ -1,0 +1,309 @@
+"""Plan EPILOGUE stage tests (ISSUE 4 tentpole).
+
+Contract under test: post-sink lazy math — ``colSums(X)/n``,
+``sqrt(ss/n − mean²)``, ``solve(XᵀWX, XᵀWz)`` — executes INSIDE the same
+plan as the sinks it consumes: one streaming pass over the sources, one
+on-device epilogue launch after the partial merge, one plan-cache entry,
+identical results on every backend × mode cell.
+"""
+import numpy as np
+import pytest
+
+from helpers_cache import assert_activity, cache_activity
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core.fusion import Plan
+
+RNG = np.random.default_rng(3)
+
+
+def _x(n=600, p=5):
+    return (RNG.normal(size=(n, p)) * 2 + 0.5).astype(np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _small_partitions():
+    """Make streams multi-partition so the merge actually merges."""
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=4096)
+    mz.clear_plan_cache()
+    yield
+    matrix_mod.IO_PARTITION_BYTES = old
+    mz.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# The regression the ISSUE names: a DAG whose ONLY output is a sink-consumer
+# ---------------------------------------------------------------------------
+
+def test_sink_consumer_only_output_materializes():
+    """fm.materialize on a bare sink-consumer used to raise from the eager
+    small-tier workaround path; it now routes through the epilogue."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    (m,) = fm.materialize(fm.colSums(X) / float(X.nrow))
+    np.testing.assert_allclose(fm.as_np(m).reshape(-1), a.mean(0), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["whole", "stream"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_colmeans_colsds_one_plan_one_epilogue(mode, backend):
+    """colMeans + colSds co-materialize: ONE pass over X, ONE epilogue
+    launch, parity with numpy — the ISSUE acceptance counters."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    mu, sd = fm.colMeans(X), fm.colSds(X)
+    plan = Plan([mu.m, sd.m])
+    # Static one-pass proof: bytes_in counts each physical source once.
+    assert plan.bytes_in() == X.m.nbytes()
+    assert [s.kind for s in plan.ir.segments].count("epilogue") == 1
+    with cache_activity() as act:
+        mu_m, sd_m = fm.materialize(mu, sd, mode=mode, backend=backend)
+    assert_activity(act, misses=1, hits=0, epilogue_launches=1,
+                    materialize_calls=1)
+    np.testing.assert_allclose(fm.as_np(mu_m).reshape(-1), a.mean(0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(fm.as_np(sd_m).reshape(-1),
+                               a.std(0, ddof=1), rtol=1e-3)
+
+
+def test_epilogue_rides_kernel_lowering():
+    """The pallas backend still claims the sink chains below an epilogue
+    (fused_apply_agg); the epilogue itself is never a kernel unit."""
+    X = fm.conv_R2FM(_x())
+    plan = Plan([fm.colMeans(X).m, fm.colSds(X).m])
+    prog = plan.program("pallas")
+    assert [u.kernel for u in prog.kernel_units] == ["fused_apply_agg"]
+    assert prog.epilogue is not None
+
+
+# ---------------------------------------------------------------------------
+# The IRLS shape: sinks + epilogue solve in one plan
+# ---------------------------------------------------------------------------
+
+def test_glm_style_solve_in_plan():
+    a = _x(800, 4)
+    wv = np.abs(RNG.normal(size=(800,))).astype(np.float32) + 0.1
+    zv = RNG.normal(size=(800, 1)).astype(np.float32)
+    X, w, z = fm.conv_R2FM(a), fm.conv_R2FM(wv), fm.conv_R2FM(zv)
+    XtWX = fm.crossprod(fm.mapply_col(X, w, "mul"), X)
+    XtWz = fm.crossprod(X, w * z)
+    beta = fm.solve(XtWX, XtWz)
+    assert beta.is_virtual  # lazy: nothing computed yet
+    plan = Plan([beta.m])
+    assert plan.bytes_in() == X.m.nbytes() + w.m.nbytes() + z.m.nbytes()
+    assert "wgram" in [u.kernel for u in plan.program("pallas").kernel_units]
+    with cache_activity() as act:
+        (b_m,) = fm.materialize(beta, mode="stream")
+    assert_activity(act, epilogue_launches=1, materialize_calls=1)
+    A = (a * wv[:, None]).T.astype(np.float64) @ a
+    rhs = a.T.astype(np.float64) @ (wv[:, None] * zv)
+    np.testing.assert_allclose(fm.as_np(b_m), np.linalg.solve(A, rhs),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_solve_inverse_and_physical_operands():
+    """solve(A) with a virtual Gram sink → epilogue inverse; physical
+    operands keep the eager float64 path (non-virtual result)."""
+    a = _x(300, 4)
+    X = fm.conv_R2FM(a)
+    (inv_m,) = fm.materialize(fm.solve(fm.crossprod(X)))
+    G = a.T.astype(np.float64) @ a
+    np.testing.assert_allclose(fm.as_np(inv_m), np.linalg.inv(G),
+                               rtol=1e-3, atol=1e-6)
+    A = (G + 10 * np.eye(4)).astype(np.float32)
+    eager = fm.solve(fm.conv_R2FM(A))
+    assert not eager.is_virtual
+    np.testing.assert_allclose(fm.as_np(eager), np.linalg.inv(A), rtol=1e-4)
+
+
+def test_solve_rhs_shapes():
+    """A (1, n) vector sink is accepted as a one-column RHS; a (k, n)
+    matrix is NOT silently truncated to a vector (shape-corruption
+    regression)."""
+    a = _x(300, 4)
+    X = fm.conv_R2FM(a)
+    A = fm.crossprod(X)
+    (x1,) = fm.materialize(fm.solve(A, fm.colSums(X)))  # (1, 4) sink RHS
+    G = a.T.astype(np.float64) @ a
+    np.testing.assert_allclose(
+        fm.as_np(x1), np.linalg.solve(G, a.sum(0).reshape(-1, 1)),
+        rtol=1e-3, atol=1e-5)
+    with pytest.raises(ValueError, match="solve shape mismatch"):
+        fm.solve(fm.crossprod(X), fm.conv_R2FM(_x(2, 4)) + 0.0)
+
+
+def test_epilogue_evaluated_sink():
+    """A sink whose operand is itself post-sink (sum(colMeans(X))) runs its
+    identity→update→finalize quartet inside the epilogue."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    tot = fm.sum_(fm.colMeans(X))
+    plan = Plan([tot.m])
+    assert [n.kind for n in plan.epilogue_nodes] == ["mapply", "agg"]
+    assert plan.sinks and all(n.kind == "agg_col" for n in plan.sinks)
+    assert abs(fm.as_scalar(tot) - a.mean(0).sum()) < 1e-4
+
+
+def test_mean_and_scale_are_lazy():
+    a = _x(400, 3)
+    X = fm.conv_R2FM(a)
+    m = fm.mean_(X)
+    assert m.is_virtual
+    assert abs(fm.as_scalar(m) - a.mean()) < 1e-5
+    Z = fm.scale(X)
+    assert Z.is_virtual  # moments materialized, the sweep itself is lazy
+    (G,) = fm.materialize(fm.crossprod(Z))
+    Zn = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(G), Zn.T @ Zn, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache correctness under the epilogue key
+# ---------------------------------------------------------------------------
+
+def test_cache_no_collision_with_and_without_epilogue():
+    """The same sink requested bare vs feeding an epilogue must be two
+    cache entries (an epilogue-less executable would silently drop the
+    post-sink math); re-running each signature is a hit."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    with cache_activity() as act:
+        fm.materialize(fm.colSums(X))
+        fm.materialize(fm.colSums(X) / float(X.nrow))
+        fm.materialize(fm.colSums(X))
+        (mu_m,) = fm.materialize(fm.colSums(X) / float(X.nrow))
+    assert_activity(act, misses=2, hits=2, epilogue_launches=2)
+    np.testing.assert_allclose(fm.as_np(mu_m).reshape(-1), a.mean(0),
+                               rtol=1e-5)
+
+
+def test_cached_plan_reuse_with_epilogue_iteration():
+    """IRLS-style loop: iteration N+1 (new Small beta) borrows the cached
+    executable — including its epilogue — and produces correct results."""
+    a = _x(500, 3)
+    yv = RNG.normal(size=(500, 1)).astype(np.float32)
+    X, y = fm.conv_R2FM(a), fm.conv_R2FM(yv)
+    betas = []
+    with cache_activity() as act:
+        for it in range(3):
+            shift = float(it)
+            r = y - X @ np.full((3, 1), shift, np.float32)
+            beta = fm.solve(fm.crossprod(X), fm.crossprod(X, r))
+            (b_m,) = fm.materialize(beta, mode="stream")
+            betas.append(fm.as_np(b_m))
+    assert_activity(act, misses=1, hits=2, epilogue_launches=3)
+    G = a.T.astype(np.float64) @ a
+    for it, got in enumerate(betas):
+        r = yv - a @ np.full((3, 1), float(it), np.float32)
+        ref = np.linalg.solve(G, a.T.astype(np.float64) @ r)
+        np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ooc: merged sinks land on device before the epilogue runs
+# ---------------------------------------------------------------------------
+
+def test_ooc_epilogue_inputs_on_device(tmp_path, monkeypatch):
+    """Disk-backed sources: the epilogue callable must receive device
+    arrays only — no np.memmap/numpy leaks past the merge (the
+    epilogue_host_inputs counter records any violation)."""
+    from repro import storage
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    a = _x(700, 4)
+    Xd = fm.load_dense_matrix(a, "epi_x")
+    assert Xd.m.on_disk
+    with cache_activity() as act:
+        mu_m, sd_m = fm.materialize(fm.colMeans(Xd), fm.colSds(Xd))
+    assert_activity(act, epilogue_launches=1, epilogue_host_inputs=0)
+    assert act.partition_steps > 1  # genuinely multi-partition ooc
+    np.testing.assert_allclose(fm.as_np(mu_m).reshape(-1), a.mean(0),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(fm.as_np(sd_m).reshape(-1),
+                               a.std(0, ddof=1), rtol=1e-3)
+    # The stored results themselves are device-resident (sink-like).
+    assert not mu_m.m.on_host and not sd_m.m.on_host
+
+
+def test_ooc_ridge_eye_is_epilogue_source(tmp_path, monkeypatch):
+    """A small physical matrix consumed only by the epilogue (ridge eye) is
+    handed whole to the callable — staged to device, never streamed."""
+    from repro import storage
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    a = _x(512, 3)
+    Xd = fm.load_dense_matrix(a, "epi_ridge_x")
+    eye = fm.conv_R2FM(np.eye(3, dtype=np.float32), host=True)
+    A = fm.crossprod(Xd) + eye
+    plan = Plan([A.m])
+    assert len(plan.epilogue_sources) == 1
+    assert plan.bytes_in() == Xd.m.nbytes()  # eye not part of the stream
+    with cache_activity() as act:
+        (am,) = fm.materialize(A)
+    assert_activity(act, epilogue_launches=1, epilogue_host_inputs=0)
+    np.testing.assert_allclose(fm.as_np(am),
+                               a.T.astype(np.float64) @ a + np.eye(3),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Guard rails
+# ---------------------------------------------------------------------------
+
+def test_epilogue_of_streaming_intermediate_rejected():
+    """solve() of a row-local (streaming) intermediate needs a second pass:
+    the plan refuses with an actionable message instead of mis-executing."""
+    a = _x(8, 8)  # square so the row-local chain shares the long dim
+    Z = fm.conv_R2FM(a) + 1.0
+    bad = fm.solve(Z, np.ones((8, 1), np.float32))
+    with pytest.raises(ValueError, match="streaming intermediate"):
+        fm.materialize(bad)
+
+
+def test_source_shared_by_loop_and_epilogue_rejected():
+    from repro.core import genops
+    from repro.core.dag import as_node, wrap
+
+    leaf = wrap(as_node(fm.conv_R2FM(_x(4, 4)).m))
+    sink = genops.agg_col(leaf.node, "sum")      # loop consumer
+    inv = genops.solve(leaf.node)                # epilogue consumer
+    with pytest.raises(ValueError, match="both the partition loop"):
+        Plan([sink, inv])
+
+
+def test_persisted_sink_as_cut_source_keeps_its_value():
+    """Regression: a materialized sink reused as a SOURCE of a later plan
+    must not re-register as that plan's sink — the executor would
+    re-initialize it to its identity and clobber the persisted value with
+    zeros (the eager-mode IRLS NaN bug)."""
+    a = _x(400, 3)
+    X = fm.conv_R2FM(a)
+    s = fm.colSums(X)
+    fm.materialize(s)
+    v1 = fm.as_np(s).copy()
+    plan = Plan([(s / 400.0).m])
+    assert plan.sinks == []          # the persisted sink is a source here
+    (mu_m,) = fm.materialize(s / 400.0)
+    np.testing.assert_array_equal(fm.as_np(s), v1)  # value survived
+    np.testing.assert_allclose(fm.as_np(mu_m).reshape(-1), a.mean(0),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eager (fuse=False) arm still works — the ablation baseline
+# ---------------------------------------------------------------------------
+
+def test_eager_mode_epilogue_parity():
+    a = _x(300, 4)
+    X = fm.conv_R2FM(a)
+    with cache_activity() as act:
+        (sd_m,) = fm.materialize(fm.colSds(X), fuse=False)
+    np.testing.assert_allclose(fm.as_np(sd_m).reshape(-1),
+                               a.std(0, ddof=1), rtol=1e-3)
+    # unfused: every post-sink node materializes as its OWN tiny plan over
+    # persisted cut points (no epilogue at all) — many separate executions
+    # instead of one launch, exactly the contrast fusion_ablation measures.
+    assert act.epilogue_launches == 0
+    assert act.partition_steps >= 5

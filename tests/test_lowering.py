@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers_cache import assert_activity, cache_activity
 from repro.core import fm
 from repro.core import materialize as mz
 from repro.core import matrix as matrix_mod
@@ -271,12 +272,13 @@ def test_plan_cache_misses_on_backend_change():
     mz.clear_plan_cache()
     a = _data(4096, 4, np.float32)
     X = fm.conv_R2FM(a)
-    fm.materialize(fm.colSums(X), backend="xla")
-    assert len(mz._PLANS) == 1
-    fm.materialize(fm.colSums(X), backend="pallas")
-    assert len(mz._PLANS) == 2  # backend is part of the key
-    fm.materialize(fm.colSums(X), backend="pallas")
-    assert len(mz._PLANS) == 2  # … and the second pallas run is a hit
+    with cache_activity() as act:
+        fm.materialize(fm.colSums(X), backend="xla")
+        fm.materialize(fm.colSums(X), backend="pallas")
+        fm.materialize(fm.colSums(X), backend="pallas")
+    # backend is part of the key; the second pallas run is a hit
+    assert_activity(act, misses=2, hits=1, materialize_calls=3)
+    assert len(mz._PLANS) == 2
     mz.clear_plan_cache()
 
 
@@ -306,14 +308,19 @@ def test_compile_once_stream_many_per_backend():
     mz.clear_plan_cache()
     a = _data(2048, 4, np.float32)
     X = fm.conv_R2FM(a)
-    for backend in ("xla", "pallas"):
-        for it in range(3):
-            centers = RNG.normal(size=(3, 4)).astype(np.float32)
-            D = fm.inner_prod(X, centers.T, "squared_diff", "sum")
-            labels = fm.which_min_row(D)
-            fm.materialize(fm.rowsum(X, labels, 3), fm.table_(labels, 3),
-                           fm.sum_(fm.rowMins(D)), labels, backend=backend)
-    assert len(mz._PLANS) == 2  # one entry per backend, not per iteration
+    with cache_activity() as act:
+        for backend in ("xla", "pallas"):
+            for it in range(3):
+                centers = RNG.normal(size=(3, 4)).astype(np.float32)
+                D = fm.inner_prod(X, centers.T, "squared_diff", "sum")
+                labels = fm.which_min_row(D)
+                fm.materialize(fm.rowsum(X, labels, 3),
+                               fm.table_(labels, 3),
+                               fm.sum_(fm.rowMins(D)), labels,
+                               backend=backend)
+    # one entry per backend, not per iteration
+    assert_activity(act, misses=2, hits=4)
+    assert len(mz._PLANS) == 2
     mz.clear_plan_cache()
 
 

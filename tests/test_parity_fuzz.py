@@ -1,0 +1,513 @@
+"""Randomized cross-backend DAG parity fuzzing (ISSUE 4 satellite).
+
+Random GenOp DAGs — row-local chains, aggregation sinks, and POST-SINK
+epilogue math — execute on every backend∈{xla, pallas} × mode∈{mem,
+stream, ooc} cell and are checked against a NumPy float64 oracle evaluated
+alongside the same program.
+
+The harness is deterministic and shrinking-friendly without external
+dependencies (hypothesis is optional in this environment): programs are
+generated from ``FUZZ_SEED`` (example i uses seed FUZZ_SEED + i), and on
+failure the harness greedily deletes instructions while the failure
+reproduces, then reports the MINIMAL failing program as a paste-able repr.
+
+Knobs (used by CI):
+  FUZZ_EXAMPLES   number of random programs (default 25; PR fuzz job 200,
+                  nightly cron 2000)
+  FUZZ_SEED       base seed (default 0; PRs pin it, nightly varies it)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+import numpy as np
+import pytest
+
+from repro.core import fm
+from repro.core import materialize as mz
+
+EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "25"))
+BASE_SEED = int(os.environ.get("FUZZ_SEED", "0"))
+
+CELLS = [(backend, mode)
+         for backend in ("xla", "pallas")
+         for mode in ("mem", "stream", "ooc")]
+
+_SAPPLY = ("abs", "neg", "sq", "sqrt_abs")
+_BINOPS = ("add", "sub", "mul", "pmin", "pmax")
+_SCALARS = (0.7, -1.5, 2.0, 3.0)
+_SINKS = ("colsums", "colmins", "colmaxs", "sumall", "crossprod")
+
+#: Magnitude budget per register (tracked symbolically while generating):
+#: keeps i32 accumulators far from overflow and float comparisons
+#: well-conditioned.
+_EST_CAP = {"f32": 1e5, "i32": 1e5}
+
+#: Which tuple positions of each op are REGISTER references (other int
+#: positions are seeds/widths and must never be treated as dependencies).
+_REG_ARGS = {
+    "sapply": (1,), "sscalar": (1,), "mapply": (1, 2), "mapply_row": (1,),
+    "rowsums": (1,), "cbind": (1, 2), "matmul": (1,), "colsums": (1,),
+    "colmins": (1,), "colmaxs": (1,), "sumall": (1,), "crossprod": (1, 2),
+    "escalar": (1,), "emap": (1, 2), "esapply": (1,), "esum": (1,),
+}
+
+
+def _reg_args(op) -> list:
+    return [op[i] for i in _REG_ARGS[op[0]] if op[i] is not None]
+
+
+@dataclasses.dataclass
+class Program:
+    """A straight-line GenOp program.  Register 0 is the input matrix;
+    instruction k writes register k+1.  ``outputs`` lists registers to
+    materialize together (one fused plan)."""
+
+    seed: int
+    n: int
+    p: int
+    dtype: str                       # 'f32' | 'i32'
+    ops: List[Tuple]
+    outputs: List[int]
+
+    def __repr__(self):
+        lines = [f"Program(seed={self.seed}, n={self.n}, p={self.p}, "
+                 f"dtype={self.dtype!r},"]
+        lines.append("  ops=[")
+        for k, op in enumerate(self.ops):
+            lines.append(f"    {op!r},   # -> r{k + 1}")
+        lines.append(f"  ], outputs={self.outputs})")
+        return "\n".join(lines)
+
+
+def _vec(seed: int, w: int) -> np.ndarray:
+    r = np.random.default_rng(seed)
+    return (r.uniform(0.5, 2.0, w) * r.choice([-1.0, 1.0], w)) \
+        .astype(np.float32)
+
+
+def _mat(seed: int, w: int, q: int) -> np.ndarray:
+    return np.random.default_rng(seed).uniform(-1.5, 1.5, (w, q)) \
+        .astype(np.float32)
+
+
+def _input(prog: Program) -> np.ndarray:
+    r = np.random.default_rng(prog.seed)
+    if prog.dtype == "i32":
+        return r.integers(-20, 21, size=(prog.n, prog.p)).astype(np.int32)
+    return (r.normal(size=(prog.n, prog.p)) * 2).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Reg:
+    tag: str        # 'tall' | 'post'
+    ncol: int
+    est: float      # loose abs-magnitude bound (overflow/conditioning guard)
+    nrow: int = 1   # post registers only (talls all share the long dim)
+
+
+def generate(seed: int) -> Program:
+    r = np.random.default_rng(seed)
+    n = int(r.choice([48, 64, 96, 130]))
+    p = int(r.choice([1, 2, 3, 4]))
+    dtype = "i32" if r.random() < 0.25 else "f32"
+    cap = _EST_CAP[dtype]
+    regs = [_Reg("tall", p, 25.0)]
+    ops: List[Tuple] = []
+
+    def talls():
+        return [i for i, g in enumerate(regs) if g.tag == "tall"]
+
+    def posts():
+        return [i for i, g in enumerate(regs) if g.tag == "post"]
+
+    def emit(op, reg):
+        ops.append(op)
+        regs.append(reg)
+
+    n_ops = int(r.integers(3, 10))
+    for _ in range(n_ops):
+        kind = r.choice(["tall", "tall", "sink", "epi", "epi"])
+        if kind == "epi" and not posts():
+            kind = "sink"  # seed a sink so epilogue chains can grow on it
+        if kind == "tall":
+            i = int(r.choice(talls()))
+            g = regs[i]
+            choice = r.choice(["sapply", "sscalar", "mapply", "mapply_row",
+                               "rowsums", "cbind", "matmul"])
+            if choice == "sapply":
+                f = str(r.choice(_SAPPLY))
+                est = g.est * g.est if f == "sq" else g.est
+                if est > cap:
+                    f, est = "abs", g.est
+                emit(("sapply", i, f), _Reg("tall", g.ncol, est))
+            elif choice == "sscalar":
+                op = str(r.choice(("add", "sub", "mul", "div")))
+                c = float(r.choice(_SCALARS))
+                if op == "div":
+                    c = abs(c) + 0.5
+                est = g.est * abs(c) if op == "mul" else g.est + abs(c)
+                if est > cap:
+                    continue
+                emit(("sscalar", i, op, c), _Reg("tall", g.ncol, est))
+            elif choice == "mapply":
+                js = [j for j in talls() if regs[j].ncol == g.ncol]
+                j = int(r.choice(js))
+                op = str(r.choice(_BINOPS))
+                est = (g.est * regs[j].est if op == "mul"
+                       else g.est + regs[j].est)
+                if est > cap:
+                    continue
+                emit(("mapply", i, j, op), _Reg("tall", g.ncol, est))
+            elif choice == "mapply_row":
+                op = str(r.choice(("add", "sub", "mul", "div")))
+                est = g.est * 2 + 2
+                if est > cap:
+                    continue
+                emit(("mapply_row", i, int(r.integers(1 << 20)), op),
+                     _Reg("tall", g.ncol, est))
+            elif choice == "rowsums":
+                emit(("rowsums", i), _Reg("tall", 1, g.est * g.ncol))
+            elif choice == "cbind":
+                j = int(r.choice(talls()))
+                if g.ncol + regs[j].ncol > 6:
+                    continue
+                emit(("cbind", i, j),
+                     _Reg("tall", g.ncol + regs[j].ncol,
+                          max(g.est, regs[j].est)))
+            elif choice == "matmul":
+                q = int(r.integers(1, 4))
+                est = g.est * g.ncol * 1.5
+                if est > cap:
+                    continue
+                emit(("matmul", i, int(r.integers(1 << 20)), q),
+                     _Reg("tall", q, est))
+        elif kind == "sink":
+            i = int(r.choice(talls()))
+            g = regs[i]
+            choice = str(r.choice(_SINKS))
+            if choice == "crossprod":
+                js = [None] + talls()
+                j = js[int(r.integers(len(js)))]
+                jest = g.est if j is None else regs[j].est
+                jcol = g.ncol if j is None else regs[j].ncol
+                if g.est * jest * n > 5e7:
+                    continue
+                emit(("crossprod", i, j),
+                     _Reg("post", jcol, g.est * jest * n, nrow=g.ncol))
+            elif choice == "sumall":
+                if g.est * n * g.ncol > 5e7:
+                    continue
+                emit(("sumall", i), _Reg("post", 1, g.est * n * g.ncol))
+            else:
+                if choice == "colsums" and g.est * n > 5e7:
+                    continue
+                emit((choice, i),
+                     _Reg("post", g.ncol,
+                          g.est * (n if choice == "colsums" else 1)))
+        else:  # epilogue math over post values
+            if not posts():
+                continue
+            i = int(r.choice(posts()))
+            g = regs[i]
+            choice = r.choice(["escalar", "emap", "esapply", "esum"])
+            if choice == "escalar":
+                op = str(r.choice(("add", "sub", "mul", "div")))
+                c = float(r.choice(_SCALARS))
+                if op == "div":
+                    c = abs(c) + 0.5
+                emit(("escalar", i, op, c),
+                     _Reg("post", g.ncol, g.est * abs(c) + abs(c),
+                          nrow=g.nrow))
+            elif choice == "emap":
+                js = [j for j in posts() if j != i
+                      and regs[j].ncol == g.ncol
+                      and regs[j].nrow == g.nrow]
+                if not js:
+                    continue
+                j = int(r.choice(js))
+                op = str(r.choice(_BINOPS))
+                est = (g.est * regs[j].est if op == "mul"
+                       else g.est + regs[j].est)
+                if est > 1e10:
+                    continue
+                emit(("emap", i, j, op),
+                     _Reg("post", g.ncol, est, nrow=g.nrow))
+            elif choice == "esapply":
+                f = str(r.choice(("abs", "neg", "sqrt_abs")))
+                emit(("esapply", i, f),
+                     _Reg("post", g.ncol, g.est, nrow=g.nrow))
+            elif choice == "esum":
+                emit(("esum", i), _Reg("post", 1, g.est * g.ncol))
+
+    if not any(regs[k].tag == "post" for k in range(1, len(regs))):
+        i = int(r.choice(talls()))
+        emit(("colmaxs", i), _Reg("post", regs[i].ncol, regs[i].est))
+
+    consumed = set()
+    for op in ops:
+        consumed.update(_reg_args(op))
+    outputs = [k for k in range(1, len(regs)) if k not in consumed]
+    if not outputs:
+        outputs = [len(regs) - 1]
+    return Program(seed=seed, n=n, p=p, dtype=dtype, ops=ops,
+                   outputs=outputs)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: the engine and the numpy oracle interpret the SAME program
+# ---------------------------------------------------------------------------
+
+def eval_numpy(prog: Program) -> List[np.ndarray]:
+    x = _input(prog).astype(np.float64)
+    regs = [x]
+
+    def f1(v, f):
+        return {"abs": np.abs, "neg": np.negative, "sq": np.square,
+                "sqrt_abs": lambda u: np.sqrt(np.abs(u))}[f](v)
+
+    def f2(a, b, op):
+        return {"add": np.add, "sub": np.subtract, "mul": np.multiply,
+                "div": np.divide, "pmin": np.minimum,
+                "pmax": np.maximum}[op](a, b)
+
+    for op in prog.ops:
+        k = op[0]
+        if k == "sapply" or k == "esapply":
+            regs.append(f1(regs[op[1]], op[2]))
+        elif k == "sscalar" or k == "escalar":
+            regs.append(f2(regs[op[1]], op[3], op[2]))
+        elif k == "mapply" or k == "emap":
+            regs.append(f2(regs[op[1]], regs[op[2]], op[3]))
+        elif k == "mapply_row":
+            v = _vec(op[2], regs[op[1]].shape[1]).astype(np.float64)
+            regs.append(f2(regs[op[1]], v.reshape(1, -1), op[3]))
+        elif k == "rowsums":
+            regs.append(regs[op[1]].sum(1, keepdims=True))
+        elif k == "cbind":
+            regs.append(np.concatenate([regs[op[1]], regs[op[2]]], 1))
+        elif k == "matmul":
+            m = _mat(op[2], regs[op[1]].shape[1], op[3]).astype(np.float64)
+            regs.append(regs[op[1]] @ m)
+        elif k == "colsums":
+            regs.append(regs[op[1]].sum(0, keepdims=True))
+        elif k == "colmins":
+            regs.append(regs[op[1]].min(0, keepdims=True))
+        elif k == "colmaxs":
+            regs.append(regs[op[1]].max(0, keepdims=True))
+        elif k == "sumall" or k == "esum":
+            regs.append(regs[op[1]].sum().reshape(1, 1))
+        elif k == "crossprod":
+            a = regs[op[1]]
+            b = a if op[2] is None else regs[op[2]]
+            regs.append(a.T @ b)
+        else:  # pragma: no cover - generator/evaluator mismatch
+            raise AssertionError(f"unknown op {k}")
+    return [np.asarray(regs[i], np.float64) for i in prog.outputs]
+
+
+def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
+    xn = _input(prog)
+    X = fm.conv_R2FM(xn, host=(mode == "ooc"))
+    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
+    regs = [X]
+
+    def f1(v, f):
+        if f == "sqrt_abs":
+            return fm.sqrt(fm.abs_(v))
+        return {"abs": fm.abs_, "neg": lambda u: -u,
+                "sq": lambda u: u ** 2}[f](v)
+
+    def f2(a, b, op):
+        if op == "pmin":
+            return fm.pmin(a, b)
+        if op == "pmax":
+            return fm.pmax(a, b)
+        return {"add": lambda u, v: u + v, "sub": lambda u, v: u - v,
+                "mul": lambda u, v: u * v,
+                "div": lambda u, v: u / v}[op](a, b)
+
+    for op in prog.ops:
+        k = op[0]
+        if k == "sapply" or k == "esapply":
+            regs.append(f1(regs[op[1]], op[2]))
+        elif k == "sscalar" or k == "escalar":
+            regs.append(f2(regs[op[1]], op[3], op[2]))
+        elif k == "mapply" or k == "emap":
+            regs.append(f2(regs[op[1]], regs[op[2]], op[3]))
+        elif k == "mapply_row":
+            v = _vec(op[2], regs[op[1]].ncol)
+            regs.append(fm.mapply_row(regs[op[1]], v, op[3]))
+        elif k == "rowsums":
+            regs.append(fm.rowSums(regs[op[1]]))
+        elif k == "cbind":
+            regs.append(fm.cbind(regs[op[1]], regs[op[2]]))
+        elif k == "matmul":
+            regs.append(regs[op[1]] @ _mat(op[2], regs[op[1]].ncol, op[3]))
+        elif k == "colsums":
+            regs.append(fm.colSums(regs[op[1]]))
+        elif k == "colmins":
+            regs.append(fm.colMins(regs[op[1]]))
+        elif k == "colmaxs":
+            regs.append(fm.colMaxs(regs[op[1]]))
+        elif k == "sumall" or k == "esum":
+            regs.append(fm.sum_(regs[op[1]]))
+        elif k == "crossprod":
+            b = None if op[2] is None else regs[op[2]]
+            regs.append(fm.crossprod(regs[op[1]], b))
+        else:  # pragma: no cover
+            raise AssertionError(f"unknown op {k}")
+    outs = fm.materialize(*[regs[i] for i in prog.outputs],
+                          mode=exec_mode, backend=backend)
+    return [np.asarray(fm.as_np(o), np.float64) for o in outs]
+
+
+def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
+    """Run one grid cell against the oracle; returns an error string (or
+    None) instead of raising, so the shrinker can probe cheaply."""
+    try:
+        refs = eval_numpy(prog)
+        gots = eval_engine(prog, backend, mode)
+        for o, (got, ref) in zip(prog.outputs, zip(gots, refs)):
+            scale = max(1.0, float(np.max(np.abs(ref))))
+            err = float(np.max(np.abs(got - ref))) / scale
+            if not np.isfinite(got).all() and np.isfinite(ref).all():
+                return f"r{o}: non-finite engine result"
+            if err > 2e-3:
+                return (f"r{o}: normalized max abs err {err:.2e} "
+                        f"(got[0,0]={got.flat[0]!r} ref[0,0]={ref.flat[0]!r})")
+        return None
+    except AssertionError:
+        raise
+    except Exception as e:  # engine crash on a valid program IS a failure
+        return f"{type(e).__name__}: {e}"
+
+
+# ---------------------------------------------------------------------------
+# Shrinking: greedy instruction deletion, dependency-aware
+# ---------------------------------------------------------------------------
+
+def _drop_op(prog: Program, k: int) -> Optional[Program]:
+    """Program with instruction k removed (register k+1 dropped), or None
+    when a later instruction or the sole output depends on it."""
+    victim = k + 1
+    for later in prog.ops[k + 1:]:
+        if victim in _reg_args(later):
+            return None
+    outputs = [o for o in prog.outputs if o != victim]
+    if not outputs:
+        return None
+
+    ops = []
+    for idx, op in enumerate(prog.ops):
+        if idx == k:
+            continue
+        op = list(op)
+        for pos in _REG_ARGS[op[0]]:
+            if op[pos] is not None and op[pos] > victim:
+                op[pos] -= 1
+        ops.append(tuple(op))
+    return dataclasses.replace(
+        prog, ops=ops, outputs=[o - 1 if o > victim else o for o in outputs])
+
+
+def shrink(prog: Program, backend: str, mode: str, budget: int = 150):
+    """Greedy delta-debugging: drop instructions while the cell still
+    fails.  Deterministic, bounded, dependency-safe."""
+    evals = 0
+    changed = True
+    while changed and evals < budget:
+        changed = False
+        for k in reversed(range(len(prog.ops))):
+            cand = _drop_op(prog, k)
+            if cand is None:
+                continue
+            evals += 1
+            if evals >= budget:
+                break
+            if check_cell(cand, backend, mode) is not None:
+                prog = cand
+                changed = True
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# The fuzz loop
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", autouse=True)
+def _fuzz_config():
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=2048)  # force real multi-partition runs
+    mz.clear_plan_cache()
+    yield
+    matrix_mod.IO_PARTITION_BYTES = old
+    mz.clear_plan_cache()
+
+
+def _run_examples(indices):
+    import jax
+    failures = []
+    for count, i in enumerate(indices):
+        prog = generate(BASE_SEED + i)
+        for backend, mode in CELLS:
+            err = check_cell(prog, backend, mode)
+            if err is not None:
+                small = shrink(prog, backend, mode)
+                failures.append(
+                    f"seed={prog.seed} cell=({backend},{mode}): {err}\n"
+                    f"minimal failing program:\n{small!r}")
+                break
+        mz.clear_plan_cache()
+        if (count + 1) % 20 == 0:
+            jax.clear_caches()  # bound jit-cache growth over long runs
+        if failures:
+            break
+    if failures:
+        pytest.fail(failures[0])
+
+
+# Split the example budget into a few pytest items so progress is visible
+# and a failure reports early without discarding the whole budget.
+_CHUNKS = 5
+_chunk_ids = list(range(_CHUNKS))
+
+
+@pytest.mark.parametrize("chunk", _chunk_ids)
+def test_random_dag_parity(chunk):
+    lo = EXAMPLES * chunk // _CHUNKS
+    hi = EXAMPLES * (chunk + 1) // _CHUNKS
+    if lo == hi:
+        pytest.skip("no examples in this chunk")
+    _run_examples(range(lo, hi))
+
+
+def test_generator_is_deterministic():
+    assert repr(generate(BASE_SEED)) == repr(generate(BASE_SEED))
+
+
+def test_known_epilogue_program_parity():
+    """A hand-pinned program exercising the sink→epilogue→epilogue-sink
+    shape on every cell (always runs, independent of FUZZ_EXAMPLES)."""
+    prog = Program(
+        seed=1234, n=96, p=3, dtype="f32",
+        ops=[
+            ("sapply", 0, "sq"),        # -> r1
+            ("colsums", 1),             # -> r2  sink
+            ("colsums", 0),             # -> r3  sink
+            ("escalar", 3, "div", 2.0),  # -> r4  epilogue
+            ("emap", 2, 4, "sub"),      # -> r5  epilogue
+            ("esapply", 5, "sqrt_abs"),  # -> r6  epilogue
+            ("esum", 6),                # -> r7  epilogue-evaluated sink
+        ],
+        outputs=[6, 7])
+    for backend, mode in CELLS:
+        err = check_cell(prog, backend, mode)
+        assert err is None, f"cell=({backend},{mode}): {err}"
