@@ -12,9 +12,11 @@ Each cell prints TWO lines:
   * the repo-wide ``name,us_per_call,derived`` CSV row, and
   * a machine-readable ``BENCH {json}`` row with the timing plus the
     engine evidence: the iteration Plan's cost counters —
-    ``passes_over_sources`` = bytes_in / bytes(sources), the proof that
-    one IRLS iteration (or one NMF half-update) streams X exactly ONCE
-    however many leaves reference it (staging dedupe);
+    ``passes`` (scheduled streaming passes: 1 for IRLS/NMF iterations, 2
+    for pca's moment→centered-Gram plan) and ``passes_over_sources`` =
+    bytes_in / bytes(sources), the proof that a one-pass iteration
+    streams X exactly ONCE however many leaves reference it (staging
+    dedupe) while the two-pass pca plan honestly reads it twice;
     ``epilogue_nodes`` / ``epilogue_launches_per_materialize`` = the
     post-sink math (the GLM Newton solve, the NB moment division) running
     as ONE on-device epilogue launch inside the same plan — and, for
@@ -79,8 +81,10 @@ def _workloads(fm, k):
         return pca(X, k=min(4, X.ncol), mode=mode).sdev
 
     def plan_pca(X, yb, yc):
-        mu = np.zeros(X.ncol, np.float32)
-        return Plan([fm.crossprod(fm.mapply_row(X, mu, "sub")).m])
+        # The covariance of the LAZILY centered matrix: a two-pass plan
+        # (moment pass → sweep+Gram pass) — what pca() now materializes in
+        # one call.
+        return Plan([fm.crossprod(fm.scale(X, scale=False)).m])
 
     def run_nmf(X, yb, yc, mode, backend):
         return np.array([nmf(X, k=k, max_iter=3, seed=0, mode=mode,
@@ -176,10 +180,13 @@ def run(argv=None):
                         "bench": "algorithms",
                         "algo": algo, "mode": mode, "backend": backend,
                         "n": n, "p": args.p, "us_per_call": round(us, 1),
-                        # The one-pass proof: the iteration plan reads each
-                        # source matrix exactly once (staging dedupe), so
-                        # bytes_in == bytes(sources).
+                        # The pass-count proof: one-pass iterations read
+                        # each source matrix exactly once (staging dedupe,
+                        # bytes_in == bytes(sources)); the two-pass pca
+                        # plan honestly reports passes == 2 and
+                        # passes_over_sources == 2.0.
                         "bytes_in": plan.bytes_in(),
+                        "passes": len(plan.passes),
                         "passes_over_sources": round(
                             plan.bytes_in() / max(src_bytes, 1), 3),
                         "flops": plan.flop_count(),

@@ -2,9 +2,11 @@
 
     PYTHONPATH=src python benchmarks/fusion_ablation.py [--n N] [--p P]
 
-Three paper workloads — the six-statistic summary (apply→agg.col chains),
-the Gram contraction (correlation/SVD hot loop), and the colMeans/colSds
-moment pair (sink + post-sink EPILOGUE math in one plan) — are timed over
+Four paper workloads — the six-statistic summary (apply→agg.col chains),
+the Gram contraction (correlation/SVD hot loop), the colMeans/colSds
+moment pair (sink + post-sink EPILOGUE math in one plan), and the
+standardized Gram ``crossprod(scale(X))`` (the MULTI-PASS planner:
+moment pass → sweep+Gram pass in one materialize) — are timed over
 every combination of:
 
     fuse     on | off    off = materialize every DAG node separately (the
@@ -31,11 +33,16 @@ dispatched to plus the max abs deviation from the xla result — the
 acceptance check that engine-level kernel lowering matches the generic
 trace.
 
-Rows follow the repo-wide ``name,us_per_call,derived`` contract.
+Rows follow the repo-wide ``name,us_per_call,derived`` contract; every
+FUSED cell additionally prints a machine-readable ``BENCH {json}`` row
+(wall time, ``passes``, ``passes_over_sources``, ``bytes_in``,
+``epilogue_launches``) — the grid benchmarks/check_regression.py gates
+against the committed baseline in CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
@@ -62,6 +69,10 @@ def _workloads(fm):
         "moments": lambda X, **kw: [
             fm.as_np(o)
             for o in fm.materialize(*_moment_outs(fm, X), **kw)],
+        # The multi-pass tentpole: ONE materialize schedules the moment
+        # pass and the sweep+Gram pass (exec passes == 2).
+        "scale": lambda X, **kw: [
+            fm.as_np(fm.materialize(fm.crossprod(fm.scale(X)), **kw)[0])],
     }
 
 
@@ -83,6 +94,10 @@ def run(argv=None):
                     help="row count for interpret-mode pallas rows (CPU)")
     ap.add_argument("--partition-mib", type=int, default=4)
     ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--skip-nofuse", action="store_true",
+                    help="fused cells only (the BENCH grid the CI "
+                         "regression gate measures — the eager arm is an "
+                         "ablation, not a gated surface)")
     args = ap.parse_args(argv)
 
     import jax
@@ -104,7 +119,7 @@ def run(argv=None):
         X_ram = fm.conv_R2FM(X_np, host=True)
         for wname, work in _workloads(fm).items():
             for mode, X in (("whole", X_dev), ("ooc", X_ram)):
-                for fuse in (True, False):
+                for fuse in ((True,) if args.skip_nofuse else (True, False)):
                     mz.clear_plan_cache()
                     kw = dict(mode=mode, fuse=fuse, backend=backend)
                     mz.reset_exec_stats()
@@ -121,9 +136,26 @@ def run(argv=None):
                         outs = (summary_outs(fm, X) if wname == "summary"
                                 else _moment_outs(fm, X)
                                 if wname == "moments"
+                                else (fm.crossprod(fm.scale(X)),)
+                                if wname == "scale"
                                 else (fm.crossprod(X),))
                         plan, counters = _plan_counters(fm, outs)
                         derived = counters + ";" + derived
+                        src_bytes = max(1, sum(
+                            m.nbytes() for _, m in plan.staged_sources()))
+                        record = {
+                            "bench": "fusion", "workload": wname,
+                            "mode": mode, "backend": backend,
+                            "n": n, "p": args.p,
+                            "us_per_call": round(us, 1),
+                            "bytes_in": plan.bytes_in(),
+                            "passes": len(plan.passes),
+                            "passes_over_sources": round(
+                                plan.bytes_in() / src_bytes, 3),
+                            "epilogue_launches": round(
+                                st["epilogue_launches"]
+                                / max(st["materialize_calls"], 1), 3),
+                        }
                         if backend == "pallas":
                             # Acceptance check: engine-level kernel lowering
                             # matches the generic trace on the same data.
@@ -131,6 +163,10 @@ def run(argv=None):
                                        backend="xla")
                             derived += ";" + pallas_dispatch_info(
                                 plan, res, ref)
+                            record["kernels"] = sorted(
+                                {u.kernel for u in
+                                 plan.program("pallas").kernel_units})
+                        print("BENCH " + json.dumps(record, sort_keys=True))
                     rows.append(
                         (f"fusion/{wname}/{mode}/"
                          f"{'fuse' if fuse else 'nofuse'}/{backend}",

@@ -37,6 +37,9 @@ FAMILIES = ("gaussian", "logistic", "poisson")
 #: Weight floor: keeps the working response finite when mu saturates.
 _W_EPS = 1e-6
 
+#: Column-sd floor for feature standardization (constant columns).
+_SD_EPS = 1e-12
+
 
 @dataclasses.dataclass
 class GLMResult:
@@ -46,6 +49,10 @@ class GLMResult:
     loglik_trace: list
     iters: int
     converged: bool
+    # Feature standardization (glm(standardize=True)): beta is on the
+    # STANDARDIZED scale; glm_predict applies the same sweep.
+    center: "np.ndarray | None" = None   # column means, (p,)
+    scale: "np.ndarray | None" = None    # column sds (floored), (p,)
 
 
 def _softplus(eta: fm.FM) -> fm.FM:
@@ -110,13 +117,22 @@ def glm_iteration_plan(X: fm.FM, y: fm.FM, beta: np.ndarray,
 
 def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
         tol: float = 1e-8, ridge: float = 0.0, mode: str = "auto",
-        fuse: bool = True, backend=None) -> GLMResult:
+        fuse: bool = True, backend=None,
+        standardize: bool = False) -> GLMResult:
     """Fit a GLM by iteratively reweighted least squares.
 
     ``X``: n×p design matrix (any tier — device, host RAM, or disk).
     ``y``: n×1 response, row-aligned with X (0/1 for logistic, counts for
     poisson).  ``ridge`` adds an L2 penalty to the normal equations (also
     the numerical-rescue knob for separable logistic data).
+
+    ``standardize=True`` fits on lazily standardized features: the FIRST
+    iteration is a single-materialize TWO-PASS plan — the column moments
+    stream in pass 1 and the standardized IRLS sinks + Newton solve in
+    pass 2 (``exec_stats()['passes'] == 2``) — and later iterations reuse
+    the now-physical moments as one-pass plans.  ``result.beta`` is on the
+    standardized scale (``result.center``/``result.scale`` record the
+    sweep; ``glm_predict`` applies it).
     """
     n, p = X.shape
     beta = np.zeros(p, np.float64)
@@ -124,20 +140,40 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
     prev = -np.inf
     converged = False
     it = 0
+    center = scale_v = None
+    if standardize:
+        # Pure lazy standardization chain: materializes WITH iteration 1.
+        mu_fm, sd_fm = fm.colMeans(X), fm.colSds(X)
+        Z = fm.mapply_row(fm.mapply_row(X, mu_fm, "sub"),
+                          fm.pmax(sd_fm, _SD_EPS), "div")
+    else:
+        Z = X
     for it in range(1, max_iter + 1):
         # The ENTIRE iteration — sinks and the epilogue Newton solve — is
-        # one plan: a single streaming pass over X and one epilogue launch.
+        # one plan: a single streaming pass over X and one epilogue launch
+        # (plus the one-off moment pass when standardizing, iteration 1).
         beta_fm, ll_fm, XtWX_fm, XtWz_fm = glm_irls_outputs(
-            X, y, beta, family, ridge)
+            Z, y, beta, family, ridge)
+        moment_wants = ([mu_fm, sd_fm]
+                        if standardize and center is None else [])
         if family == "gaussian":
             # Also pull the (unridged) normal-equation sinks: the quadratic
             # RSS expansion below needs them on the small tier.
-            beta_m, ll_m, A_m, b_m = fm.materialize(
-                beta_fm, ll_fm, XtWX_fm, XtWz_fm, mode=mode, fuse=fuse,
-                backend=backend)
+            beta_m, ll_m, A_m, b_m, *mo = fm.materialize(
+                beta_fm, ll_fm, XtWX_fm, XtWz_fm, *moment_wants, mode=mode,
+                fuse=fuse, backend=backend)
         else:
-            beta_m, ll_m = fm.materialize(beta_fm, ll_fm, mode=mode,
-                                          fuse=fuse, backend=backend)
+            beta_m, ll_m, *mo = fm.materialize(
+                beta_fm, ll_fm, *moment_wants, mode=mode, fuse=fuse,
+                backend=backend)
+        if moment_wants:
+            # Rebind the sweep to the physical moments: iterations 2+ are
+            # ordinary one-pass plans over X.
+            center = fm.as_np(mo[0]).reshape(-1).astype(np.float32)
+            scale_v = np.maximum(
+                fm.as_np(mo[1]).reshape(-1).astype(np.float32), _SD_EPS)
+            Z = fm.mapply_row(fm.mapply_row(X, center, "sub"),
+                              scale_v, "div")
         beta = fm.as_np(beta_m).astype(np.float64).reshape(-1)
         if not np.isfinite(beta).all():
             # The on-device epilogue solve cannot raise like the old eager
@@ -165,12 +201,17 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
             break
         prev = ll
     return GLMResult(beta=beta, family=family, loglik=trace[-1],
-                     loglik_trace=trace, iters=it, converged=converged)
+                     loglik_trace=trace, iters=it, converged=converged,
+                     center=center, scale=scale_v)
 
 
 def glm_predict(result: GLMResult, X: fm.FM) -> fm.FM:
     """Linear predictor / response on the link scale: one row-local pass
-    (lazy — fuses with downstream GenOps)."""
+    (lazy — fuses with downstream GenOps).  A standardized fit sweeps X
+    with the training moments first (still row-local and lazy)."""
+    if result.center is not None:
+        X = fm.mapply_row(fm.mapply_row(X, result.center, "sub"),
+                          result.scale, "div")
     eta = X @ result.beta.astype(np.float32).reshape(-1, 1)
     if result.family == "logistic":
         return fm.sigmoid(eta)

@@ -1,16 +1,17 @@
 """Principal component analysis (paper §IV-A) on GenOps.
 
 "PCA computes eigenvalues on the Gramian matrix t(X) %*% X" — we center
-(and optionally scale) X lazily and reuse ``svd_tall``: the standardized
-matrix Z never exists physically; its Gram matrix is ONE streaming
-contraction sink and the p×p eigendecomposition runs on the small tier.
+(and optionally scale) X lazily and compute the covariance Gram of the
+*virtual* standardized matrix: Z never exists physically, and the whole
+program — moment sinks, epilogue math, sweep and Gram contraction — is ONE
+``fm.materialize`` call that the multi-pass planner schedules as
+moment pass → sweep+Gram pass (``exec_stats()['passes'] == 2``).
 
 Equivalent FlashR R code:
 
-    mu <- colMeans(X)                      # moment pass (sink + epilogue)
-    Z  <- sweep(X, 2, mu)                  # lazy mapply.row
-    ev <- eigen(crossprod(Z) / (n - 1))    # one streaming pass + small tier
-    scores <- Z %*% ev$vectors[, 1:k]      # optional second pass
+    Z  <- scale(X, scale = FALSE)          # lazy sweep over colMeans
+    ev <- eigen(crossprod(Z) / (n - 1))    # two scheduled passes + small tier
+    scores <- Z %*% ev$vectors[, 1:k]      # optional extra pass
 
 Complexity: O(n·p²) compute, O(n·p) I/O per pass (Table IV row 3); two
 passes total (moments, Gram) plus an optional scores pass — the same pass
@@ -42,32 +43,41 @@ def pca(X: fm.FM, k: int = 10, *, center: bool = True, scale: bool = False,
     """R prcomp(): PCA of a tall (n, p) matrix on any storage tier.
 
     ``scale=True`` standardizes columns (correlation PCA).  The centered /
-    scaled matrix stays virtual: centering fuses into the Gram pass.
+    scaled matrix stays virtual end to end: the covariance Gram of the
+    centered matrix, the column moments and their epilogue math
+    co-materialize in ONE call — the planner streams the moment pass, then
+    re-streams X with the moments bound for the sweep+Gram pass.
     """
     n, p = X.shape
     k = min(k, p)
     mu = np.zeros(p, np.float32)
     sd = None
     Z = X
-    if center or scale:
-        # ONE co-materialized moment pass yields both the means and (when
-        # scaling) the sds: the colMeans/colSds epilogue chains share the
-        # staged read of X and finish in a single post-merge launch.
-        wants = []
-        if center:
-            wants.append(fm.colMeans(X))
-        if scale:
-            wants.append(fm.colSds(X))
-        outs = fm.materialize(*wants, mode=mode, fuse=fuse)
-        if center:
-            mu = fm.as_np(outs[0]).reshape(-1).astype(np.float32)
-        if scale:
-            sd = fm.as_np(outs[-1]).reshape(-1).astype(np.float32)
+    wants = []
     if center:
-        Z = fm.mapply_row(Z, mu, "sub")
+        mu_fm = fm.colMeans(X)
+        wants.append(mu_fm)
+        Z = fm.mapply_row(Z, mu_fm, "sub")
     if scale:
-        Z = fm.mapply_row(Z, np.maximum(sd, 1e-12), "div")
-    r = svd_tall(Z, k=k, compute_u=compute_scores, mode=mode, fuse=fuse)
+        sd_fm = fm.colSds(X)
+        wants.append(sd_fm)
+        Z = fm.mapply_row(Z, fm.pmax(sd_fm, 1e-12), "div")
+    # ONE materialize: Gram of the (virtual) centered matrix + the moments.
+    outs = fm.materialize(fm.crossprod(Z), *wants, mode=mode, fuse=fuse)
+    g = fm.as_np(outs[0]).astype(np.float64)
+    if center:
+        mu = fm.as_np(outs[1]).reshape(-1).astype(np.float32)
+    if scale:
+        sd = fm.as_np(outs[-1]).reshape(-1).astype(np.float32)
+    # Scores reuse the now-physical moments: the optional extra pass stays
+    # a single sweep+product stream instead of re-deriving the moments.
+    Zp = X
+    if center:
+        Zp = fm.mapply_row(Zp, mu, "sub")
+    if scale:
+        Zp = fm.mapply_row(Zp, np.maximum(sd, 1e-12), "div")
+    r = svd_tall(Zp, k=k, compute_u=compute_scores, mode=mode, fuse=fuse,
+                 gram=g)
     sdev = r.s / np.sqrt(max(n - 1, 1))
     scores = None
     if compute_scores:

@@ -27,11 +27,17 @@ class SVDResult:
 
 
 def svd_tall(X: fm.FM, k: int = 10, *, compute_u: bool = False,
-             mode: str = "auto", fuse: bool = True) -> SVDResult:
+             mode: str = "auto", fuse: bool = True,
+             gram: Optional[np.ndarray] = None) -> SVDResult:
+    """``gram`` short-circuits the Gram pass with an already-materialized
+    XᵀX (pca co-materializes it with the column moments in one call)."""
     n, p = X.shape
     k = min(k, p)
-    (G,) = fm.materialize(fm.crossprod(X), mode=mode, fuse=fuse)
-    g = fm.as_np(G).astype(np.float64)
+    if gram is None:
+        (G,) = fm.materialize(fm.crossprod(X), mode=mode, fuse=fuse)
+        g = fm.as_np(G).astype(np.float64)
+    else:
+        g = np.asarray(gram, np.float64)
     evals, evecs = np.linalg.eigh(g)          # ascending
     evals = np.maximum(evals[::-1], 0.0)      # descending, clipped
     evecs = evecs[:, ::-1]

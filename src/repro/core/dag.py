@@ -452,6 +452,72 @@ def toposort(roots: Sequence[Node]) -> list[Node]:
     return order
 
 
+def schedule_passes(order: Sequence[Node], is_source, long_dim: int):
+    """Multi-pass schedule of a DAG cut (paper §III-E/F generalized).
+
+    Classifies every executable node in ``order`` (topological) as
+
+    * ``'loop'`` — streams through the partition loop: row-local nodes and
+      long-dimension-contracting sinks; or
+    * ``'epi'``  — post-sink *epilogue* math evaluated once after a pass's
+      partial merge (``colSums(X)/n``, ``solve(XᵀWX, XᵀWz)``, and sinks
+      whose operands are themselves merged values),
+
+    and assigns each a **pass number**.  A loop node that consumes a merged
+    value (a sink or epilogue result) cannot run in the pass that produces
+    it — its operand only exists after that pass's merge — so it is
+    scheduled one pass later, with the merged value bound as a broadcast
+    small (the FlashR ``scale(X)`` shape: pass 1 streams the moment sinks +
+    epilogue, pass 2 re-streams X with the moments bound).  Pass numbers
+    chain transitively, so moment-of-a-moment programs schedule as three
+    passes, and so on.
+
+    Returns ``(roles, passno)`` dicts keyed by node id.  Raises for the one
+    genuinely unschedulable shape: an epilogue-only op (``solve``) over a
+    streaming *intermediate*, whose value would have to be materialized.
+    """
+    roles: dict[int, str] = {}
+    passno: dict[int, int] = {}
+    for n in order:
+        if is_source(n):
+            continue
+        has_stream = False
+        stream_pass = 0
+        merged_pass = -1
+        for p in n.parents:
+            if isinstance(p, Small):
+                continue
+            if is_source(p):
+                if p.shape[0] == long_dim and max(p.shape) > 1:
+                    has_stream = True
+                continue
+            if roles[p.id] == "loop" and not p.is_sink:
+                has_stream = True
+                stream_pass = max(stream_pass, passno[p.id])
+            else:  # merged value: a sink or an epilogue node
+                merged_pass = max(merged_pass, passno[p.id])
+        if n.kind in EPILOGUE_ONLY_KINDS:
+            for p in n.parents:
+                if (isinstance(p, Node) and not is_source(p)
+                        and roles[p.id] == "loop" and not p.is_sink):
+                    raise ValueError(
+                        f"epilogue op {n.name} consumes the streaming "
+                        f"intermediate {p.name}: {n.kind} may only touch "
+                        f"aggregation results, small operands or other "
+                        f"epilogue values inside one DAG — materialize "
+                        f"{p.name} first (it needs its own pass)")
+            roles[n.id] = "epi"
+            passno[n.id] = max(merged_pass, 0)
+        elif not has_stream and merged_pass >= 0:
+            # Small post-merge math: runs in the owning pass's epilogue.
+            roles[n.id] = "epi"
+            passno[n.id] = merged_pass
+        else:
+            roles[n.id] = "loop"
+            passno[n.id] = max(stream_pass, merged_pass + 1)
+    return roles, passno
+
+
 def post_sink_ids(order: Sequence[Node], is_source=None) -> set:
     """Ids of nodes DOWNSTREAM of a sink within ``order`` — the plan's
     *epilogue* set (paper §III-E post-aggregation math like

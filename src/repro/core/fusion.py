@@ -1,4 +1,5 @@
-"""Fusion optimizer: turn a DAG cut into a single partition-streaming program.
+"""Fusion optimizer: turn a DAG cut into a schedule of partition-streaming
+passes.
 
 Paper §III-E/F: FlashMatrix "evaluates expressions lazily and fuses
 operations aggressively in a single parallel execution job", materializing
@@ -9,22 +10,34 @@ operation in the DAG, instead of materializing the next CPU-level partition
 in the same matrix").
 
 `Plan` owns the *analysis* half of the engine: it cuts the DAG at persisted
-nodes, toposorts the induced subgraph, classifies sources/sinks/outputs and
-schedules the I/O-level partition size.  The executable halves live one
-layer down: `plan_ir.compile_ir` groups the cut into typed fused segments
-with per-segment processor-level tiles (the paper's second partition
-level), and a `lowering` backend turns those segments into the
-``step``/``combine`` program the materializer streams partitions through.
-Because ``step`` is a single traced function, every intermediate virtual
-matrix lives only as a value inside one computation: the analog of never
-writing intermediates to SSD/DRAM.
+nodes, toposorts the induced subgraph, and schedules it as an ordered list
+of **passes** (`PassSchedule`).  Most programs are one pass; a program in
+which a merged value feeds a row-local op — FlashR's ``scale(X)``, where the
+``colMeans`` epilogue sweeps back over X — schedules as two: pass 1 streams
+the sources and merges the moment sinks + epilogue, pass 2 re-streams the
+long-dimension sources with the pass-1 results bound as broadcast smalls.
+Pass numbers chain, so a moment-of-a-sweep program becomes three passes, and
+so on.  The whole schedule compiles into ONE multi-program executable under
+ONE plan-cache entry and runs in ONE ``fm.materialize`` call.
+
+Each `PassSchedule` classifies its sources/sinks/outputs and picks the
+I/O-level partition rows.  The executable halves live one layer down:
+`plan_ir.compile_ir` groups each pass into typed fused segments with
+per-segment processor-level tiles (the paper's second partition level), and
+a `lowering` backend turns those segments into the ``step``/``combine``
+programs the materializer streams partitions through.  Because ``step`` is
+a single traced function, every intermediate virtual matrix lives only as a
+value inside one computation: the analog of never writing intermediates to
+SSD/DRAM.
 
 The plan cuts the DAG at nodes that were previously persisted
 (`fm.set.mate.level` → ``node.cached_store``), mirroring the paper's
 materialization of non-sink matrices reused across iterations.
 
 The plan also exposes the cost counters (FLOPs, bytes in/out) that feed
-benchmarks/complexity.py and the roofline analysis.
+benchmarks/complexity.py and the roofline analysis.  ``bytes_in`` sums the
+streamed reads of every pass, so a two-pass plan over one matrix honestly
+reports two passes over its bytes.
 """
 from __future__ import annotations
 
@@ -34,72 +47,119 @@ import jax.numpy as jnp
 
 from . import dtypes, plan_ir
 from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of,
-                  post_sink_ids)
+                  schedule_passes)
 from .matrix import FMMatrix, io_partition_rows
 
 
-class Plan:
-    """A fused execution plan over one DAG cut."""
+class PassSchedule:
+    """One streaming pass of a plan: its own cut classification, staging
+    groups, partition size and segment IR.
 
-    def __init__(self, outputs: Sequence[FMMatrix], *, fuse: bool = True):
-        self.requested = [as_node(o) for o in outputs]
-        self.fuse = fuse
+    A pass evaluates ``loop`` nodes (row-local chains and sinks) in the
+    partition loop and ``epi`` nodes once after the merge.  Values produced
+    by EARLIER passes that this pass consumes are its ``bindings``: merged
+    sink/epilogue results handed to the compiled step as broadcast
+    arguments (never streamed, never donated).  Physical sources split
+    three ways:
 
-        self.order = self._cut_toposort(list(self.requested))
+    * ``sources``            — long-aligned matrices streamed partition by
+      partition (the pass re-drives the prefetcher over them);
+    * ``broadcast_sources``  — small physicals (a (1, p) moment vector cut
+      point) consumed by row-local ops: staged whole, fed like bindings;
+    * ``epilogue_sources``   — consumed only by epilogue math (a ridge eye):
+      handed whole to the epilogue callable.
+    """
 
-        # EPILOGUE classification (paper §III-E's post-aggregation math):
-        # a node downstream of a sink inside this cut — colSums(X)/n,
-        # sqrt(ss/n − mean²), solve(XᵀWX, XᵀWz) — cannot run in the
-        # partition loop because its operands only exist after the partial
-        # merge.  Those nodes form the plan's epilogue: the lowered program
-        # evaluates them exactly once, on device, after the combine
-        # (LoweredProgram.epilogue).  A sink whose operands are themselves
-        # post-sink (e.g. sum(colMeans(X))) is evaluated there too.
-        self.epilogue_ids: set[int] = post_sink_ids(
-            self.order, is_source=self._is_source)
+    def __init__(self, plan: "Plan", idx: int):
+        self.idx = idx
+        self.long_dim = plan.long_dim
+        self.smalls = plan.smalls
+        self._small_pos = plan._small_pos
+        roles, passno = plan.roles, plan.passno
+        is_src = plan._is_source
+
+        execu = [n for n in plan.order
+                 if not is_src(n) and passno[n.id] == idx]
         self.epilogue_nodes: list[Node] = [
-            n for n in self.order if n.id in self.epilogue_ids]
-
-        # NOTE: a previously-persisted sink reused as a cut SOURCE must not
-        # re-register as a sink here — the executor would re-initialize it
-        # to its identity and clobber the persisted value with zeros (only
-        # reachable since sink-consumers became plannable).
+            n for n in execu if roles[n.id] == "epi"]
+        self.epilogue_ids: set[int] = {n.id for n in self.epilogue_nodes}
         self.sinks: list[SinkNode] = [
-            n for n in self.order
-            if n.is_sink and not self._is_source(n)
-            and n.id not in self.epilogue_ids]
+            n for n in execu if roles[n.id] == "loop" and n.is_sink]
         self.row_local_roots: list[Node] = [
-            n for n in self.requested
-            if not n.is_sink and not self._is_source(n)
-            and n.id not in self.epilogue_ids]
-        # Nodes flagged fm.set.mate.level persist during this execution
-        # (paper's write-through materialization of non-sink matrices).
+            n for n in plan.requested
+            if not is_src(n) and not n.is_sink
+            and roles[n.id] == "loop" and passno[n.id] == idx]
         self.saves: list[Node] = [
-            n for n in self.order
-            if n.save is not None and not n.is_sink and not self._is_source(n)
-            and n not in self.row_local_roots
-            and n.id not in self.epilogue_ids]
+            n for n in execu
+            if n.save is not None and roles[n.id] == "loop"
+            and not n.is_sink and n not in self.row_local_roots]
         # Epilogue result slots: requested or save-flagged epilogue nodes.
         seen_roots: set[int] = set()
         self.epilogue_roots: list[Node] = []
-        for n in list(self.requested) + [m for m in self.order
+        for n in list(plan.requested) + [m for m in plan.order
                                          if m.save is not None]:
-            if n.id in self.epilogue_ids and n.id not in seen_roots:
+            if (not is_src(n) and n.id in self.epilogue_ids
+                    and n.id not in seen_roots):
                 seen_roots.add(n.id)
                 self.epilogue_roots.append(n)
+        # Epilogue values a LATER pass consumes but nobody requested; the
+        # lowered epilogue returns them alongside the roots so the executor
+        # can bind them forward.  Filled in by Plan after every pass exists.
+        self.epilogue_carries: list[Node] = []
 
-        # Sources = physical leaves + previously-persisted cut points.  A
-        # source consumed ONLY by epilogue nodes (e.g. the ridge eye matrix
-        # of a regularized solve) is not streamed: it is handed whole to the
-        # epilogue callable.
+        # Loop nodes this pass must evaluate: the backward closure of its
+        # roots through streaming (row-local, non-sink) parents.  A chain
+        # shared with an earlier pass is re-evaluated here — recomputing a
+        # row-local chain is exactly one extra fused read, whereas carrying
+        # it across passes would mean materializing a long intermediate.
+        needed: dict[int, Node] = {}
+
+        def pull(n: Node):
+            if n.id in needed:
+                return
+            needed[n.id] = n
+            for p in n.parents:
+                if isinstance(p, Small) or not isinstance(p, Node) \
+                        or is_src(p):
+                    continue
+                if roles[p.id] == "loop" and not p.is_sink:
+                    pull(p)
+
+        for n in self.sinks + self.row_local_roots + self.saves:
+            pull(n)
+        evaluated = set(needed) | self.epilogue_ids
+
+        # Sources = physical leaves + previously-persisted cut points that
+        # some evaluated node consumes.
         consumers: dict[int, list[Node]] = {}
-        for n in self.order:
-            if self._is_source(n):
+        for n in plan.order:
+            if n.id not in evaluated:
                 continue
             for p in n.parents:
-                if isinstance(p, Node):
+                if isinstance(p, Node) and is_src(p):
                     consumers.setdefault(p.id, []).append(n)
+        self.order: list[Node] = [
+            n for n in plan.order
+            if n.id in evaluated or (is_src(n) and n.id in consumers)]
+
+        # Bindings: merged values (sinks / epilogue outputs) produced by an
+        # earlier pass and consumed here.
+        self.bindings: list[Node] = []
+        bind_seen: set[int] = set()
+        for n in self.order:
+            if is_src(n) or n.id not in evaluated:
+                continue
+            for p in n.parents:
+                if (isinstance(p, Small) or not isinstance(p, Node)
+                        or is_src(p) or p.id in evaluated
+                        or p.id in bind_seen):
+                    continue
+                bind_seen.add(p.id)
+                self.bindings.append(p)
+        self.binding_ids: set[int] = bind_seen
+
         self.sources: list[tuple[Node, FMMatrix]] = []
+        self.broadcast_sources: list[tuple[Node, FMMatrix]] = []
         self.epilogue_sources: list[tuple[Node, FMMatrix]] = []
         for n in self.order:
             if isinstance(n, LeafNode):
@@ -109,33 +169,33 @@ class Plan:
             else:
                 continue
             cons = consumers.get(n.id, [])
+            long_aligned = (mat.shape[0] == self.long_dim
+                            and max(mat.shape) > 1)
             if cons and all(c.id in self.epilogue_ids for c in cons):
+                # e.g. the ridge eye matrix of a regularized solve: handed
+                # whole to the epilogue callable, never streamed.
                 self.epilogue_sources.append((n, mat))
-            elif any(c.id in self.epilogue_ids for c in cons):
-                raise ValueError(
-                    f"source {n.name} is consumed by both the partition "
-                    f"loop and the plan epilogue; materialize the epilogue "
-                    f"expression separately")
-            else:
+            elif long_aligned:
+                if any(c.id in self.epilogue_ids for c in cons):
+                    raise ValueError(
+                        f"source {n.name} is consumed by both the partition "
+                        f"loop and the plan epilogue; materialize the "
+                        f"epilogue expression separately")
                 self.sources.append((n, mat))
+            else:
+                # Small physical (a (1, p) cut-point vector): broadcast
+                # whole.  Only row-local consumers may broadcast it — a sink
+                # would re-reduce it once per partition.
+                for c in cons:
+                    if c.id in self.epilogue_ids:
+                        continue
+                    if c.is_sink or c.nrow != self.long_dim:
+                        raise ValueError(
+                            f"source {n.name} shape {mat.shape} rows are "
+                            f"not aligned with the streaming dimension "
+                            f"{self.long_dim}")
+                self.broadcast_sources.append((n, mat))
         self._epi_src_ids = {n.id for n, _ in self.epilogue_sources}
-
-        # Epilogue operands must exist after the merge: loop sinks, other
-        # epilogue values, small epilogue-only sources, or broadcast Smalls.
-        # A streaming intermediate (row-local chain) would need a second
-        # pass over the data — reject it with a actionable message.
-        for n in self.epilogue_nodes:
-            for p in n.parents:
-                if isinstance(p, Small) or self._is_source(p):
-                    continue
-                if p.is_sink or p.id in self.epilogue_ids:
-                    continue
-                raise ValueError(
-                    f"epilogue op {n.name} consumes the streaming "
-                    f"intermediate {p.name}: post-sink lazy math may only "
-                    f"touch aggregation results, small operands or other "
-                    f"epilogue values inside one DAG — materialize "
-                    f"{p.name} first (it needs its own pass)")
 
         # Staging groups: every GenOp call wraps its own LeafNode, so a DAG
         # referencing one physical matrix through k leaves (crossprod(X) +
@@ -157,55 +217,29 @@ class Plan:
             for node in group:
                 self.source_aliases[node.id] = group[0].id
 
-        self.long_dim = long_dim_of(self.order)
-        for node, mat in self.sources:
-            if mat.shape[0] != self.long_dim and max(mat.shape) != 1:
-                raise ValueError(
-                    f"source {node.name} shape {mat.shape} rows are not "
-                    f"aligned with the streaming dimension {self.long_dim}")
-
         # I/O-level partition size: budget divided by the number of live
-        # long-aligned matrices in the fused group (paper §III-F chooses "a
+        # long-aligned matrices in this pass (paper §III-F chooses "a
         # relatively small partition size to balance the overhead of
         # accessing a partition, skew and memory consumption").
-        n_live = max(1, len(self.sources) + len(self.row_local_roots) + len(self.saves))
+        n_live = max(1, len(self.sources) + len(self.row_local_roots)
+                     + len(self.saves))
         widths = [1]
         for node, mat in self.sources:
             widths.append(mat.ncol)
         for n in self.order:
-            if (not self._is_source(n) and not n.is_sink
+            if (not is_src(n) and not n.is_sink
                     and n.id not in self.epilogue_ids):
                 widths.append(n.ncol)
-        widest_dtype = max((n.dtype for n in self.order), key=dtypes.rank)
-        self.partition_rows = io_partition_rows(max(widths), widest_dtype, n_live)
+        # An already-materialized request leaves the pass empty (pure
+        # cache-hit read-back): default the dtype so the schedule stays
+        # well-formed.
+        widest_dtype = max((n.dtype for n in self.order), key=dtypes.rank,
+                           default=dtypes.canon(jnp.float32))
+        self.partition_rows = io_partition_rows(
+            max(widths), widest_dtype, n_live)
 
-        # Small (broadcast) operands are runtime ARGUMENTS of the compiled
-        # step, not baked constants — that is what lets a structurally
-        # identical plan (k-means iteration N+1 with new centers) reuse the
-        # compiled executable instead of retracing (see materialize._PLANS).
-        self.smalls: list[Small] = []
-        self._small_pos: dict[int, int] = {}
-        for n in self.order:
-            if self._is_source(n):
-                continue  # cut points: parents live outside this plan
-            for p in n.parents:
-                if isinstance(p, Small) and id(p) not in self._small_pos:
-                    self._small_pos[id(p)] = len(self.smalls)
-                    self.smalls.append(p)
-
-        # Segment IR + processor-level tile schedule (paper §III-F level 2);
-        # lowered programs are built lazily per backend and cached here.
+        # Segment IR + processor-level tile schedule (paper §III-F level 2).
         self.ir = plan_ir.compile_ir(self)
-        self._programs: dict[str, "object"] = {}
-
-    def program(self, backend: str):
-        """The lowered executable for ``backend`` (see core/lowering.py)."""
-        prog = self._programs.get(backend)
-        if prog is None:
-            from . import lowering  # deferred: lowering pulls in kernels
-            prog = lowering.lower(self, self.ir, backend)
-            self._programs[backend] = prog
-        return prog
 
     def staged_sources(self, sources=None) -> list[tuple[int, FMMatrix]]:
         """One ``(canonical_node_id, matrix)`` pair per staging group — the
@@ -219,15 +253,173 @@ class Plan:
         return [(group[0].id, id_to_mat[group[0].id])
                 for group in self.source_groups]
 
+    def broadcast_source_pairs(self, mats=None) -> list[tuple[int, FMMatrix]]:
+        if mats is None:
+            mats = [m for _, m in self.broadcast_sources]
+        return [(node.id, mat)
+                for (node, _), mat in zip(self.broadcast_sources, mats)]
+
+    def epilogue_source_pairs(self, mats=None) -> list[tuple[int, FMMatrix]]:
+        """``(node_id, matrix)`` per epilogue-only source.  ``mats`` may
+        override the matrices positionally (borrowed cached plans execute
+        with the new caller's data, exactly like staged_sources)."""
+        if mats is None:
+            mats = [m for _, m in self.epilogue_sources]
+        return [(node.id, mat)
+                for (node, _), mat in zip(self.epilogue_sources, mats)]
+
+    # -- sink accumulators -----------------------------------------------------
+    def init_accs(self):
+        return {n.id: n.identity() for n in self.sinks}
+
+    def finalize_accs(self, accs):
+        return {n.id: n.finalize(accs[n.id]) for n in self.sinks}
+
+    def bytes_in(self, sources=None) -> int:
+        """Bytes streamed by THIS pass: one read per staging group — a
+        matrix referenced through several leaves is staged once (see
+        source_groups), so it counts once per pass."""
+        return int(sum(mat.nbytes()
+                       for _, mat in self.staged_sources(sources)))
+
+    def describe(self) -> str:
+        lines = [f"pass {self.idx}: partition_rows={self.partition_rows} "
+                 f"bindings={[n.name for n in self.bindings]}"]
+        for n in self.order:
+            role = ("source" if isinstance(n, LeafNode)
+                    or getattr(n, "cached_store", None) is not None
+                    else "epilog" if n.id in self.epilogue_ids
+                    else "sink" if n.is_sink else "fused")
+            lines.append(f"  [{role:6s}] {n!r}")
+        lines.extend("  " + line for line in self.ir.describe().splitlines())
+        return "\n".join(lines)
+
+
+class Plan:
+    """A fused execution plan over one DAG cut: an ordered pass schedule."""
+
+    def __init__(self, outputs: Sequence[FMMatrix], *, fuse: bool = True):
+        self.requested = [as_node(o) for o in outputs]
+        self.fuse = fuse
+
+        self.order = self._cut_toposort(list(self.requested))
+        self.long_dim = long_dim_of(self.order)
+
+        # Multi-pass classification (paper §III-E generalized; see
+        # dag.schedule_passes): every executable node gets a role
+        # ('loop' | 'epi') and a pass number.  A merged value feeding a
+        # row-local op pushes the consumer one pass later instead of
+        # raising — the moment-pass → sweep-pass schedule.
+        self.roles, self.passno = schedule_passes(
+            self.order, is_source=self._is_source, long_dim=self.long_dim)
+        self.n_passes = 1 + max(self.passno.values(), default=0)
+
+        # Small (broadcast) operands are runtime ARGUMENTS of the compiled
+        # steps, not baked constants — that is what lets a structurally
+        # identical plan (k-means iteration N+1 with new centers) reuse the
+        # compiled executable instead of retracing (see materialize._PLANS).
+        # The registry is global to the plan; every pass indexes into it.
+        self.smalls: list[Small] = []
+        self._small_pos: dict[int, int] = {}
+        for n in self.order:
+            if self._is_source(n):
+                continue  # cut points: parents live outside this plan
+            for p in n.parents:
+                if isinstance(p, Small) and id(p) not in self._small_pos:
+                    self._small_pos[id(p)] = len(self.smalls)
+                    self.smalls.append(p)
+
+        self.passes: list[PassSchedule] = [
+            PassSchedule(self, k) for k in range(self.n_passes)]
+
+        # Unrequested epilogue values consumed by later passes must still
+        # come out of the lowered epilogue so the executor can bind them.
+        for k, ps in enumerate(self.passes):
+            later: set[int] = set()
+            for nxt in self.passes[k + 1:]:
+                later |= nxt.binding_ids
+            roots = {n.id for n in ps.epilogue_roots}
+            ps.epilogue_carries = [n for n in ps.epilogue_nodes
+                                   if n.id in later and n.id not in roots]
+
+        # Aggregated views (single-pass plans look exactly like before).
+        self.sinks = [n for ps in self.passes for n in ps.sinks]
+        self.row_local_roots = [n for ps in self.passes
+                                for n in ps.row_local_roots]
+        self.saves = [n for ps in self.passes for n in ps.saves]
+        self.epilogue_nodes = [n for ps in self.passes
+                               for n in ps.epilogue_nodes]
+        self.epilogue_ids = set().union(
+            *[ps.epilogue_ids for ps in self.passes]) \
+            if self.passes else set()
+        self.epilogue_roots = [n for ps in self.passes
+                               for n in ps.epilogue_roots]
+        self.sources = [sm for ps in self.passes for sm in ps.sources]
+        self.broadcast_sources = [sm for ps in self.passes
+                                  for sm in ps.broadcast_sources]
+        self.epilogue_sources = [sm for ps in self.passes
+                                 for sm in ps.epilogue_sources]
+        self.source_groups = [g for ps in self.passes
+                              for g in ps.source_groups]
+        self.source_aliases = {}
+        for ps in self.passes:
+            self.source_aliases.update(ps.source_aliases)
+
+        self.partition_rows = self.passes[0].partition_rows
+        self.ir = self.passes[0].ir
+        self._programs: dict[str, "object"] = {}
+
+    def program(self, backend: str):
+        """The lowered executable for ``backend``: a `LoweredProgram` for a
+        one-pass plan, a `MultiPassProgram` otherwise (core/lowering.py)."""
+        prog = self._programs.get(backend)
+        if prog is None:
+            from . import lowering  # deferred: lowering pulls in kernels
+            compiled = [lowering.lower(ps, ps.ir, backend)
+                        for ps in self.passes]
+            prog = (compiled[0] if len(compiled) == 1
+                    else lowering.MultiPassProgram(compiled))
+            self._programs[backend] = prog
+        return prog
+
+    def staged_sources(self) -> list[tuple[int, FMMatrix]]:
+        """One pair per distinct PHYSICAL matrix across every pass — the
+        denominator of ``passes_over_sources`` (bytes_in counts each pass's
+        read, so a two-pass plan over one matrix reports 2.0)."""
+        seen: set[int] = set()
+        out = []
+        for ps in self.passes:
+            for nid, mat in ps.staged_sources():
+                if id(mat) not in seen:
+                    seen.add(id(mat))
+                    out.append((nid, mat))
+        return out
+
+    def pass_key(self) -> tuple:
+        """Per-pass partition schedule: both partition levels of every pass
+        (the non-structural half of the plan-cache key)."""
+        return tuple((ps.partition_rows, ps.ir.schedule_key())
+                     for ps in self.passes)
+
     def signature(self) -> str:
         """Structural identity: two DAG cuts with the same signature can
-        share one compiled plan (the compile-once/stream-many contract)."""
-        parts = [f"L{self.long_dim}"]
+        share one compiled plan (the compile-once/stream-many contract).
+        Node roles carry their PASS NUMBER, and sources carry their
+        per-pass staging-group / broadcast / epilogue tags, so two cuts
+        with different pass structure can never collide."""
+        parts = [f"L{self.long_dim}", f"P{self.n_passes}"]
         pos = {n.id: i for i, n in enumerate(self.order)}
-        group_of = {n.id: gi for gi, group in enumerate(self.source_groups)
-                    for n in group}
+        src_tag: dict[int, list[str]] = {}
+        for k, ps in enumerate(self.passes):
+            for gi, group in enumerate(ps.source_groups):
+                for node in group:
+                    src_tag.setdefault(node.id, []).append(f"s{k}.{gi}")
+            for node, _ in ps.broadcast_sources:
+                src_tag.setdefault(node.id, []).append(f"b{k}")
+            for node, _ in ps.epilogue_sources:
+                src_tag.setdefault(node.id, []).append(f"E{k}")
         for n in self.order:
-            ps = []
+            ps_ = []
             # sources are cut points: their parents are outside this plan
             parents = [] if self._is_source(n) else n.parents
             for p in parents:
@@ -235,9 +427,9 @@ class Plan:
                     v = p.value
                     shape = getattr(v, "shape", ())
                     dt = getattr(v, "dtype", type(v).__name__)
-                    ps.append(f"S{shape}:{dt}")
+                    ps_.append(f"S{shape}:{dt}")
                 else:
-                    ps.append(f"N{pos[p.id]}")
+                    ps_.append(f"N{pos[p.id]}")
             fn_info = getattr(n, "fn_info", None)
             fname = ""
             if fn_info:
@@ -252,40 +444,27 @@ class Plan:
                 if v is not None:
                     extra += f":{v.name}"
             ng = getattr(n, "num_groups", "")
-            # Role is part of the cache key: the SAME structural node must
-            # not collide between a loop evaluation and an epilogue one
-            # (e.g. a requested sink vs that sink feeding post-sink math).
+            # Role + pass number are part of the cache key: the SAME
+            # structural node must not collide between a loop evaluation
+            # and an epilogue one, nor between passes.
             if self._is_source(n):
-                role = "E" if n.id in self._epi_src_ids else "q"
-            elif n.id in self.epilogue_ids:
-                role = "e"
+                role = "q" + "+".join(src_tag.get(n.id, []))
+            elif self.roles[n.id] == "epi":
+                role = f"e{self.passno[n.id]}"
             elif n.is_sink:
-                role = "s"
+                role = f"s{self.passno[n.id]}"
             else:
-                role = "m"
+                role = f"m{self.passno[n.id]}"
             sv = n.save or ""
-            # Staging-group index: two cuts that alias their sources
-            # differently (one matrix read through two leaves vs two distinct
-            # matrices) must not share a compiled executable.
-            grp = f"g{group_of[n.id]}" if n.id in group_of else ""
             parts.append(f"{role}|{n.kind}|{n.shape}|{n.dtype.name}|{fname}"
-                         f"|{extra}|{ng}|{sv}|{grp}|{','.join(ps)}")
+                         f"|{extra}|{ng}|{sv}|{','.join(ps_)}")
         return ";".join(parts)
 
     def result_nodes(self):
         """Deterministic result slots (sinks + requested + saves +
-        epilogue outputs)."""
+        epilogue outputs, in pass order)."""
         return (list(self.sinks) + self.row_local_roots + self.saves
                 + self.epilogue_roots)
-
-    def epilogue_source_pairs(self, mats=None) -> list[tuple[int, FMMatrix]]:
-        """``(node_id, matrix)`` per epilogue-only source.  ``mats`` may
-        override the matrices positionally (borrowed cached plans execute
-        with the new caller's data, exactly like staged_sources)."""
-        if mats is None:
-            mats = [m for _, m in self.epilogue_sources]
-        return [(node.id, mat)
-                for (node, _), mat in zip(self.epilogue_sources, mats)]
 
     def small_values(self):
         return [jnp.asarray(s.value) if hasattr(s.value, "shape")
@@ -315,28 +494,26 @@ class Plan:
             visit(r)
         return order
 
-    # -- sink accumulators -----------------------------------------------------
-    def init_accs(self):
-        return {n.id: n.identity() for n in self.sinks}
-
-    def finalize_accs(self, accs):
-        return {n.id: n.finalize(accs[n.id]) for n in self.sinks}
-
     # -- cost counters (feed complexity + roofline reports) -----------------------
     def flop_count(self) -> float:
-        # Epilogue nodes run ONCE after the merge, not once per row — their
-        # O(p²)-ish cost is noise next to the streamed loop, so they are
-        # excluded rather than multiplied by the long dimension.
-        return float(sum(n.flops_per_row() * self.long_dim
-                         for n in self.order
-                         if not self._is_source(n)
-                         and n.id not in self.epilogue_ids))
+        # Epilogue nodes run ONCE after each pass's merge, not once per row —
+        # their O(p²)-ish cost is noise next to the streamed loop, so they
+        # are excluded rather than multiplied by the long dimension.  A
+        # row-local chain re-evaluated by a later pass counts once per pass
+        # it actually runs in.
+        total = 0.0
+        for ps in self.passes:
+            for n in ps.order:
+                if (not self._is_source(n)
+                        and n.id not in ps.epilogue_ids):
+                    total += n.flops_per_row() * self.long_dim
+        return float(total)
 
     def bytes_in(self) -> int:
-        """Bytes actually read per pass: one read per STAGING GROUP — a
-        matrix referenced through several leaves is staged once (see
-        source_groups), so it counts once."""
-        return int(sum(mat.nbytes() for _, mat in self.staged_sources()))
+        """Bytes actually read across ALL passes: one read per staging
+        group per pass — a two-pass plan over one matrix counts it twice
+        (that is the honest I/O the schedule performs)."""
+        return int(sum(ps.bytes_in() for ps in self.passes))
 
     def bytes_out(self) -> int:
         total = 0
@@ -346,14 +523,10 @@ class Plan:
         return int(total)
 
     def describe(self) -> str:
-        lines = [f"Plan(long_dim={self.long_dim}, partition_rows={self.partition_rows},"
+        lines = [f"Plan(long_dim={self.long_dim}, passes={self.n_passes},"
                  f" fuse={self.fuse})"]
-        for n in self.order:
-            role = ("source" if self._is_source(n)
-                    else "epilog" if n.id in self.epilogue_ids
-                    else "sink" if n.is_sink else "fused")
-            lines.append(f"  [{role:6s}] {n!r}")
-        lines.extend("  " + line for line in self.ir.describe().splitlines())
+        for ps in self.passes:
+            lines.extend("  " + line for line in ps.describe().splitlines())
         lines.append(f"  flops={self.flop_count():.3e} bytes_in={self.bytes_in():.3e}"
                      f" bytes_out={self.bytes_out():.3e}")
         return "\n".join(lines)

@@ -118,9 +118,24 @@ def mapply(a: MatLike, b, f) -> FMMatrix:
 def mapply_row(a: MatLike, vec, f) -> FMMatrix:
     """CC_ij = f(AA_ij, B_j): the vector pairs with each *row* (length ncol).
 
-    ncol is small for TAS matrices, so the vector is broadcast state."""
+    ncol is small for TAS matrices, so the vector is broadcast state.  A
+    VIRTUAL vector — ``colMeans(X)`` feeding ``X - colMeans(X)`` — stays a
+    lazy DAG parent: the fusion planner schedules the sweep one pass after
+    the pass that merges the vector, binding it as a broadcast small
+    (the multi-pass ``scale(X)`` schedule).  Physical vectors keep the
+    eager broadcast-Small form."""
     f = _b(f)
     x = as_node(a)
+    if isinstance(vec, Node) or (isinstance(vec, FMMatrix) and vec.is_virtual):
+        v = as_node(vec)
+        if min(v.shape) != 1 or max(v.shape) != x.ncol:
+            raise ValueError(
+                f"mapply.row vector shape {v.shape} does not broadcast "
+                f"across ncol {x.ncol}")
+        xx, vv, dt = _promote2(x, v)
+        node = MapNode("mapply_row", x.shape, f.out_dtype(dt, dt), [xx, vv],
+                       {"vudf": f})
+        return wrap(node)
     v = _small_array(vec).reshape(-1)
     if v.shape[0] != x.ncol:
         raise ValueError(f"mapply.row vector length {v.shape[0]} != ncol {x.ncol}")

@@ -85,11 +85,18 @@ def lower(plan, ir, backend: str) -> "LoweredProgram":
 # ---------------------------------------------------------------------------
 
 class LoweredProgram:
-    """An executable lowering of one plan: per-partition ``step``, the
-    sink-partial ``combine`` merge, and — when the plan has post-sink lazy
-    math — an ``epilogue`` callable the executor invokes exactly ONCE after
-    the merge: ``epilogue(merged_sinks, epilogue_sources, smalls) →
-    outputs`` (the engine's fourth stage)."""
+    """An executable lowering of ONE PASS of a plan: per-partition ``step``,
+    the sink-partial ``combine`` merge, and — when the pass has post-sink
+    lazy math — an ``epilogue`` callable the executor invokes exactly ONCE
+    after the merge: ``epilogue(merged_sinks, epilogue_sources, smalls,
+    bindings) → outputs`` (the engine's fourth stage).
+
+    ``bindings`` is the multi-pass contract (fusion.PassSchedule): merged
+    values produced by EARLIER passes of the same plan — the pass-1 moment
+    vector a pass-2 ``scale(X)`` sweep consumes — handed to ``step`` and
+    ``epilogue`` as broadcast arguments keyed by node id.  They are normal
+    runtime inputs of the jitted callables (never baked constants, never
+    donated: every partition of the pass reads them)."""
 
     def __init__(self, plan, ir, backend: str, units):
         self.plan = plan
@@ -120,8 +127,8 @@ class LoweredProgram:
                          f"outs={[n.name for n in self.plan.epilogue_roots]}")
         return "\n".join(lines)
 
-    def _step(self, source_blocks, smalls, offset):
-        """One I/O-level partition through the fused cut.
+    def _step(self, source_blocks, smalls, bindings, offset):
+        """One I/O-level partition through the fused cut of this pass.
 
         Returns (sink_partials, row_local_outputs) for this partition;
         partials start from each sink's identity so ``combine`` can merge
@@ -131,9 +138,13 @@ class LoweredProgram:
         (keyed by the staging group's canonical node id); every aliasing
         source node sees the same traced value, so a matrix referenced
         through k leaves is read and transferred once per partition.
+        ``bindings`` holds the pass's broadcast inputs keyed by node id:
+        earlier-pass merged values plus whole-staged small physical sources
+        (fusion.PassSchedule.broadcast_sources).
         """
         values = {nid: source_blocks[canon]
                   for nid, canon in self.plan.source_aliases.items()}
+        values.update(bindings)
         partials = {n.id: n.identity() for n in self.plan.sinks}
         for unit in self.units:
             unit.run(values, partials, smalls, offset)
@@ -145,20 +156,25 @@ class LoweredProgram:
         return {nid: self._sinks_by_id[nid].combine(accs[nid], partials[nid])
                 for nid in accs}
 
-    def _epilogue(self, sink_finals, epi_sources, smalls):
-        """The plan's post-sink lazy math (paper §III-E: expressions like
+    def _epilogue(self, sink_finals, epi_sources, smalls, bindings):
+        """The pass's post-sink lazy math (paper §III-E: expressions like
         ``colSums(X) / n`` fuse into the same execution job), evaluated on
-        the FINALIZED sink values — one on-device launch per materialize,
-        cached with the rest of the plan.
+        the FINALIZED sink values — one on-device launch per pass, cached
+        with the rest of the plan.
 
         ``sink_finals``: {sink node id: finalized value} out of the merge;
         ``epi_sources``: {leaf id: whole array} for small physical operands
-        only the epilogue consumes (e.g. a ridge eye matrix).  A sink-kind
-        node appearing here (``sum(colMeans(X))``) contracts an
+        only the epilogue consumes (e.g. a ridge eye matrix);
+        ``bindings``: earlier-pass merged values (multi-pass plans).  A
+        sink-kind node appearing here (``sum(colMeans(X))``) contracts an
         already-merged small value, so it runs its identity→update→finalize
         quartet once with offset 0.
+
+        Returns the pass's epilogue ROOTS (requested/saved results) plus
+        its CARRIES — unrequested epilogue values a later pass consumes.
         """
-        values = dict(epi_sources)
+        values = dict(bindings)
+        values.update(epi_sources)
         values.update(sink_finals)
         zero = jnp.zeros((), jnp.int32)
         for n in self.plan.epilogue_nodes:
@@ -170,7 +186,39 @@ class LoweredProgram:
                 values[n.id] = n.finalize(acc)
             else:
                 values[n.id] = n.block_eval(blocks, zero)
-        return {n.id: values[n.id] for n in self.plan.epilogue_roots}
+        outs = {n.id: values[n.id] for n in self.plan.epilogue_roots}
+        for n in getattr(self.plan, "epilogue_carries", []):
+            outs[n.id] = values[n.id]
+        return outs
+
+
+class MultiPassProgram:
+    """The compiled executable of a multi-pass plan: one `LoweredProgram`
+    per pass, run in order by the executor under ONE plan-cache entry.
+    Pass k+1's ``bindings`` are fed from pass k's finalized sinks and
+    epilogue outputs (core/materialize.py carries them forward)."""
+
+    def __init__(self, passes):
+        self.passes = list(passes)
+        self.backend = self.passes[0].backend if self.passes else "?"
+
+    @property
+    def kernel_units(self):
+        return [u for p in self.passes for u in p.kernel_units]
+
+    @property
+    def epilogue(self):
+        """Truthy when any pass has post-merge math (observability only —
+        the executor always goes through the per-pass programs)."""
+        return next((p.epilogue for p in self.passes
+                     if p.epilogue is not None), None)
+
+    def describe(self) -> str:
+        lines = [f"MultiPassProgram(passes={len(self.passes)})"]
+        for k, p in enumerate(self.passes):
+            lines.append(f" pass {k}:")
+            lines.extend("  " + line for line in p.describe().splitlines())
+        return "\n".join(lines)
 
 
 class Backend:

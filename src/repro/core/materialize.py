@@ -66,25 +66,36 @@ PLAN_CACHE_LIMIT = 256
 # assert on (one fused pass, one epilogue launch, compile-once/stream-many).
 # ``epilogue_host_inputs`` counts host (numpy/memmap) buffers that reached
 # the epilogue callable: it must stay 0 — merged sinks land on device even
-# when the sources are disk-backed.
+# when the sources are disk-backed.  ``passes`` counts streaming passes
+# executed (a two-pass ``scale(X)`` plan adds 2 per materialize); the
+# per-pass bytes of the MOST RECENT execution are surfaced as
+# ``pass_bytes_in`` so multi-pass I/O is observable.
 _STATS = {
     "materialize_calls": 0,
     "plan_cache_hits": 0,
     "plan_cache_misses": 0,
     "partition_steps": 0,
+    "passes": 0,
     "epilogue_launches": 0,
     "epilogue_host_inputs": 0,
 }
 
+#: Streamed bytes of each pass of the most recent plan execution.
+_LAST_PASS_BYTES: list = []
+
 
 def exec_stats() -> dict:
-    """Snapshot of the engine's execution counters (see _STATS)."""
-    return dict(_STATS)
+    """Snapshot of the engine's execution counters (see _STATS), plus
+    ``pass_bytes_in``: the per-pass streamed bytes of the last execution."""
+    st = dict(_STATS)
+    st["pass_bytes_in"] = tuple(_LAST_PASS_BYTES)
+    return st
 
 
 def reset_exec_stats():
     for k in _STATS:
         _STATS[k] = 0
+    del _LAST_PASS_BYTES[:]
 
 
 def clear_plan_cache():
@@ -131,13 +142,14 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     plan = Plan(virtuals)
     exec_plan = plan
     if reuse_plans:
-        # Both partition levels and the backend are part of the key: the
-        # I/O partition size reads IO_PARTITION_BYTES at plan build and the
-        # IR's block-row schedule reads VMEM_PARTITION_BYTES, so a
-        # fm.set_conf change — or a backend switch — must miss the cache
-        # rather than reuse an executable built for different tiling.
-        sig = (plan.signature(), plan.partition_rows,
-               plan.ir.schedule_key(), backend, _mesh_key(mesh))
+        # Both partition levels OF EVERY PASS and the backend are part of
+        # the key: the I/O partition size reads IO_PARTITION_BYTES at plan
+        # build and the IR's block-row schedule reads VMEM_PARTITION_BYTES,
+        # so a fm.set_conf change — or a backend switch — must miss the
+        # cache rather than reuse an executable built for different tiling.
+        # (plan.signature() itself embeds the pass structure: node roles
+        # carry pass numbers, so one-pass and two-pass cuts never collide.)
+        sig = (plan.signature(), plan.pass_key(), backend, _mesh_key(mesh))
         cached = _PLANS.get(sig)
         if cached is not None:
             _STATS["plan_cache_hits"] += 1
@@ -158,8 +170,15 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     # the signature guarantees the new plan's flags match construction
     # time), execute, copy the results onto the new plan's nodes, then
     # restore the template exactly as we found it.
+    # A cached plan built over the SAME node objects (a retry after a
+    # failed execution left the entry behind) needs no borrowing dance:
+    # results land on the right nodes directly, and snapshot-restore would
+    # clobber them with the pre-failure (empty) state.
+    borrowed = exec_plan is not plan and any(
+        a is not b for a, b in zip(exec_plan.result_nodes(),
+                                   plan.result_nodes()))
     snapshot = None
-    if exec_plan is not plan:
+    if borrowed:
         snapshot = [(n, n.cached_store, n.save)
                     for n in exec_plan.result_nodes()]
         for (n, _, _), new_n in zip(snapshot, plan.result_nodes()):
@@ -168,10 +187,11 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     try:
         _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
                  sources=[m for _, m in plan.sources],
+                 bc_sources=[m for _, m in plan.broadcast_sources],
                  epi_sources=[m for _, m in plan.epilogue_sources],
                  smalls=plan.small_values(), prefetch=prefetch,
                  backend=backend)
-        if exec_plan is not plan:
+        if borrowed:
             for old_n, new_n in zip(exec_plan.result_nodes(),
                                     plan.result_nodes()):
                 new_n.cached_store = old_n.cached_store
@@ -201,25 +221,68 @@ def _result_of(m: FMMatrix) -> FMMatrix:
 
 def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
              sources=None, smalls=None, prefetch: Optional[bool] = None,
-             backend: Optional[str] = None, epi_sources=None):
+             backend: Optional[str] = None, epi_sources=None,
+             bc_sources=None):
+    """Run every pass of ``plan`` in order, then register the results.
+
+    A multi-pass plan (fusion.PassSchedule) carries each pass's finalized
+    sinks + epilogue outputs forward as the next pass's ``bindings``
+    (broadcast inputs of the compiled step) — the moment-pass → sweep-pass
+    schedule executing under one plan-cache entry and one materialize
+    call.  Results register only after EVERY pass succeeds, so an
+    interrupted pass (a staging error mid-stream) leaves no
+    partially-registered sinks behind.
+    """
     if sources is None:
         sources = [m for _, m in plan.sources]
+    if bc_sources is None:
+        bc_sources = [m for _, m in plan.broadcast_sources]
+    if epi_sources is None:
+        epi_sources = [m for _, m in plan.epilogue_sources]
     if smalls is None:
         smalls = plan.small_values()
     prog = plan.program(lowering.resolve_backend(backend))
+    pass_progs = getattr(prog, "passes", None) or [prog]
     mode = _pick_mode_src(sources, mode)
-    if mode == "whole":
-        _execute_whole(plan, prog, mesh, sources, smalls, epi_sources)
-    elif mode == "stream":
-        _execute_stream(plan, prog, sources, smalls, to_host=False,
-                        donate=donate, prefetch=prefetch,
-                        epi_sources=epi_sources)
-    elif mode == "ooc":
-        _execute_stream(plan, prog, sources, smalls, to_host=True,
-                        donate=donate, prefetch=prefetch,
-                        epi_sources=epi_sources)
-    else:
+    if mode not in ("whole", "stream", "ooc"):
         raise ValueError(f"unknown mode {mode!r}")
+
+    carried: dict[int, object] = {}
+    finals_all: dict[int, object] = {}
+    parts_all: dict[int, list] = {}
+    epi_all: dict[int, object] = {}
+    disk_all: dict[int, object] = {}
+    del _LAST_PASS_BYTES[:]
+    src_i = bc_i = epi_i = 0
+    for ps, pprog in zip(plan.passes, pass_progs):
+        ns, nb, ne = (len(ps.sources), len(ps.broadcast_sources),
+                      len(ps.epilogue_sources))
+        ps_src = sources[src_i:src_i + ns]
+        ps_bc = bc_sources[bc_i:bc_i + nb]
+        ps_epi = epi_sources[epi_i:epi_i + ne]
+        src_i, bc_i, epi_i = src_i + ns, bc_i + nb, epi_i + ne
+        # Pass bindings: earlier passes' merged values, plus this pass's
+        # whole-staged small physical sources.
+        bindings = {nid: carried[nid] for nid in ps.binding_ids}
+        for nid, mat in ps.broadcast_source_pairs(ps_bc):
+            bindings[nid] = _stage_whole(mat)
+        if mode == "whole":
+            finals, out_parts, epi_outs = _execute_whole_pass(
+                ps, pprog, mesh, ps_src, smalls, ps_epi, bindings)
+        else:
+            finals, out_parts, epi_outs, dstores = _execute_stream_pass(
+                ps, pprog, ps_src, smalls, ps_epi, bindings,
+                to_host=(mode == "ooc"), donate=donate, prefetch=prefetch)
+            disk_all.update(dstores)
+        _STATS["passes"] += 1
+        _LAST_PASS_BYTES.append(ps.bytes_in(ps_src))
+        finals_all.update(finals)
+        parts_all.update(out_parts)
+        epi_all.update(epi_outs)
+        carried.update(finals)
+        carried.update(epi_outs)
+    _store_results(plan, finals_all, parts_all, to_host=(mode == "ooc"),
+                   disk_stores=disk_all, epilogue_outs=epi_all)
     return plan
 
 
@@ -231,29 +294,35 @@ def _pick_mode_src(sources, mode: str) -> str:
     return "whole"
 
 
-def _execute_whole(plan: Plan, prog, mesh, sources, smalls,
-                   epi_sources=None):
+def _stage_whole(mat) -> "jax.Array":
+    """Stage a small matrix whole onto the device (broadcast/epilogue
+    sources, pass bindings must never leak host buffers into jit)."""
+    data = mat.logical_data()
+    return jnp.asarray(np.asarray(data)) if mat.on_host else data
+
+
+def _execute_whole_pass(ps, prog, mesh, sources, smalls, epi_sources,
+                        bindings):
     # One staged array per physical matrix; leaves aliasing it share the
-    # buffer through plan.source_aliases (see LoweredProgram._step).
+    # buffer through the pass's source_aliases (see LoweredProgram._step).
     blocks = {}
-    for nid, mat in plan.staged_sources(sources):
+    for nid, mat in ps.staged_sources(sources):
         data = mat.logical_data()
         arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
-        if mesh is not None and mat.shape[0] == plan.long_dim:
+        if mesh is not None and mat.shape[0] == ps.long_dim:
             arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
         blocks[nid] = arr
     offset = jnp.zeros((), jnp.int32)
     _STATS["partition_steps"] += 1
-    partials, outputs = prog.step(blocks, smalls, offset)
-    accs = prog.combine(plan.init_accs(), partials)
-    finals = plan.finalize_accs(accs)
-    epilogue_outs = _run_epilogue(plan, prog, finals, epi_sources, smalls)
-    _store_results(plan, finals, {nid: [v] for nid, v in outputs.items()},
-                   to_host=False, epilogue_outs=epilogue_outs)
+    partials, outputs = prog.step(blocks, smalls, bindings, offset)
+    accs = prog.combine(ps.init_accs(), partials)
+    finals = ps.finalize_accs(accs)
+    epi_outs = _run_epilogue(ps, prog, finals, epi_sources, smalls, bindings)
+    return finals, {nid: [v] for nid, v in outputs.items()}, epi_outs
 
 
-def _run_epilogue(plan: Plan, prog, sink_finals, epi_sources, smalls):
-    """Invoke the lowered epilogue exactly ONCE after the partial merge.
+def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
+    """Invoke the lowered epilogue exactly ONCE after a pass's merge.
 
     Inputs are the finalized sink values (device arrays out of the jitted
     ``combine``) plus any small physical matrices only the epilogue
@@ -264,14 +333,13 @@ def _run_epilogue(plan: Plan, prog, sink_finals, epi_sources, smalls):
     if prog.epilogue is None:
         return {}
     epi_vals = {}
-    for nid, mat in plan.epilogue_source_pairs(epi_sources):
-        data = mat.logical_data()
-        epi_vals[nid] = jnp.asarray(np.asarray(data)) if mat.on_host else data
+    for nid, mat in ps.epilogue_source_pairs(epi_sources):
+        epi_vals[nid] = _stage_whole(mat)
     leaves = jax.tree_util.tree_leaves((sink_finals, epi_vals))
     _STATS["epilogue_host_inputs"] += sum(
         1 for leaf in leaves if isinstance(leaf, np.ndarray))
     _STATS["epilogue_launches"] += 1
-    return prog.epilogue(sink_finals, epi_vals, smalls)
+    return prog.epilogue(sink_finals, epi_vals, smalls, bindings)
 
 
 def _long_spec(mesh):
@@ -297,24 +365,28 @@ def _inline_partitions(src_pairs, rows: int, n: int, donate: bool):
         start = stop
 
 
-def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
-                    donate: bool = True, prefetch: Optional[bool] = None,
-                    epi_sources=None):
+def _execute_stream_pass(ps, prog, sources, smalls, epi_sources, bindings, *,
+                         to_host: bool, donate: bool = True,
+                         prefetch: Optional[bool] = None):
+    """Stream ONE pass of a plan partition-by-partition.  Each pass
+    re-drives its own prefetcher over its own staged sources (a pass-2
+    sweep re-reads the long-dimension matrices pass 1 already streamed)."""
     from .. import storage  # deferred: storage depends on core.matrix
 
-    rows = plan.partition_rows
-    n = plan.long_dim
-    accs = plan.init_accs()
-    out_parts: dict[int, list] = {x.id: [] for x in plan.row_local_roots + plan.saves}
+    rows = ps.partition_rows
+    n = ps.long_dim
+    accs = ps.init_accs()
+    out_parts: dict[int, list] = {x.id: [] for x in ps.row_local_roots + ps.saves}
     host_bufs: dict[int, np.ndarray] = {}
     disk_stores: dict[int, "storage.MmapStore"] = {}
 
-    for x in plan.row_local_roots + plan.saves:
+    for x in ps.row_local_roots + ps.saves:
         target = x.save or ("host" if to_host else "device")
         if target == "disk":
             # Write-through spill: the long-dimension output streams into a
             # preallocated on-disk matrix, partition by partition — it never
-            # exists whole in RAM.
+            # exists whole in RAM.  Works for any pass: scale(X, save='disk')
+            # spills the PASS-2 sweep output out-of-core end to end.
             disk_stores[x.id] = storage.create_matrix(
                 storage.spill_path(x.name), (x.nrow, x.ncol),
                 dtypes.np_equiv(x.dtype))
@@ -323,7 +395,7 @@ def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
 
     # Deduped staging: one disk/RAM read + device_put per PHYSICAL matrix
     # per partition, however many leaves reference it (ROADMAP open item).
-    src_pairs = plan.staged_sources(sources)
+    src_pairs = ps.staged_sources(sources)
     if prefetch is None:
         # Default on for slow-tier sources; a single-partition stream has
         # nothing to overlap, so skip the thread.
@@ -340,7 +412,7 @@ def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
     try:
         for start, stop, blocks in parts:
             _STATS["partition_steps"] += 1
-            partials, outputs = step(blocks, smalls,
+            partials, outputs = step(blocks, smalls, bindings,
                                      jnp.asarray(start, jnp.int32))
             # The paper's partial-merge: each partition's sink partials fold
             # into the running accumulators with the aggregation VUDFs'
@@ -357,14 +429,13 @@ def _execute_stream(plan: Plan, prog, sources, smalls, *, to_host: bool,
         if hasattr(parts, "close"):
             parts.close()
 
-    finals = plan.finalize_accs(accs)
-    epilogue_outs = _run_epilogue(plan, prog, finals, epi_sources, smalls)
+    finals = ps.finalize_accs(accs)
+    epi_outs = _run_epilogue(ps, prog, finals, epi_sources, smalls, bindings)
     for nid, buf in host_bufs.items():
         out_parts[nid] = [buf]
     for st in disk_stores.values():
         st.flush()
-    _store_results(plan, finals, out_parts, to_host=to_host,
-                   disk_stores=disk_stores, epilogue_outs=epilogue_outs)
+    return finals, out_parts, epi_outs, disk_stores
 
 
 def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,

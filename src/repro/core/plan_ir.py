@@ -105,6 +105,11 @@ def compile_ir(plan) -> PlanIR:
         for p in n.parents:
             if isinstance(p, Small) or _is_source(p) or p.id in seen_parents:
                 continue  # one entry per consumer (groupby uses labels twice)
+            if p.id not in consumers:
+                # A pass BINDING: a merged value produced by an earlier
+                # pass of the same plan — an external input of this pass,
+                # like a source (see fusion.PassSchedule.bindings).
+                continue
             seen_parents.add(p.id)
             consumers[p.id].append(n)
 

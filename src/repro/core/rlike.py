@@ -8,12 +8,13 @@ of these calls builds one lazy DAG that `fm.materialize` fuses.
     >>> X = fm.runif_matrix(1_000_000, 16)
     >>> Z = (X - colMeans(X)) / colSds(X)      # standardize (lazy GenOps)
     >>> G = crossprod(Z)                       # Gram sink
-    >>> (G,) = fm.materialize(G)               # one fused pass computes G
+    >>> (G,) = fm.materialize(G)               # ONE call, two scheduled passes
 
 (colMeans/colSds are pure lazy chains — a colSums sink plus post-sink
 epilogue math evaluated once after the partition-loop merge; recycling
-them across X materializes the moment pass, and the standardized Z itself
-stays virtual and fuses into the Gram pass.)
+them across X is a lazy sweep too, so the whole standardize-then-Gram
+program is ONE DAG that the multi-pass planner runs as moment pass →
+sweep+Gram pass inside a single materialize.)
 
 All functions accept and return `FM`.  `conv_FM2R` drops to numpy.
 """
@@ -79,6 +80,11 @@ class FM:
         vector applies per row (mapply.row); length-nrow per column
         (mapply.col).
 
+        A VIRTUAL length-ncol vector (``X - colMeans(X)``) stays lazy: the
+        sweep becomes a DAG edge and the multi-pass planner schedules
+        moment pass → sweep pass automatically — one materialize, two
+        streaming passes.  Physical vectors broadcast eagerly as before.
+
         Ambiguity rule: when the matrix is square (nrow == ncol), a
         length-n vector pairs with the ROW INDEX (mapply.col) — R stores
         matrices column-major, so recycling walks down each column.
@@ -90,7 +96,8 @@ class FM:
                 f"shape {other.shape} against {self.shape} — for "
                 f"elementwise matrix∘matrix the shapes must match exactly")
         if n == self.ncol and n != self.nrow:
-            return FM(genops.mapply_row(self.m, _vec_data(other.m), op))
+            vec = other.m if other.m.is_virtual else _vec_data(other.m)
+            return FM(genops.mapply_row(self.m, vec, op))
         if n == self.nrow:
             # Includes the square-matrix case: R's column-major recycling
             # pairs vector element i with row i.
@@ -322,7 +329,8 @@ def colMeans(x) -> FM:
     plan EPILOGUE (post-sink lazy math, evaluated once after the
     partition-loop merge), so colMeans fuses into whatever pass
     materializes it.  Recycling across the matrix (``X - colMeans(X)``)
-    materializes the chain first, as any virtual recycled vector does."""
+    stays lazy too: the planner schedules the sweep one pass after the
+    moment pass, all inside one materialize."""
     return colSums(x) / float(_fm(x).nrow)
 
 
@@ -350,26 +358,42 @@ def mean_(x) -> FM:
     return agg(x, "sum") / float(m.nrow * m.ncol)
 
 
-def scale(x, center=True, scale=True) -> FM:
-    """R scale(): center/standardize columns.  The column moments come from
-    ONE fused pass (the colMeans/colSds epilogue chains co-materialize);
-    the standardized matrix itself stays LAZY, ready to fuse into a
-    downstream Gram or IRLS pass — FlashR's ``scale(as.double(...))``
-    ingestion idiom.  Constant columns follow R: division yields non-finite
-    values rather than being silently clamped."""
-    wants = []
-    if center:
-        wants.append(colMeans(x))
-    if scale:
-        wants.append(colSds(x))
+def sweep(x, margin: int, stat, fun: str = "sub") -> FM:
+    """R sweep(): apply ``fun`` between X and a summary statistic vector.
+
+    ``margin=2`` pairs ``stat`` with each column index (``mapply.row``);
+    ``margin=1`` with each row index (``mapply.col``).  ``stat`` may be a
+    LAZY vector (``sweep(X, 2, colMeans(X))``): the whole expression stays
+    one DAG and the multi-pass planner schedules the moment pass and the
+    sweep pass inside a single materialize."""
+    if margin == 2:
+        return mapply_row(x, stat, fun)
+    if margin == 1:
+        return mapply_col(x, stat, fun)
+    raise ValueError(f"sweep margin must be 1 (rows) or 2 (columns), "
+                     f"got {margin!r}")
+
+
+def scale(x, center=True, scale=True, save: Optional[str] = None) -> FM:
+    """R scale(): center/standardize columns — a PURE LAZY chain.
+
+    Nothing computes here: the moment sinks (colSums, colSums(x²)), their
+    epilogue math and the sweeps are one DAG, and ``fm.materialize``
+    schedules it as moment pass → sweep pass automatically (TWO streaming
+    passes over X, one plan-cache entry, ``exec_stats()['passes'] == 2``).
+    The standardized matrix also fuses into a downstream Gram or IRLS pass
+    — FlashR's ``scale(as.double(...))`` ingestion idiom.  ``save='disk'``
+    write-through-spills the swept output into an on-disk matrix during
+    pass 2, so ``scale(X, save='disk')`` streams out-of-core end to end.
+    Constant columns follow R: division yields non-finite values rather
+    than being silently clamped."""
     z = x if isinstance(x, FM) else FM(x)
-    if not wants:
-        return z
-    moments = materialize(*wants)
     if center:
-        z = mapply_row(z, moments[0], "sub")
+        z = mapply_row(z, colMeans(x), "sub")
     if scale:
-        z = mapply_row(z, moments[-1], "div")
+        z = mapply_row(z, colSds(x), "div")
+    if save is not None and z.m.is_virtual:
+        set_mate_level(z, save)
     return z
 
 

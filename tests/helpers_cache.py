@@ -11,7 +11,10 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 
+import numpy as np
+
 from repro.core import materialize as mz
+from repro.core.matrix import DenseStore, FMMatrix
 
 
 @dataclasses.dataclass
@@ -54,3 +57,53 @@ def assert_activity(act: CacheActivity, **expected):
         got = getattr(act, name)
         assert got == want, (
             f"{name}: expected {want}, got {got} (full activity: {act})")
+
+
+# ---------------------------------------------------------------------------
+# Staging fault injection (multi-pass interruption tests)
+# ---------------------------------------------------------------------------
+
+class StagingFault(RuntimeError):
+    """The simulated partition-staging failure raised by FlakyStore."""
+
+
+class FlakyStore(DenseStore):
+    """A host-tier DenseStore whose ``block()`` raises `StagingFault` after
+    ``fail_after`` successful partition reads — simulates a disk/staging
+    error mid-stream.  ``heal()`` turns the fault off so a retry of the
+    same plan (same cache entry) can succeed."""
+
+    def __init__(self, data: np.ndarray, fail_after: int):
+        super().__init__(np.asarray(data))
+        self.fail_after = int(fail_after)
+        self.reads = 0
+        self.failed = False
+
+    def block(self, start: int, stop: int):
+        if self.fail_after >= 0 and self.reads >= self.fail_after:
+            self.failed = True
+            raise StagingFault(
+                f"injected staging failure after {self.reads} reads")
+        self.reads += 1
+        return super().block(start, stop)
+
+    def heal(self):
+        self.fail_after = -1
+
+
+def flaky_matrix(arr: np.ndarray, fail_after: int):
+    """A host-tier FMMatrix whose partition staging fails after
+    ``fail_after`` block reads.  Returns ``(matrix, store)`` — call
+    ``store.heal()`` to let a retry succeed."""
+    arr = np.asarray(arr)
+    store = FlakyStore(arr, fail_after)
+    return FMMatrix(arr.shape, arr.dtype, store=store, name="flaky"), store
+
+
+def assert_no_partial_results(*nodes):
+    """After an interrupted execution, NO node of the plan may have been
+    registered (a partially-registered sink would poison later cuts that
+    reuse it as a source)."""
+    for n in nodes:
+        assert getattr(n, "cached_store", None) is None, (
+            f"{n!r} was registered by an interrupted execution")

@@ -1,0 +1,325 @@
+"""Multi-pass planner tests (ISSUE 5 tentpole).
+
+Contract under test: a DAG in which a merged value (sink / epilogue
+output) feeds a ROW-LOCAL op — FlashR's ``scale(X)``, ``X - colMeans(X)``,
+PCA's covariance-of-the-centered-matrix — schedules as an ordered pass
+list (moment pass → sweep pass) compiled under ONE plan-cache entry and
+executed by ONE ``fm.materialize`` call: ``exec_stats()['passes'] == 2``,
+per-pass ``pass_bytes_in`` observable, parity with numpy on every
+backend × mode cell, write-through spill for pass-2 outputs, and no
+partially-registered sinks when a pass is interrupted.
+"""
+import numpy as np
+import pytest
+
+from helpers_cache import (assert_activity, assert_no_partial_results,
+                           cache_activity, flaky_matrix)
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core.dag import toposort
+from repro.core.fusion import Plan
+
+RNG = np.random.default_rng(7)
+
+CELLS = [(backend, mode)
+         for backend in ("xla", "pallas")
+         for mode in ("whole", "stream", "ooc")]
+
+
+def _x(n=600, p=5):
+    return (RNG.normal(size=(n, p)) * 2 + 0.5).astype(np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _small_partitions():
+    """Make streams multi-partition so pass 2 genuinely re-streams."""
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=4096)
+    mz.clear_plan_cache()
+    yield
+    matrix_mod.IO_PARTITION_BYTES = old
+    mz.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# The tentpole: scale(X) is ONE materialize with passes == 2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,mode", CELLS)
+def test_scale_one_call_two_passes(backend, mode):
+    a = _x()
+    X = fm.conv_R2FM(a, host=(mode == "ooc"))
+    Z = fm.scale(X)
+    assert Z.is_virtual  # nothing computed: the moments are DAG edges
+    plan = Plan([Z.m])
+    assert plan.n_passes == 2
+    # Honest I/O accounting: two streamed reads of one physical matrix.
+    assert plan.bytes_in() == 2 * X.m.nbytes()
+    mz.reset_exec_stats()
+    with cache_activity() as act:
+        (Zm,) = fm.materialize(Z, mode=mode, backend=backend)
+        st = mz.exec_stats()
+    assert_activity(act, materialize_calls=1, misses=1, hits=0,
+                    epilogue_launches=1)
+    assert st["passes"] == 2
+    assert st["pass_bytes_in"] == (X.m.nbytes(), X.m.nbytes())
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(Zm), ref, rtol=1e-3, atol=1e-4)
+    mz.clear_plan_cache()
+
+
+@pytest.mark.parametrize("backend,mode", CELLS)
+def test_pca_covariance_of_centered_two_passes(backend, mode):
+    """The PCA shape: crossprod(X - colMeans(X)) — a pass-2 CONTRACTION
+    consuming the pass-1 epilogue, with its own /(n−1) pass-2 epilogue."""
+    a = _x(700, 4)
+    X = fm.conv_R2FM(a, host=(mode == "ooc"))
+    cov = fm.crossprod(X - fm.colMeans(X)) / float(a.shape[0] - 1)
+    plan = Plan([cov.m])
+    assert plan.n_passes == 2
+    assert plan.passes[1].sinks  # the Gram contraction streams in pass 2
+    mz.reset_exec_stats()
+    (cm,) = fm.materialize(cov, mode=mode, backend=backend)
+    st = mz.exec_stats()
+    assert st["passes"] == 2
+    assert st["epilogue_launches"] == 2  # moments epilogue + /(n−1)
+    c = a - a.mean(0)
+    ref = c.T.astype(np.float64) @ c / (a.shape[0] - 1)
+    np.testing.assert_allclose(fm.as_np(cm), ref, rtol=2e-3, atol=1e-4)
+    mz.clear_plan_cache()
+
+
+def test_sweep_helper_and_sink_binding():
+    """fm.sweep with a lazy stat; a SINK value (not an epilogue chain)
+    bound directly into the pass-2 row-local op."""
+    a = _x(400, 3)
+    X = fm.conv_R2FM(a)
+    s = fm.sweep(X, 2, fm.colSums(X), "sub")
+    plan = Plan([s.m])
+    assert plan.n_passes == 2
+    (sm,) = fm.materialize(s, mode="stream")
+    np.testing.assert_allclose(fm.as_np(sm), a - a.sum(0), rtol=1e-4,
+                               atol=1e-3)
+    with pytest.raises(ValueError, match="margin"):
+        fm.sweep(X, 3, fm.colSums(X))
+
+
+def test_three_pass_chain():
+    """Pass numbers chain: standardizing the CENTERED matrix by its own
+    colSds needs moment → center → sd-moment... scheduled automatically."""
+    a = _x(500, 4)
+    X = fm.conv_R2FM(a)
+    Z = X - fm.colMeans(X)              # pass 2 row-local
+    W = Z / fm.colSds(Z)                # colSds(Z) sinks stream in pass 2
+    plan = Plan([W.m])
+    assert plan.n_passes == 3
+    mz.reset_exec_stats()
+    (wm,) = fm.materialize(W, mode="stream")
+    assert mz.exec_stats()["passes"] == 3
+    c = a - a.mean(0)
+    ref = c / c.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(wm), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_scale_fuses_into_downstream_gram():
+    """scale(X) stays lazy and fuses into a downstream Gram — the FlashR
+    standardize-then-correlate idiom in one call."""
+    a = _x(600, 4)
+    X = fm.conv_R2FM(a)
+    G = fm.crossprod(fm.scale(X))
+    mz.reset_exec_stats()
+    (gm,) = fm.materialize(G)
+    st = mz.exec_stats()
+    assert st["materialize_calls"] == 1 and st["passes"] == 2
+    z = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(gm), z.T.astype(np.float64) @ z,
+                               rtol=2e-3, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# Write-through spill of the pass-2 long-dimension output
+# ---------------------------------------------------------------------------
+
+def test_scale_save_disk_streams_out_of_core(tmp_path, monkeypatch):
+    from repro import storage
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    a = _x(800, 4)
+    Xd = fm.load_dense_matrix(a, "mp_spill_x")
+    assert Xd.m.on_disk
+    Z = fm.scale(Xd, save="disk")
+    mz.reset_exec_stats()
+    (Zm,) = fm.materialize(Z)
+    st = mz.exec_stats()
+    assert st["passes"] == 2
+    assert st["partition_steps"] > 2     # genuinely streamed, both passes
+    assert st["epilogue_host_inputs"] == 0
+    assert Zm.m.on_disk                  # disk → disk, never whole in RAM
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(np.asarray(Zm.m.logical_data()), ref,
+                               rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache correctness under the pass-structure key
+# ---------------------------------------------------------------------------
+
+def test_cache_no_collision_across_pass_structures():
+    """The same sweep computation with a LAZY stat (two passes) vs a
+    PHYSICAL stat (one pass) must be two cache entries, and each signature
+    must carry its pass structure."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    mu = a.mean(0).astype(np.float32)
+    lazy = fm.mapply_row(X, fm.colMeans(X), "sub")
+    phys = fm.mapply_row(X, mu, "sub")
+    p_lazy, p_phys = Plan([lazy.m]), Plan([phys.m])
+    assert p_lazy.n_passes == 2 and p_phys.n_passes == 1
+    assert p_lazy.signature() != p_phys.signature()
+    assert "P2" in p_lazy.signature() and "P1" in p_phys.signature()
+    with cache_activity() as act:
+        (lm,) = fm.materialize(fm.mapply_row(X, fm.colMeans(X), "sub"))
+        (pm,) = fm.materialize(fm.mapply_row(X, mu, "sub"))
+        # identical structures re-materialize as hits
+        fm.materialize(fm.mapply_row(X, fm.colMeans(X), "sub"))
+        fm.materialize(fm.mapply_row(X, mu, "sub"))
+    assert_activity(act, misses=2, hits=2)
+    np.testing.assert_allclose(fm.as_np(lm), a - a.mean(0), rtol=1e-4,
+                               atol=1e-3)
+    np.testing.assert_allclose(fm.as_np(pm), a - mu, rtol=1e-4, atol=1e-3)
+
+
+def test_cache_keyed_on_per_pass_partition_schedule():
+    """Retuning the I/O partition budget must retrace a multi-pass plan
+    (per-pass partition rows are in the cache key), not reuse stale
+    tiling."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    with cache_activity() as act:
+        fm.materialize(fm.scale(X), mode="stream")
+        fm.set_conf(io_partition_bytes=8192)
+        (Zm,) = fm.materialize(fm.scale(X), mode="stream")
+    assert_activity(act, misses=2, hits=0)
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(Zm), ref, rtol=1e-3, atol=1e-4)
+
+
+def test_cached_two_pass_plan_reuse():
+    """Iteration-style reuse: a structurally identical two-pass DAG built
+    twice compiles once and hits on the second materialize."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+    with cache_activity() as act:
+        (z1,) = fm.materialize(fm.scale(X), mode="stream")
+        (z2,) = fm.materialize(fm.scale(X), mode="stream")
+    assert_activity(act, misses=1, hits=1, epilogue_launches=2)
+    np.testing.assert_allclose(fm.as_np(z1), fm.as_np(z2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Interrupted passes: no partially-registered results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fail_after", [1, 0])
+def test_interrupted_pass1_leaves_no_partial_sinks(fail_after):
+    """A staging failure during PASS 1 must abort the whole materialize
+    with NOTHING registered — and a retry (healed store, same cached plan)
+    must succeed."""
+    a = _x(800, 4)
+    Xm, store = flaky_matrix(a, fail_after)
+    Z = fm.scale(fm.FM(Xm))
+    nodes = toposort([Z.m.node])
+    with pytest.raises(Exception, match="staging failure"):
+        fm.materialize(Z, prefetch=False)
+    assert store.failed
+    assert_no_partial_results(*nodes)
+    store.heal()
+    (Zm,) = fm.materialize(Z, prefetch=False)
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(Zm), ref, rtol=1e-3, atol=1e-4)
+
+
+def test_interrupted_pass2_rolls_back_pass1_sinks():
+    """Pass 1 completes, pass 2 dies mid-stream: even the ALREADY-MERGED
+    pass-1 sinks must not register (a half-materialized plan would poison
+    later cuts reusing them as sources)."""
+    a = _x(800, 4)
+    n_parts = -(-800 // Plan([fm.scale(fm.conv_R2FM(a)).m])
+                .passes[0].partition_rows)
+    assert n_parts > 1
+    # Survive all of pass 1, die on the second read of pass 2.
+    Xm, store = flaky_matrix(a, n_parts + 1)
+    Z = fm.scale(fm.FM(Xm))
+    nodes = toposort([Z.m.node])
+    with pytest.raises(Exception, match="staging failure"):
+        fm.materialize(Z, prefetch=False)
+    assert store.reads > n_parts          # pass 2 actually started
+    assert_no_partial_results(*nodes)
+    store.heal()
+    (Zm,) = fm.materialize(Z, prefetch=False)
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(Zm), ref, rtol=1e-3, atol=1e-4)
+
+
+def test_interrupted_prefetching_pass_raises_prefetch_error():
+    """With the prefetcher ON, the injected fault surfaces as a
+    PrefetchError on the consumer side — same no-partial-results
+    guarantee, pass-2 prefetcher re-drive included."""
+    from repro.storage.prefetch import PrefetchError
+    a = _x(800, 4)
+    Xm, store = flaky_matrix(a, 1)
+    Z = fm.scale(fm.FM(Xm))
+    nodes = toposort([Z.m.node])
+    with pytest.raises(PrefetchError):
+        fm.materialize(Z, prefetch=True)
+    assert_no_partial_results(*nodes)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm integration counters
+# ---------------------------------------------------------------------------
+
+def test_pca_single_materialize_two_passes():
+    from repro.algorithms.pca import pca
+    a = _x(700, 5)
+    mz.reset_exec_stats()
+    r = pca(fm.conv_R2FM(a), k=5)
+    st = mz.exec_stats()
+    assert st["materialize_calls"] == 1 and st["passes"] == 2
+    c = a - a.mean(0)
+    ev = np.linalg.eigvalsh(
+        c.T.astype(np.float64) @ c / (a.shape[0] - 1))[::-1]
+    np.testing.assert_allclose(r.sdev ** 2, ev, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(r.center, a.mean(0), rtol=1e-4, atol=1e-4)
+
+
+def test_glm_standardize_first_iteration_two_passes():
+    from repro.algorithms.glm import glm, glm_predict
+    rng = np.random.default_rng(11)
+    a = (rng.normal(size=(600, 4)) * 3 + 2).astype(np.float32)
+    zs = (a - a.mean(0)) / a.std(0, ddof=1)
+    beta_true = rng.normal(size=4)
+    pv = 1.0 / (1.0 + np.exp(-(zs.astype(np.float64) @ beta_true)))
+    y = (rng.uniform(size=600) < pv).astype(np.float32)
+    mz.reset_exec_stats()
+    res = glm(fm.conv_R2FM(a), fm.conv_R2FM(y), "logistic",
+              standardize=True)
+    st = mz.exec_stats()
+    # Only iteration 1 pays the moment pass; iterations 2+ are one-pass.
+    assert st["passes"] == st["materialize_calls"] + 1
+    assert res.center is not None and res.scale is not None
+    # Oracle: IRLS on the standardized design.
+    Zs = ((a - a.mean(0)) / np.maximum(a.std(0, ddof=1), 1e-12)) \
+        .astype(np.float64)
+    b = np.zeros(4)
+    for _ in range(50):
+        eta = Zs @ b
+        mu = 1.0 / (1.0 + np.exp(-eta))
+        w = mu * (1.0 - mu) + 1e-6
+        z = eta + (y - mu) / w
+        b = np.linalg.solve(Zs.T @ (Zs * w[:, None]), Zs.T @ (w * z))
+    np.testing.assert_allclose(res.beta, b, rtol=1e-3, atol=1e-3)
+    pred = fm.as_np(glm_predict(res, fm.conv_R2FM(a))).reshape(-1)
+    np.testing.assert_allclose(pred, 1.0 / (1.0 + np.exp(-(Zs @ b))),
+                               rtol=1e-2, atol=1e-3)

@@ -1,8 +1,11 @@
 """Randomized cross-backend DAG parity fuzzing (ISSUE 4 satellite).
 
-Random GenOp DAGs — row-local chains, aggregation sinks, and POST-SINK
-epilogue math — execute on every backend∈{xla, pallas} × mode∈{mem,
-stream, ooc} cell and are checked against a NumPy float64 oracle evaluated
+Random GenOp DAGs — row-local chains, aggregation sinks, POST-SINK
+epilogue math, and EPILOGUE→ROW-LOCAL sweeps (the ``sweeprow`` op:
+``mapply.row`` of a tall register against a merged vector, which makes the
+planner schedule MULTI-PASS programs — moment pass → sweep pass, chains
+included) — execute on every backend∈{xla, pallas} × mode∈{mem, stream,
+ooc} cell and are checked against a NumPy float64 oracle evaluated
 alongside the same program.
 
 The harness is deterministic and shrinking-friendly without external
@@ -47,11 +50,13 @@ _EST_CAP = {"f32": 1e5, "i32": 1e5}
 
 #: Which tuple positions of each op are REGISTER references (other int
 #: positions are seeds/widths and must never be treated as dependencies).
+#: ``sweeprow`` is the epilogue→row-local edge: tall ∘ merged-vector.
 _REG_ARGS = {
     "sapply": (1,), "sscalar": (1,), "mapply": (1, 2), "mapply_row": (1,),
     "rowsums": (1,), "cbind": (1, 2), "matmul": (1,), "colsums": (1,),
     "colmins": (1,), "colmaxs": (1,), "sumall": (1,), "crossprod": (1, 2),
     "escalar": (1,), "emap": (1, 2), "esapply": (1,), "esum": (1,),
+    "sweeprow": (1, 2),
 }
 
 
@@ -139,8 +144,16 @@ def generate(seed: int) -> Program:
         if kind == "tall":
             i = int(r.choice(talls()))
             g = regs[i]
-            choice = r.choice(["sapply", "sscalar", "mapply", "mapply_row",
-                               "rowsums", "cbind", "matmul"])
+            # sweeprow (mapply.row against a MERGED vector) schedules the
+            # consumer one pass later than the vector's pass — the program
+            # becomes multi-pass, chains included.
+            sweep_js = [j for j in posts()
+                        if regs[j].nrow == 1 and regs[j].ncol == g.ncol]
+            tall_ops = ["sapply", "sscalar", "mapply", "mapply_row",
+                        "rowsums", "cbind", "matmul"]
+            if sweep_js:
+                tall_ops += ["sweeprow", "sweeprow"]
+            choice = r.choice(tall_ops)
             if choice == "sapply":
                 f = str(r.choice(_SAPPLY))
                 est = g.est * g.est if f == "sq" else g.est
@@ -172,6 +185,14 @@ def generate(seed: int) -> Program:
                     continue
                 emit(("mapply_row", i, int(r.integers(1 << 20)), op),
                      _Reg("tall", g.ncol, est))
+            elif choice == "sweeprow":
+                j = int(r.choice(sweep_js))
+                op = str(r.choice(("add", "sub", "mul", "pmin", "pmax")))
+                est = (g.est * regs[j].est if op == "mul"
+                       else g.est + regs[j].est)
+                if est > cap:
+                    continue
+                emit(("sweeprow", i, j, op), _Reg("tall", g.ncol, est))
             elif choice == "rowsums":
                 emit(("rowsums", i), _Reg("tall", 1, g.est * g.ncol))
             elif choice == "cbind":
@@ -288,6 +309,8 @@ def eval_numpy(prog: Program) -> List[np.ndarray]:
         elif k == "mapply_row":
             v = _vec(op[2], regs[op[1]].shape[1]).astype(np.float64)
             regs.append(f2(regs[op[1]], v.reshape(1, -1), op[3]))
+        elif k == "sweeprow":
+            regs.append(f2(regs[op[1]], regs[op[2]].reshape(1, -1), op[3]))
         elif k == "rowsums":
             regs.append(regs[op[1]].sum(1, keepdims=True))
         elif k == "cbind":
@@ -344,6 +367,9 @@ def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
         elif k == "mapply_row":
             v = _vec(op[2], regs[op[1]].ncol)
             regs.append(fm.mapply_row(regs[op[1]], v, op[3]))
+        elif k == "sweeprow":
+            # LAZY merged vector: the engine must schedule a later pass.
+            regs.append(fm.mapply_row(regs[op[1]], regs[op[2]], op[3]))
         elif k == "rowsums":
             regs.append(fm.rowSums(regs[op[1]]))
         elif k == "cbind":
@@ -452,6 +478,17 @@ def _fuzz_config():
     mz.clear_plan_cache()
 
 
+def _report_failure(text: str):
+    """Persist the shrunk repro where CI can pick it up as an artifact
+    (FUZZ_REPORT env var names the file; see the fuzz jobs in ci.yml)."""
+    path = os.environ.get("FUZZ_REPORT")
+    if not path:
+        return
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write(f"FUZZ_SEED base={BASE_SEED} examples={EXAMPLES}\n")
+        fh.write(text + "\n\n")
+
+
 def _run_examples(indices):
     import jax
     failures = []
@@ -471,6 +508,7 @@ def _run_examples(indices):
         if failures:
             break
     if failures:
+        _report_failure(failures[0])
         pytest.fail(failures[0])
 
 
@@ -511,3 +549,31 @@ def test_known_epilogue_program_parity():
     for backend, mode in CELLS:
         err = check_cell(prog, backend, mode)
         assert err is None, f"cell=({backend},{mode}): {err}"
+
+
+def test_known_multipass_program_parity():
+    """A hand-pinned epilogue→row-local program (the ``scale(X)`` shape:
+    sink → epilogue → sweep → sink-over-the-sweep) on every cell — the
+    multi-pass planner's fuzz anchor, independent of FUZZ_EXAMPLES."""
+    prog = Program(
+        seed=4321, n=96, p=3, dtype="f32",
+        ops=[
+            ("colsums", 0),                # -> r1  pass-1 sink
+            ("escalar", 1, "div", 2.0),    # -> r2  pass-1 epilogue
+            ("sweeprow", 0, 2, "sub"),     # -> r3  PASS-2 row-local sweep
+            ("sapply", 3, "abs"),          # -> r4  pass-2 chain
+            ("colmaxs", 4),                # -> r5  pass-2 sink
+            ("sweeprow", 0, 1, "pmin"),    # -> r6  sink bound directly
+        ],
+        outputs=[3, 5, 6])
+    for backend, mode in CELLS:
+        err = check_cell(prog, backend, mode)
+        assert err is None, f"cell=({backend},{mode}): {err}"
+
+
+def test_generator_emits_multipass_programs():
+    """The generator actually produces epilogue→row-local edges, so the CI
+    fuzz budget exercises the multi-pass planner."""
+    hits = sum(any(op[0] == "sweeprow" for op in generate(s).ops)
+               for s in range(200))
+    assert hits >= 10, f"only {hits}/200 programs contained a sweeprow"
