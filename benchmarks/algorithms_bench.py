@@ -144,6 +144,7 @@ def run(argv=None):
 
     from repro.core import fm
     from repro.core import materialize as mz
+    from repro.observability import metrics as obs_metrics
 
     fm.set_conf(io_partition_bytes=args.partition_mib << 20)
     on_tpu = jax.default_backend() == "tpu"
@@ -168,7 +169,13 @@ def run(argv=None):
                     fm.set_conf(backend=backend)
                     exec_mode = _exec_mode(mode)
                     mz.reset_exec_stats()
-                    res = np.asarray(work(X, yb, yc, exec_mode, backend))
+                    # Scoped I/O telemetry over the measured run: staging
+                    # read bandwidth and the fraction of streaming time the
+                    # compute thread spent blocked on the prefetch queue
+                    # (0.0 for whole-mode cells — nothing streams).
+                    with obs_metrics.collect() as obs_scope:
+                        res = np.asarray(work(X, yb, yc, exec_mode, backend))
+                    obs = obs_scope.stats()
                     st = mz.exec_stats()
                     us = time_call(
                         lambda: work(X, yb, yc, exec_mode, backend),
@@ -200,6 +207,18 @@ def run(argv=None):
                         "epilogue_launches_per_materialize": round(
                             st["epilogue_launches"]
                             / max(st["materialize_calls"], 1), 3),
+                        # Two-level-partitioning evidence: how many
+                        # I/O-level partition steps the measured run took
+                        # (deterministic given n and io_partition_bytes —
+                        # gated exactly by check_regression).
+                        "partition_steps": st["partition_steps"],
+                        # Measured I/O telemetry (timing-derived: reported,
+                        # not gated): slow-tier staging bandwidth and
+                        # prefetch-queue wait fraction of the run.
+                        "stream_bandwidth_bytes_s": round(
+                            obs["stream_bandwidth_bytes_s"], 1),
+                        "prefetch_wait_frac": round(
+                            obs["prefetch_wait_frac"], 4),
                     }
                     if mode == "mem":
                         # The cell every other mode/backend is judged

@@ -58,9 +58,12 @@ FUSION_ARGS = ["--n", "40000", "--pallas-n", "5000", "--iters", "5",
 ALGO_ARGS = ["--n", "12000", "--pallas-n", "3000", "--iters", "3"]
 
 #: Engine-evidence fields compared EXACTLY (any drift fails the gate).
+#: ``partition_steps`` is deterministic (n and io_partition_bytes are
+#: fixed by the grid); the timing-derived telemetry the rows also carry
+#: (stream_bandwidth_bytes_s, prefetch_wait_frac) is reported, not gated.
 COUNTER_KEYS = ("passes", "passes_over_sources", "bytes_in",
                 "epilogue_launches", "epilogue_launches_per_materialize",
-                "epilogue_nodes", "kernels")
+                "epilogue_nodes", "kernels", "partition_steps")
 
 GATE_PCT = float(os.environ.get("BENCH_GATE_PCT", "25"))
 #: Absolute per-row slack: most rows are single-digit milliseconds where

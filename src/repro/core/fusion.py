@@ -522,6 +522,15 @@ class Plan:
             total += n.nrow * n.ncol * dtypes.nbytes(n.dtype)
         return int(total)
 
+    def explain(self, backend: str | None = None) -> str:
+        """Render the planner's decisions for humans (``fm.explain``): the
+        pass schedule, each source's storage tier and streamed bytes, both
+        partition levels, and the per-segment backend dispatch — see
+        observability/explain.py.  Unlike ``describe()`` (a raw node dump),
+        this is the user-facing inspection surface."""
+        from ..observability.explain import explain_plan
+        return explain_plan(self, backend=backend)
+
     def describe(self) -> str:
         lines = [f"Plan(long_dim={self.long_dim}, passes={self.n_passes},"
                  f" fuse={self.fuse})"]

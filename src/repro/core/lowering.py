@@ -660,6 +660,44 @@ def _match_kmeans(plan, ir, claimed):
     return units
 
 
+def dispatch_report(plan, ir, backend: str) -> dict[int, str]:
+    """Per-segment dispatch decision, for ``fm.explain``: replay the
+    backend's matcher pipeline over a pass's IR (claiming but not lowering)
+    and say which kernel claimed each segment — or why it falls back to the
+    generic trace.  ``plan`` is the per-pass schedule the segments belong
+    to (fusion.PassSchedule, or a one-pass Plan)."""
+    backend = resolve_backend(backend)
+    report: dict[int, str] = {}
+    claimed: set[int] = set()
+    if backend == "pallas":
+        for matcher in PallasBackend.MATCHERS:
+            before = set(claimed)
+            placed = matcher(plan, ir, claimed)
+            kernels = sorted({u.kernel for u in placed.values()})
+            mname = matcher.__name__.lstrip("_")
+            for sid, unit in placed.items():
+                report[sid] = f"pallas:{unit.kernel} (claimed by {mname})"
+            for sid in claimed - before:
+                if sid not in placed:
+                    # A member of a multi-segment kernel unit (the k-means
+                    # group, sibling apply→agg chains folded into one call).
+                    report[sid] = (f"fused into pallas:{'/'.join(kernels)} "
+                                   f"(claimed by {mname})")
+    for seg in ir.segments:
+        if seg.sid in report:
+            continue
+        if seg.kind == "epilogue":
+            report[seg.sid] = "post-merge epilogue (single launch per pass)"
+        elif backend != "pallas":
+            report[seg.sid] = "xla generic trace"
+        elif dtypes.canon(seg.dtype).itemsize >= 8:
+            report[seg.sid] = ("generic trace (64-bit dtype: kernels keep "
+                               "full precision on the XLA path)")
+        else:
+            report[seg.sid] = "generic trace (no kernel pattern matched)"
+    return report
+
+
 class PallasBackend(Backend):
     """Lower eligible segments onto the Pallas kernels; generic fallback
     for the rest.  Matchers run in order and claim segments by sid."""

@@ -27,6 +27,7 @@ intensity is high enough.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from collections import OrderedDict
 from typing import Optional, Sequence
@@ -45,6 +46,8 @@ from . import dtypes, lowering
 from .dag import LeafNode, Node, as_node, wrap
 from .fusion import Plan
 from .matrix import DenseStore, FMMatrix
+from ..observability import metrics
+from ..observability.trace import TRACER
 
 try:  # NamedSharding is only used when a mesh is passed.
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -70,32 +73,35 @@ PLAN_CACHE_LIMIT = 256
 # executed (a two-pass ``scale(X)`` plan adds 2 per materialize); the
 # per-pass bytes of the MOST RECENT execution are surfaced as
 # ``pass_bytes_in`` so multi-pass I/O is observable.
-_STATS = {
-    "materialize_calls": 0,
-    "plan_cache_hits": 0,
-    "plan_cache_misses": 0,
-    "partition_steps": 0,
-    "passes": 0,
-    "epilogue_launches": 0,
-    "epilogue_host_inputs": 0,
-}
-
-#: Streamed bytes of each pass of the most recent plan execution.
-_LAST_PASS_BYTES: list = []
+#
+# The counters live in the observability metrics registry (root scope plus
+# any ``fm.collect_stats()`` scopes open on the calling thread); this list
+# names the compatibility subset ``exec_stats()`` exposes as ints.
+EXEC_COUNTERS = (
+    "materialize_calls",
+    "plan_cache_hits",
+    "plan_cache_misses",
+    "partition_steps",
+    "passes",
+    "epilogue_launches",
+    "epilogue_host_inputs",
+)
 
 
 def exec_stats() -> dict:
-    """Snapshot of the engine's execution counters (see _STATS), plus
-    ``pass_bytes_in``: the per-pass streamed bytes of the last execution."""
-    st = dict(_STATS)
-    st["pass_bytes_in"] = tuple(_LAST_PASS_BYTES)
+    """Snapshot of the engine's execution counters (see EXEC_COUNTERS), plus
+    ``pass_bytes_in``: the per-pass streamed bytes of the last execution.
+
+    A compatibility view over the root metrics scope; the full instrument
+    set (timings, bandwidth, queue occupancy, derived rates) is
+    ``observability.metrics.stats()`` or a ``fm.collect_stats()`` scope."""
+    st = {k: int(metrics.root_counter(k)) for k in EXEC_COUNTERS}
+    st["pass_bytes_in"] = tuple(metrics.root_value("pass_bytes_in", ()))
     return st
 
 
 def reset_exec_stats():
-    for k in _STATS:
-        _STATS[k] = 0
-    del _LAST_PASS_BYTES[:]
+    metrics.REGISTRY.reset()
 
 
 def clear_plan_cache():
@@ -131,12 +137,14 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
     if not virtuals:
         return list(mats)
 
-    _STATS["materialize_calls"] += 1
+    metrics.inc("materialize_calls")
     backend = lowering.resolve_backend(backend)
 
     if not fuse:
-        _materialize_eager([m.node for m in virtuals], mode=mode,
-                           backend=backend)
+        with TRACER.span("materialize", backend=backend, fuse=False,
+                         outputs=len(virtuals)):
+            _materialize_eager([m.node for m in virtuals], mode=mode,
+                               backend=backend)
         return [_result_of(m) for m in mats]
 
     plan = Plan(virtuals)
@@ -152,11 +160,11 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
         sig = (plan.signature(), plan.pass_key(), backend, _mesh_key(mesh))
         cached = _PLANS.get(sig)
         if cached is not None:
-            _STATS["plan_cache_hits"] += 1
+            metrics.inc("plan_cache_hits")
             _PLANS.move_to_end(sig)  # LRU touch
             exec_plan = cached
         else:
-            _STATS["plan_cache_misses"] += 1
+            metrics.inc("plan_cache_misses")
             _PLANS[sig] = plan
             while len(_PLANS) > PLAN_CACHE_LIMIT:
                 _PLANS.popitem(last=False)  # evict least-recently-used
@@ -185,12 +193,15 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
             n.cached_store = None
             n.save = new_n.save
     try:
-        _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
-                 sources=[m for _, m in plan.sources],
-                 bc_sources=[m for _, m in plan.broadcast_sources],
-                 epi_sources=[m for _, m in plan.epilogue_sources],
-                 smalls=plan.small_values(), prefetch=prefetch,
-                 backend=backend)
+        with TRACER.span("materialize", backend=backend,
+                         passes=plan.n_passes, outputs=len(virtuals),
+                         cached=exec_plan is not plan):
+            _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
+                     sources=[m for _, m in plan.sources],
+                     bc_sources=[m for _, m in plan.broadcast_sources],
+                     epi_sources=[m for _, m in plan.epilogue_sources],
+                     smalls=plan.small_values(), prefetch=prefetch,
+                     backend=backend)
         if borrowed:
             for old_n, new_n in zip(exec_plan.result_nodes(),
                                     plan.result_nodes()):
@@ -252,7 +263,10 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     parts_all: dict[int, list] = {}
     epi_all: dict[int, object] = {}
     disk_all: dict[int, object] = {}
-    del _LAST_PASS_BYTES[:]
+    # Per-EXECUTION pass bytes, published atomically to the metrics scopes
+    # once every pass has run — never a half-written module global an
+    # interleaved materialize can clobber mid-plan.
+    pass_bytes: list[int] = []
     src_i = bc_i = epi_i = 0
     for ps, pprog in zip(plan.passes, pass_progs):
         ns, nb, ne = (len(ps.sources), len(ps.broadcast_sources),
@@ -266,21 +280,29 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
         bindings = {nid: carried[nid] for nid in ps.binding_ids}
         for nid, mat in ps.broadcast_source_pairs(ps_bc):
             bindings[nid] = _stage_whole(mat)
-        if mode == "whole":
-            finals, out_parts, epi_outs = _execute_whole_pass(
-                ps, pprog, mesh, ps_src, smalls, ps_epi, bindings)
-        else:
-            finals, out_parts, epi_outs, dstores = _execute_stream_pass(
-                ps, pprog, ps_src, smalls, ps_epi, bindings,
-                to_host=(mode == "ooc"), donate=donate, prefetch=prefetch)
-            disk_all.update(dstores)
-        _STATS["passes"] += 1
-        _LAST_PASS_BYTES.append(ps.bytes_in(ps_src))
+        t_pass = time.perf_counter()
+        with TRACER.span("pass", idx=ps.idx, mode=mode,
+                         partition_rows=ps.partition_rows):
+            if mode == "whole":
+                finals, out_parts, epi_outs = _execute_whole_pass(
+                    ps, pprog, mesh, ps_src, smalls, ps_epi, bindings)
+            else:
+                finals, out_parts, epi_outs, dstores = _execute_stream_pass(
+                    ps, pprog, ps_src, smalls, ps_epi, bindings,
+                    to_host=(mode == "ooc"), donate=donate,
+                    prefetch=prefetch)
+                disk_all.update(dstores)
+        metrics.inc("pass_seconds", time.perf_counter() - t_pass)
+        metrics.inc("passes")
+        pb = ps.bytes_in(ps_src)
+        pass_bytes.append(pb)
+        metrics.inc("bytes_streamed", pb)
         finals_all.update(finals)
         parts_all.update(out_parts)
         epi_all.update(epi_outs)
         carried.update(finals)
         carried.update(epi_outs)
+    metrics.put("pass_bytes_in", tuple(pass_bytes))
     _store_results(plan, finals_all, parts_all, to_host=(mode == "ooc"),
                    disk_stores=disk_all, epilogue_outs=epi_all)
     return plan
@@ -313,9 +335,20 @@ def _execute_whole_pass(ps, prog, mesh, sources, smalls, epi_sources,
             arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
         blocks[nid] = arr
     offset = jnp.zeros((), jnp.int32)
-    _STATS["partition_steps"] += 1
-    partials, outputs = prog.step(blocks, smalls, bindings, offset)
-    accs = prog.combine(ps.init_accs(), partials)
+    metrics.inc("partition_steps")
+    with TRACER.span("partition", start=0, stop=ps.long_dim):
+        t0 = time.perf_counter()
+        with TRACER.span("device_step", rows=ps.long_dim):
+            partials, outputs = prog.step(blocks, smalls, bindings, offset)
+            if TRACER.enabled:  # timing fidelity; async dispatch otherwise
+                jax.block_until_ready((partials, outputs))
+        metrics.inc("device_step_seconds", time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        with TRACER.span("combine"):
+            accs = prog.combine(ps.init_accs(), partials)
+            if TRACER.enabled:
+                jax.block_until_ready(accs)
+        metrics.inc("combine_seconds", time.perf_counter() - t0)
     finals = ps.finalize_accs(accs)
     epi_outs = _run_epilogue(ps, prog, finals, epi_sources, smalls, bindings)
     return finals, {nid: [v] for nid, v in outputs.items()}, epi_outs
@@ -336,10 +369,16 @@ def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
     for nid, mat in ps.epilogue_source_pairs(epi_sources):
         epi_vals[nid] = _stage_whole(mat)
     leaves = jax.tree_util.tree_leaves((sink_finals, epi_vals))
-    _STATS["epilogue_host_inputs"] += sum(
-        1 for leaf in leaves if isinstance(leaf, np.ndarray))
-    _STATS["epilogue_launches"] += 1
-    return prog.epilogue(sink_finals, epi_vals, smalls, bindings)
+    metrics.inc("epilogue_host_inputs", sum(
+        1 for leaf in leaves if isinstance(leaf, np.ndarray)))
+    metrics.inc("epilogue_launches")
+    t0 = time.perf_counter()
+    with TRACER.span("epilogue", idx=ps.idx):
+        outs = prog.epilogue(sink_finals, epi_vals, smalls, bindings)
+        if TRACER.enabled:
+            jax.block_until_ready(outs)
+    metrics.inc("epilogue_seconds", time.perf_counter() - t0)
+    return outs
 
 
 def _long_spec(mesh):
@@ -411,20 +450,32 @@ def _execute_stream_pass(ps, prog, sources, smalls, epi_sources, bindings, *,
     step = prog.step_donated if donate else prog.step
     try:
         for start, stop, blocks in parts:
-            _STATS["partition_steps"] += 1
-            partials, outputs = step(blocks, smalls, bindings,
-                                     jnp.asarray(start, jnp.int32))
-            # The paper's partial-merge: each partition's sink partials fold
-            # into the running accumulators with the aggregation VUDFs'
-            # ``combine`` (donated: the old acc buffers recycle in place).
-            accs = prog.combine(accs, partials)
-            for nid, val in outputs.items():
-                if nid in disk_stores:
-                    disk_stores[nid].write_rows(start, np.asarray(val))
-                elif nid in host_bufs:
-                    host_bufs[nid][start:stop] = np.asarray(val)
-                else:
-                    out_parts[nid].append(val)
+            metrics.inc("partition_steps")
+            with TRACER.span("partition", start=start, stop=stop):
+                t0 = time.perf_counter()
+                with TRACER.span("device_step", rows=stop - start):
+                    partials, outputs = step(blocks, smalls, bindings,
+                                             jnp.asarray(start, jnp.int32))
+                    if TRACER.enabled:  # timing fidelity while tracing only
+                        jax.block_until_ready((partials, outputs))
+                metrics.inc("device_step_seconds", time.perf_counter() - t0)
+                # The paper's partial-merge: each partition's sink partials
+                # fold into the running accumulators with the aggregation
+                # VUDFs' ``combine`` (donated: the old acc buffers recycle
+                # in place).
+                t0 = time.perf_counter()
+                with TRACER.span("combine"):
+                    accs = prog.combine(accs, partials)
+                    if TRACER.enabled:
+                        jax.block_until_ready(accs)
+                metrics.inc("combine_seconds", time.perf_counter() - t0)
+                for nid, val in outputs.items():
+                    if nid in disk_stores:
+                        disk_stores[nid].write_rows(start, np.asarray(val))
+                    elif nid in host_bufs:
+                        host_bufs[nid][start:stop] = np.asarray(val)
+                    else:
+                        out_parts[nid].append(val)
     finally:
         if hasattr(parts, "close"):
             parts.close()

@@ -530,3 +530,66 @@ def as_scalar(x) -> float:
 
 def as_np(x) -> np.ndarray:
     return conv_FM2R(x)
+
+
+# -- observability (repro/observability/) --------------------------------------
+
+def trace(export: Optional[str] = None, *, reset: bool = True):
+    """fm.trace: enable span tracing over a with-block.
+
+        with fm.trace():
+            fm.materialize(G)
+        fm.trace_export("run.trace.json")   # chrome://tracing / Perfetto
+
+    ``export=`` writes the Chrome-trace JSON on scope exit; ``reset=False``
+    appends to the already-collected events instead of starting fresh.
+    The prefetcher's staging thread records onto its own track, so
+    stage/compute overlap is visible in the timeline."""
+    from ..observability.trace import TRACER
+    return TRACER.recording(export, reset=reset)
+
+
+def trace_export(path) -> str:
+    """fm.trace.export: write collected spans as Chrome-trace JSON."""
+    from ..observability.trace import TRACER
+    return TRACER.export(path)
+
+
+def trace_events() -> list:
+    """Collected span events (dicts with name/ts/dur/tid), for programmatic
+    inspection without round-tripping the JSON export."""
+    from ..observability.trace import TRACER
+    return TRACER.events()
+
+
+def collect_stats(name: str = ""):
+    """fm.collect.stats: a metrics scope isolating THIS thread's engine
+    activity (its materialize calls, plus the prefetch pipelines they
+    spawn).  Yields the scope; read it with ``.stats()``:
+
+        with fm.collect_stats() as sc:
+            fm.materialize(G)
+        sc.stats()["stream_bandwidth_bytes_s"]
+
+    Scopes are per-thread, so concurrent requests each see only their own
+    execution — the per-request accounting a serving layer needs."""
+    from ..observability import metrics
+    return metrics.collect(name)
+
+
+def exec_stats() -> dict:
+    """fm.exec.stats: the engine's execution counters (compatibility view
+    over the metrics registry's root scope)."""
+    return mat_mod.exec_stats()
+
+
+def reset_exec_stats():
+    mat_mod.reset_exec_stats()
+
+
+def explain(*xs, backend: Optional[str] = None) -> str:
+    """fm.explain: render the fused plan ``fm.materialize(*xs)`` would run
+    — pass schedule, source tiers, both partition levels, per-segment
+    backend dispatch — without executing anything."""
+    from ..observability.explain import explain as _explain
+    return _explain(*[_fm(x) for x in xs], backend=backend)

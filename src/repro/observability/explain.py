@@ -1,0 +1,106 @@
+"""Plan explain: a pretty-printer for the fused execution plan.
+
+``fm.explain(x)`` builds the SAME `fusion.Plan` that ``fm.materialize(x)``
+would execute — cut, pass schedule, both partition tiers, segment IR —
+without running it, and renders the planner's decisions:
+
+  * the pass schedule (how many streaming passes, which merged values bind
+    forward into later passes);
+  * each pass's sources with their storage tier (device/host/disk),
+    staging-group deduplication and streamed bytes;
+  * each fused segment with its width/dtype/FLOP metadata and BOTH
+    partition tiers (I/O-level ``partition_rows``, processor-level
+    ``block_rows`` — the paper's §III-F two-level partitioning);
+  * the backend dispatch decision per segment: which pallas kernel matcher
+    claimed it, or why it fell back to the generic XLA trace
+    (`lowering.dispatch_report`).
+
+The output is stable under node-id renumbering except for the ``#id``
+suffixes in node names; golden tests normalize those with ``#\\d+`` → ``#N``.
+
+Imports of ``repro.core`` stay inside the functions: ``core.materialize``
+imports ``repro.observability`` at module load, so the package level here
+must not import back into core.
+"""
+from __future__ import annotations
+
+
+def _tier(mat) -> str:
+    if getattr(mat, "on_disk", False):
+        return "disk"
+    return "host" if getattr(mat, "on_host", False) else "device"
+
+
+def _mat_label(node, mat) -> str:
+    name = getattr(mat, "name", "") or getattr(node, "name", "") or "<anon>"
+    return name
+
+
+def _fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0 or unit == "TiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024.0
+    return f"{n:.1f} TiB"  # pragma: no cover - loop always returns
+
+
+def explain(*outputs, backend=None) -> str:
+    """Render the fused plan ``fm.materialize(*outputs)`` would run.
+
+    Accepts the same operands as ``fm.materialize`` (FM wrappers or raw
+    FMMatrix handles); nothing is computed and no plan-cache entry is
+    created.  ``backend`` resolves like materialize's (None/'auto' → the
+    engine default).
+    """
+    from ..core.fusion import Plan
+
+    mats = [getattr(x, "m", x) for x in outputs]
+    virtuals = [m for m in mats if getattr(m, "is_virtual", False)]
+    if not virtuals:
+        return "(nothing to plan: every operand is already materialized)"
+    return explain_plan(Plan(virtuals), backend=backend)
+
+
+def explain_plan(plan, backend=None) -> str:
+    """Explain an already-built `fusion.Plan` (``Plan.explain`` delegates
+    here)."""
+    from ..core import dtypes, lowering
+
+    resolved = lowering.resolve_backend(backend)
+    lines = [
+        f"Plan: passes={plan.n_passes} long_dim={plan.long_dim} "
+        f"backend={resolved}"
+        + (f" (resolved from {backend or 'auto'!r})"
+           if resolved != backend else ""),
+        f"  cost: flops={plan.flop_count():.3e} "
+        f"bytes_in={_fmt_bytes(plan.bytes_in())} "
+        f"bytes_out={_fmt_bytes(plan.bytes_out())}",
+    ]
+    for ps in plan.passes:
+        lines.append(f"pass {ps.idx}: io_partition_rows={ps.partition_rows}")
+        if ps.bindings:
+            lines.append("  bindings (from earlier passes): "
+                         + ", ".join(n.name for n in ps.bindings))
+        for nid, mat in ps.staged_sources():
+            group = next(g for g in ps.source_groups if g[0].id == nid)
+            alias = (f" (read once for {len(group)} leaves)"
+                     if len(group) > 1 else "")
+            lines.append(
+                f"  source {_mat_label(group[0], mat)}: "
+                f"{mat.shape[0]}x{mat.shape[1]} "
+                f"{dtypes.canon(mat.dtype).name} tier={_tier(mat)} "
+                f"streamed {_fmt_bytes(mat.nbytes())}/pass{alias}")
+        for node, mat in ps.broadcast_sources:
+            lines.append(f"  broadcast {_mat_label(node, mat)}: "
+                         f"{mat.shape[0]}x{mat.shape[1]} tier={_tier(mat)} "
+                         f"(staged whole)")
+        for node, mat in ps.epilogue_sources:
+            lines.append(f"  epilogue-source {_mat_label(node, mat)}: "
+                         f"{mat.shape[0]}x{mat.shape[1]} tier={_tier(mat)} "
+                         f"(epilogue only)")
+        report = lowering.dispatch_report(ps, ps.ir, resolved)
+        for seg in ps.ir.segments:
+            lines.append("  " + seg.describe())
+            lines.append(f"    -> {report.get(seg.sid, '?')}")
+    return "\n".join(lines)

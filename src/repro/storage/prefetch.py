@@ -21,11 +21,15 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Iterator, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..observability import metrics
+from ..observability.trace import TRACER
 
 _DONE = object()
 
@@ -41,15 +45,40 @@ def stage_block(mat, start: int, stop: int, *, donate: bool = True,
       the H2D copy overlaps downstream compute;
     * device-resident blocks are defensively copied when the consumer will
       donate them (donation must not consume the source buffer).
+
+    Emits a ``stage`` span on whichever thread runs it (the prefetch
+    worker's own track when pipelined) and feeds the slow-tier read
+    bandwidth counters (``stage_bytes_read`` / ``stage_read_seconds``:
+    memmap/numpy reads only — device-resident blocks involve no tier read).
     """
+    t0 = time.perf_counter()
     blk = mat.block(start, stop)
     if isinstance(blk, np.ndarray):
         blk = np.ascontiguousarray(blk)
+        # The slow-tier read is complete once the block is contiguous in
+        # RAM; device_put below is async dispatch, not read time.
+        metrics.inc("stage_bytes_read", blk.nbytes)
+        metrics.inc("stage_read_seconds", time.perf_counter() - t0)
         if to_device:
             blk = jax.device_put(blk)
     elif donate:
         blk = jnp.copy(blk)
+    TRACER.record("stage", t0, time.perf_counter(),
+                  {"start": int(start), "stop": int(stop)})
     return blk
+
+
+def _source_name(mat) -> str:
+    """Best human-readable identity of a staged source, for error context:
+    the matrix's registry name, its backing file path, or its type."""
+    name = getattr(mat, "name", "")
+    if name:
+        return str(name)
+    store = getattr(mat, "store", None)
+    path = getattr(store, "path", None) or getattr(mat, "path", None)
+    if path:
+        return str(path)
+    return type(store or mat).__name__
 
 
 class PrefetchError(RuntimeError):
@@ -76,26 +105,39 @@ class PartitionPrefetcher:
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._closed = False
+        # Metrics scopes open on the CONSTRUCTING thread: the worker adopts
+        # them so background staging is attributed to the fm.collect_stats()
+        # request that spawned this pipeline.
+        self._scopes = metrics.current_scopes()
         self._thread = threading.Thread(
             target=self._worker, name="fm-prefetch", daemon=True)
         self._thread.start()
 
     # -- staging thread --------------------------------------------------------
     def _worker(self):
-        try:
-            start = 0
-            while start < self.long_dim and not self._stop.is_set():
-                stop = min(start + self.partition_rows, self.long_dim)
-                blocks = {
-                    nid: stage_block(mat, start, stop, donate=self.donate,
-                                     to_device=self.stage_to_device)
-                    for nid, mat in self.sources}
-                if not self._put((start, stop, blocks)):
-                    return
-                start = stop
-            self._put(_DONE)
-        except Exception as exc:  # noqa: BLE001 - forwarded to consumer
-            self._put(exc)
+        with metrics.use_scopes(self._scopes):
+            try:
+                start = 0
+                while start < self.long_dim and not self._stop.is_set():
+                    stop = min(start + self.partition_rows, self.long_dim)
+                    blocks = {}
+                    for nid, mat in self.sources:
+                        try:
+                            blocks[nid] = stage_block(
+                                mat, start, stop, donate=self.donate,
+                                to_device=self.stage_to_device)
+                        except Exception as exc:
+                            raise PrefetchError(
+                                f"prefetch thread failed staging rows "
+                                f"[{start}, {stop}) of source "
+                                f"{_source_name(mat)!r}: {exc!r}") from exc
+                    metrics.observe("prefetch_queue_depth", self._q.qsize())
+                    if not self._put((start, stop, blocks)):
+                        return
+                    start = stop
+                self._put(_DONE)
+            except Exception as exc:  # noqa: BLE001 - forwarded to consumer
+                self._put(exc)
 
     def _put(self, item) -> bool:
         """Bounded put that aborts promptly when close() is requested."""
@@ -110,10 +152,20 @@ class PartitionPrefetcher:
     # -- consumer side ---------------------------------------------------------
     def __iter__(self) -> Iterator[tuple]:
         while True:
+            t0 = time.perf_counter()
             item = self._q.get()
+            t1 = time.perf_counter()
+            # Time the compute thread spent blocked on the staging queue:
+            # the numerator of prefetch_wait_frac (pipeline-fill included).
+            metrics.inc("prefetch_wait_seconds", t1 - t0)
+            TRACER.record("prefetch_wait", t0, t1)
             if item is _DONE:
                 self._closed = True
                 return
+            if isinstance(item, PrefetchError):
+                # Already carries partition + source context from _worker.
+                self._closed = True
+                raise item
             if isinstance(item, Exception):
                 self._closed = True
                 raise PrefetchError(f"prefetch thread failed: {item!r}") from item

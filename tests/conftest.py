@@ -1,0 +1,23 @@
+"""Shared fixtures for the test suite.
+
+Observability state (metrics counters, trace buffers) is process-global by
+design; the autouse fixture here resets it around every test so counter
+assertions in one test never see another test's activity, and a test that
+enables the tracer can never leave it running for the rest of the session.
+"""
+import pytest
+
+from repro.observability import metrics, trace
+
+
+def _reset():
+    trace.TRACER.stop()
+    trace.TRACER.reset()
+    metrics.REGISTRY.reset()
+
+
+@pytest.fixture(autouse=True)
+def _reset_observability():
+    _reset()
+    yield
+    _reset()
