@@ -212,6 +212,14 @@ def run(argv=None):
                         # (deterministic given n and io_partition_bytes —
                         # gated exactly by check_regression).
                         "partition_steps": st["partition_steps"],
+                        # Stream-fusion evidence (ISSUE 7): streaming
+                        # drives the measured run performed (0 for mem
+                        # cells; with the iteration inspector each driver
+                        # iteration is exactly one) and resident final
+                        # partitions the next iteration consumed without
+                        # a re-read.
+                        "streams": st["streams"],
+                        "prefetch_reuse_hits": st["prefetch_reuse_hits"],
                         # Measured I/O telemetry (timing-derived: reported,
                         # not gated): slow-tier staging bandwidth and
                         # prefetch-queue wait fraction of the run.

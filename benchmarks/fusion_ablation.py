@@ -36,8 +36,12 @@ trace.
 Rows follow the repo-wide ``name,us_per_call,derived`` contract; every
 FUSED cell additionally prints a machine-readable ``BENCH {json}`` row
 (wall time, ``passes``, ``passes_over_sources``, ``bytes_in``,
-``epilogue_launches``) — the grid benchmarks/check_regression.py gates
-against the committed baseline in CI.
+``epilogue_launches``, ``streams``, ``prefetch_reuse_hits``) — the grid
+benchmarks/check_regression.py gates against the committed baseline in
+CI.  A final batched-vs-serial arm (``batch3-*`` rows) runs the same
+three requests as three solo materializes vs one ``fm.batch`` over
+device / host-RAM / disk tiers: ``streams`` drops k× (gated exactly)
+and the slow-tier rows show the wall-time win of the single scan.
 """
 from __future__ import annotations
 
@@ -104,6 +108,7 @@ def run(argv=None):
 
     from repro.core import fm
     from repro.core import materialize as mz
+    from repro.observability import metrics as obs_metrics
 
     fm.set_conf(io_partition_bytes=args.partition_mib << 20)
     on_tpu = jax.default_backend() == "tpu"
@@ -155,6 +160,13 @@ def run(argv=None):
                             "epilogue_launches": round(
                                 st["epilogue_launches"]
                                 / max(st["materialize_calls"], 1), 3),
+                            # Stream-fusion evidence (ISSUE 7): streaming
+                            # drives this cell's measured run performed
+                            # (0 for whole-mode cells) and resident final
+                            # partitions served without a re-read.
+                            "streams": st["streams"],
+                            "prefetch_reuse_hits":
+                                st["prefetch_reuse_hits"],
                         }
                         if backend == "pallas":
                             # Acceptance check: engine-level kernel lowering
@@ -171,6 +183,51 @@ def run(argv=None):
                         (f"fusion/{wname}/{mode}/"
                          f"{'fuse' if fuse else 'nofuse'}/{backend}",
                          us, derived))
+
+    # ------------------------------------------------------------------
+    # Batched vs serial arm (cross-materialize stream fusion): the SAME
+    # three independent requests — colMeans, colSds, crossprod — run as
+    # three solo materializes (k streams over X) vs one ``fm.batch``
+    # (k plans × 1 stream).  `streams` is the counter-gated proof; the
+    # ooc / ooc-disk rows are the wall-time proof the one-scan schedule
+    # wins where the source actually lives on a slow tier.
+    X_np = rng.normal(size=(args.n, args.p)).astype(np.float32)
+    batch_tiers = (
+        ("whole", fm.conv_R2FM(X_np), "whole"),
+        ("ooc", fm.conv_R2FM(X_np, host=True), "ooc"),
+        ("ooc-disk", fm.load_dense_matrix(X_np, "ablation_batch_x"),
+         "auto"),
+    )
+    for mode, X, exec_mode in batch_tiers:
+        for arm in ("serial", "batched"):
+            def work(X=X, exec_mode=exec_mode, arm=arm):
+                reqs = (fm.colMeans(X), fm.colSds(X), fm.crossprod(X))
+                if arm == "batched":
+                    return [fm.as_np(r)
+                            for r in fm.batch(*reqs, mode=exec_mode)]
+                return [fm.as_np(fm.materialize(r, mode=exec_mode)[0])
+                        for r in reqs]
+            mz.clear_plan_cache()
+            mz.reset_exec_stats()
+            work()
+            st = mz.exec_stats()
+            streamed = int(obs_metrics.root_counter("bytes_streamed"))
+            us = time_call(work, iters=args.iters)
+            record = {
+                "bench": "fusion", "workload": f"batch3-{arm}",
+                "mode": mode, "backend": "xla",
+                "n": args.n, "p": args.p,
+                "us_per_call": round(us, 1),
+                "streams": st["streams"],
+                "passes": st["passes"],
+                "prefetch_reuse_hits": st["prefetch_reuse_hits"],
+                "bytes_streamed": streamed,
+            }
+            print("BENCH " + json.dumps(record, sort_keys=True))
+            rows.append((f"fusion/batch3/{mode}/{arm}/xla", us,
+                         f"streams={st['streams']};"
+                         f"passes={st['passes']};"
+                         f"bytes_streamed={streamed:.2e}"))
     return emit(rows)
 
 

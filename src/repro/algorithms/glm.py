@@ -25,6 +25,7 @@ row of Table IV, with the same out-of-core behavior.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -62,8 +63,19 @@ def _softplus(eta: fm.FM) -> fm.FM:
 
 def glm_irls_sinks(X: fm.FM, y: fm.FM, beta: np.ndarray, family: str):
     """The three sinks of one IRLS iteration (all lazy; co-materialize for
-    one fused pass over X): XᵀWX, XᵀWz, log-likelihood."""
-    b = np.asarray(beta, np.float32).reshape(-1, 1)
+    one fused pass over X): XᵀWX, XᵀWz, log-likelihood.
+
+    ``beta`` may be a host array OR the previous iteration's device-resident
+    epilogue output (the Newton solve result): forwarding the device value
+    keeps iteration i's epilogue feeding iteration i+1's pass as a broadcast
+    binding with no host roundtrip — and since small operands sign the plan
+    by shape/dtype only, the plan cache still hits."""
+    if isinstance(beta, np.ndarray) or not hasattr(beta, "reshape"):
+        b = np.asarray(beta, np.float32).reshape(-1, 1)
+    else:
+        b = beta.reshape(-1, 1)
+        if str(b.dtype) != "float32":
+            b = b.astype(np.float32)
     eta = X @ b                                   # n×1, row-local
     if family == "gaussian":
         # Constant unit weights: IRLS is ordinary least squares, one step.
@@ -117,8 +129,8 @@ def glm_iteration_plan(X: fm.FM, y: fm.FM, beta: np.ndarray,
 
 def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
         tol: float = 1e-8, ridge: float = 0.0, mode: str = "auto",
-        fuse: bool = True, backend=None,
-        standardize: bool = False) -> GLMResult:
+        fuse: bool = True, backend=None, standardize: bool = False,
+        inspect: bool = True) -> GLMResult:
     """Fit a GLM by iteratively reweighted least squares.
 
     ``X``: n×p design matrix (any tier — device, host RAM, or disk).
@@ -133,9 +145,18 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
     the now-physical moments as one-pass plans.  ``result.beta`` is on the
     standardized scale (``result.center``/``result.scale`` record the
     sweep; ``glm_predict`` applies it).
+
+    ``inspect=True`` (default) declares the IRLS loop to the executor
+    (``fm.inspect_iterations``): the converged beta of iteration i feeds
+    iteration i+1's pass directly from the device (no host roundtrip), and
+    consecutive iterations' streams reuse the resident final partition of
+    X instead of re-reading it (``prefetch_reuse_hits``).
     """
     n, p = X.shape
     beta = np.zeros(p, np.float64)
+    # The value iteration i+1's sinks bind: starts as the host zeros, then
+    # (under inspect) the device-resident epilogue output of iteration i.
+    beta_carry: object = beta
     trace: list[float] = []
     prev = -np.inf
     converged = False
@@ -148,12 +169,15 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
                           fm.pmax(sd_fm, _SD_EPS), "div")
     else:
         Z = X
-    for it in range(1, max_iter + 1):
+    scope = (fm.inspect_iterations() if inspect
+             else contextlib.nullcontext())
+    with scope:
+      for it in range(1, max_iter + 1):
         # The ENTIRE iteration — sinks and the epilogue Newton solve — is
         # one plan: a single streaming pass over X and one epilogue launch
         # (plus the one-off moment pass when standardizing, iteration 1).
         beta_fm, ll_fm, XtWX_fm, XtWz_fm = glm_irls_outputs(
-            Z, y, beta, family, ridge)
+            Z, y, beta_carry, family, ridge)
         moment_wants = ([mu_fm, sd_fm]
                         if standardize and center is None else [])
         if family == "gaussian":
@@ -175,6 +199,9 @@ def glm(X: fm.FM, y: fm.FM, family: str = "logistic", *, max_iter: int = 25,
             Z = fm.mapply_row(fm.mapply_row(X, center, "sub"),
                               scale_v, "div")
         beta = fm.as_np(beta_m).astype(np.float64).reshape(-1)
+        # Forward the device value: iteration i's epilogue result becomes
+        # iteration i+1's broadcast binding without leaving the device.
+        beta_carry = (beta_m.m.logical_data() if inspect else beta)
         if not np.isfinite(beta).all():
             # The on-device epilogue solve cannot raise like the old eager
             # float64 numpy path did — restore the diagnostic here.

@@ -19,6 +19,7 @@ is small-tier math (k covariance Cholesky factorizations on p×p matrices).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 
@@ -97,7 +98,12 @@ def gmm_iteration(X: fm.FM, weights, means, covs, *, mode="auto", fuse=True):
 
 
 def gmm(X: fm.FM, k: int = 10, *, max_iter: int = 30, tol: float = 1e-5,
-        seed: int = 0, mode: str = "auto", fuse: bool = True) -> GMMResult:
+        seed: int = 0, mode: str = "auto", fuse: bool = True,
+        inspect: bool = True) -> GMMResult:
+    """``inspect=True`` (default) declares the EM loop to the executor
+    (``fm.inspect_iterations``): iteration i+1's single fused pass over X
+    starts from iteration i's still-resident final partition
+    (``prefetch_reuse_hits``) instead of re-reading it."""
     n, p = X.shape
     rng = np.random.default_rng(seed)
     idx = np.sort(rng.choice(n, size=k, replace=False))
@@ -109,12 +115,15 @@ def gmm(X: fm.FM, k: int = 10, *, max_iter: int = 30, tol: float = 1e-5,
     trace = []
     prev = -np.inf
     it = 0
-    for it in range(1, max_iter + 1):
-        weights, means, covs, loglik = gmm_iteration(
-            X, weights, means, covs, mode=mode, fuse=fuse)
-        trace.append(loglik)
-        if loglik - prev <= tol * abs(max(prev, -1e300)) and it > 1:
-            break
-        prev = loglik
+    scope = (fm.inspect_iterations() if inspect
+             else contextlib.nullcontext())
+    with scope:
+        for it in range(1, max_iter + 1):
+            weights, means, covs, loglik = gmm_iteration(
+                X, weights, means, covs, mode=mode, fuse=fuse)
+            trace.append(loglik)
+            if loglik - prev <= tol * abs(max(prev, -1e300)) and it > 1:
+                break
+            prev = loglik
     return GMMResult(weights=weights, means=means, covs=covs,
                      loglik=trace[-1], loglik_trace=trace, iters=it)

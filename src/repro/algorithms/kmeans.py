@@ -16,6 +16,7 @@ pattern `kernels/kmeans_assign.py` implements as a single Pallas kernel.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -75,15 +76,24 @@ def kmeans_iteration(X: fm.FM, centers: np.ndarray, *, mode: str = "auto",
 
 
 def kmeans(X: fm.FM, k: int = 10, *, max_iter: int = 20, tol: float = 1e-6,
-           seed: int = 0, mode: str = "auto", fuse: bool = True) -> KMeansResult:
+           seed: int = 0, mode: str = "auto", fuse: bool = True,
+           inspect: bool = True) -> KMeansResult:
+    """``inspect=True`` (default) declares the Lloyd loop to the executor
+    (``fm.inspect_iterations``): each iteration is one stream over X, and
+    iteration i+1's sweep starts from iteration i's still-resident final
+    partition instead of re-reading it (``prefetch_reuse_hits``)."""
     centers = _init_centers(X, k, seed)
     prev_wss = np.inf
     labels = None
     it = 0
-    for it in range(1, max_iter + 1):
-        centers, counts, wss, labels = kmeans_iteration(
-            X, centers, mode=mode, fuse=fuse)
-        if np.isfinite(prev_wss) and prev_wss - wss <= tol * max(prev_wss, 1.0):
-            break
-        prev_wss = wss
+    scope = (fm.inspect_iterations() if inspect
+             else contextlib.nullcontext())
+    with scope:
+        for it in range(1, max_iter + 1):
+            centers, counts, wss, labels = kmeans_iteration(
+                X, centers, mode=mode, fuse=fuse)
+            if (np.isfinite(prev_wss)
+                    and prev_wss - wss <= tol * max(prev_wss, 1.0)):
+                break
+            prev_wss = wss
     return KMeansResult(centers=centers, labels=labels, wss=wss, iters=it)

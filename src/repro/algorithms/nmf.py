@@ -25,6 +25,7 @@ Complexity per iteration: O(n·p·k) compute, O(n·(p + k)) I/O (Table IV).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -45,10 +46,15 @@ class NMFResult:
 
 def nmf(X: fm.FM, k: int = 8, *, max_iter: int = 30, tol: float = 1e-4,
         seed: int = 0, save: str | None = None, mode: str = "auto",
-        fuse: bool = True, backend=None) -> NMFResult:
+        fuse: bool = True, backend=None, inspect: bool = True) -> NMFResult:
     """Factorize a non-negative tall matrix.  ``save='disk'`` streams the
     tall factor W through the write-through spill path every iteration, so
-    neither factor update ever holds an n-row matrix in RAM."""
+    neither factor update ever holds an n-row matrix in RAM.
+
+    ``inspect=True`` (default) declares the update loop to the executor
+    (``fm.inspect_iterations``): consecutive passes with matching partition
+    schedules over X reuse the resident final partition
+    (``prefetch_reuse_hits``) instead of re-reading it."""
     n, p = X.shape
     rng = np.random.default_rng(seed)
     # ‖X‖² (for the objective) and the grand mean (for init scale) in one
@@ -66,7 +72,10 @@ def nmf(X: fm.FM, k: int = 8, *, max_iter: int = 30, tol: float = 1e-4,
     trace: list[float] = []
     prev = np.inf
     it = 0
-    for it in range(1, max_iter + 1):
+    scope = (fm.inspect_iterations() if inspect
+             else contextlib.nullcontext())
+    with scope:
+      for it in range(1, max_iter + 1):
         # Pass A: both contraction sinks in one fused scan of (X, W).
         WtX_m, WtW_m = fm.materialize(fm.crossprod(W, X), fm.crossprod(W),
                                       mode=mode, fuse=fuse, backend=backend)

@@ -409,6 +409,13 @@ class Plan:
         with different pass structure can never collide."""
         parts = [f"L{self.long_dim}", f"P{self.n_passes}"]
         pos = {n.id: i for i, n in enumerate(self.order)}
+        # Requested-ness AND request order are structural: the compiled
+        # epilogue returns exactly the requested roots, and result slots
+        # align positionally — a plan materializing an interior epilogue
+        # node must not share a template with one that doesn't.
+        req_pos: dict[int, int] = {}
+        for i, n in enumerate(self.requested):
+            req_pos.setdefault(n.id, i)
         src_tag: dict[int, list[str]] = {}
         for k, ps in enumerate(self.passes):
             for gi, group in enumerate(ps.source_groups):
@@ -456,8 +463,9 @@ class Plan:
             else:
                 role = f"m{self.passno[n.id]}"
             sv = n.save or ""
+            rq = f"r{req_pos[n.id]}" if n.id in req_pos else ""
             parts.append(f"{role}|{n.kind}|{n.shape}|{n.dtype.name}|{fname}"
-                         f"|{extra}|{ng}|{sv}|{','.join(ps_)}")
+                         f"|{extra}|{ng}|{sv}|{rq}|{','.join(ps_)}")
         return ";".join(parts)
 
     def result_nodes(self):
@@ -539,3 +547,52 @@ class Plan:
         lines.append(f"  flops={self.flop_count():.3e} bytes_in={self.bytes_in():.3e}"
                      f" bytes_out={self.bytes_out():.3e}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Cross-plan co-scheduling (the batch layer, core/batch.py)
+# ---------------------------------------------------------------------------
+
+def stream_group_key(ps: PassSchedule, sources=None) -> tuple:
+    """The co-schedule signature of one pass: its long dimension plus the
+    IDENTITY set of the physical matrices it streams.  Two passes with
+    compatible keys (equal, or one source set a subset of the other, same
+    long dimension) can share a single streaming drive — the staged
+    partition serves every member's step before eviction.  Partition row
+    counts need not match: they are powers of two under the same I/O
+    budget, so the group runs at the smallest member's rows and every
+    member's schedule divides it evenly."""
+    return (ps.long_dim,
+            frozenset(id(m) for _, m in ps.staged_sources(sources)))
+
+
+def coschedule(keys) -> list[list[int]]:
+    """Group member passes (given their `stream_group_key`s) onto shared
+    streaming drives.  Returns groups of member indices, input order
+    preserved inside each group.
+
+    Equal keys co-schedule directly; a member whose source set is a strict
+    SUBSET of an existing group's rides that group's stream for free (its
+    matrices are staged there anyway).  A pass that streams nothing (pure
+    broadcast/epilogue work) gets its own group — there is no drive to
+    share.  Supersets are seeded first so subsets always find their
+    carrier."""
+    keys = list(keys)
+    order = sorted(range(len(keys)), key=lambda i: -len(keys[i][1]))
+    groups: list[list[int]] = []
+    group_keys: list[tuple] = []
+    for i in order:
+        long_dim, mats = keys[i]
+        placed = False
+        if mats:
+            for gi, (g_long, g_mats) in enumerate(group_keys):
+                if g_long == long_dim and mats <= g_mats:
+                    groups[gi].append(i)
+                    placed = True
+                    break
+        if not placed:
+            groups.append([i])
+            group_keys.append((long_dim, mats))
+    for g in groups:
+        g.sort()
+    return groups

@@ -221,6 +221,44 @@ class MultiPassProgram:
         return "\n".join(lines)
 
 
+class GroupProgram:
+    """The co-scheduled executable of ONE stream group (core/batch.py): k
+    member passes driven over a single shared partition stream.
+
+    The members keep their own compiled ``step``/``combine``/``epilogue``
+    (plan-cache identity, donation rules and sink merge are per member);
+    what the group composes is the SCHEDULE — while a staged partition is
+    resident, every member's step consumes it before eviction, so k plans
+    × 1 stream executes as 1 stream × k steps.  ``members`` holds
+    ``(PassSchedule, LoweredProgram)`` pairs in execution order; the
+    runner is ``materialize._run_stream_group``.
+    """
+
+    def __init__(self, members):
+        self.members = list(members)
+
+    @property
+    def kernel_units(self):
+        return [u for _, prog in self.members for u in prog.kernel_units]
+
+    @property
+    def partition_rows(self) -> int:
+        """The group's common partitioning: the smallest member's rows (all
+        are powers of two under one I/O budget, so every member's schedule
+        divides it)."""
+        return min(ps.partition_rows for ps, _ in self.members)
+
+    def describe(self) -> str:
+        lines = [f"GroupProgram(members={len(self.members)}, "
+                 f"partition_rows={self.partition_rows})"]
+        for i, (ps, prog) in enumerate(self.members):
+            lines.append(f" member {i} (pass {ps.idx}, "
+                         f"rows={ps.partition_rows}):")
+            lines.extend("  " + line
+                         for line in prog.describe().splitlines())
+        return "\n".join(lines)
+
+
 class Backend:
     name = "?"
 

@@ -27,6 +27,8 @@ intensity is high enough.
 """
 from __future__ import annotations
 
+import contextlib
+import threading
 import time
 import warnings
 from collections import OrderedDict
@@ -77,12 +79,21 @@ PLAN_CACHE_LIMIT = 256
 # The counters live in the observability metrics registry (root scope plus
 # any ``fm.collect_stats()`` scopes open on the calling thread); this list
 # names the compatibility subset ``exec_stats()`` exposes as ints.
+#
+# ``streams`` counts physical partition sweeps over the sources: for a solo
+# materialize it equals ``passes``, but a batched execution (core/batch.py)
+# drives ONE stream per co-scheduled group while counting every member's
+# logical pass — k plans × 1 stream shows up as passes=k, streams=1.
+# ``prefetch_reuse_hits`` counts staged partition blocks served from the
+# previous pass's resident final partition instead of a re-read.
 EXEC_COUNTERS = (
     "materialize_calls",
     "plan_cache_hits",
     "plan_cache_misses",
     "partition_steps",
     "passes",
+    "streams",
+    "prefetch_reuse_hits",
     "epilogue_launches",
     "epilogue_host_inputs",
 )
@@ -148,26 +159,7 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
         return [_result_of(m) for m in mats]
 
     plan = Plan(virtuals)
-    exec_plan = plan
-    if reuse_plans:
-        # Both partition levels OF EVERY PASS and the backend are part of
-        # the key: the I/O partition size reads IO_PARTITION_BYTES at plan
-        # build and the IR's block-row schedule reads VMEM_PARTITION_BYTES,
-        # so a fm.set_conf change — or a backend switch — must miss the
-        # cache rather than reuse an executable built for different tiling.
-        # (plan.signature() itself embeds the pass structure: node roles
-        # carry pass numbers, so one-pass and two-pass cuts never collide.)
-        sig = (plan.signature(), plan.pass_key(), backend, _mesh_key(mesh))
-        cached = _PLANS.get(sig)
-        if cached is not None:
-            metrics.inc("plan_cache_hits")
-            _PLANS.move_to_end(sig)  # LRU touch
-            exec_plan = cached
-        else:
-            metrics.inc("plan_cache_misses")
-            _PLANS[sig] = plan
-            while len(_PLANS) > PLAN_CACHE_LIMIT:
-                _PLANS.popitem(last=False)  # evict least-recently-used
+    exec_plan = _acquire_exec_plan(plan, backend, mesh, reuse_plans)
 
     # A cached plan's nodes belong to the FIRST caller's live DAG: its
     # persisted results (set_mate_level cut points used by that DAG's other
@@ -223,11 +215,297 @@ def _result_of(m: FMMatrix) -> FMMatrix:
     return store
 
 
+def _acquire_exec_plan(plan: Plan, backend: str, mesh, reuse_plans: bool):
+    """Plan-cache lookup shared by ``materialize`` and the batch executor.
+
+    Both partition levels OF EVERY PASS and the backend are part of the
+    key: the I/O partition size reads IO_PARTITION_BYTES at plan build and
+    the IR's block-row schedule reads VMEM_PARTITION_BYTES, so a
+    fm.set_conf change — or a backend switch — must miss the cache rather
+    than reuse an executable built for different tiling.  (plan.signature()
+    itself embeds the pass structure: node roles carry pass numbers, so
+    one-pass and two-pass cuts never collide.)
+    """
+    if not reuse_plans:
+        return plan
+    sig = (plan.signature(), plan.pass_key(), backend, _mesh_key(mesh))
+    cached = _PLANS.get(sig)
+    if cached is not None:
+        metrics.inc("plan_cache_hits")
+        _PLANS.move_to_end(sig)  # LRU touch
+        return cached
+    metrics.inc("plan_cache_misses")
+    _PLANS[sig] = plan
+    while len(_PLANS) > PLAN_CACHE_LIMIT:
+        _PLANS.popitem(last=False)  # evict least-recently-used
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Iteration inspector: cross-materialize partition residency
+# ---------------------------------------------------------------------------
+
+_INSPECT = threading.local()
+
+
+def inspecting() -> bool:
+    """True while an ``iteration_scope`` is open on this thread."""
+    return getattr(_INSPECT, "depth", 0) > 0
+
+
+@contextlib.contextmanager
+def iteration_scope():
+    """fm.inspect_iterations: declare an iterative driver's loop.
+
+    Inside the scope the executor keeps the LAST staged partition of every
+    streaming pass resident across materialize calls, so iteration i+1's
+    first pass — whose partition schedule matches iteration i's last pass —
+    reuses the already-staged final partition instead of re-reading it
+    (``prefetch_reuse_hits``).  The iterative drivers (kmeans / glm IRLS /
+    nmf / gmm) open this around their loops; on exit the resident blocks
+    are dropped so no device memory outlives the loop.
+    """
+    _INSPECT.depth = getattr(_INSPECT, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _INSPECT.depth -= 1
+        if _INSPECT.depth == 0:
+            _INSPECT.residents = None
+
+
+def _tls_residents():
+    return getattr(_INSPECT, "residents", None) if inspecting() else None
+
+
+def _set_tls_residents(residents):
+    if inspecting():
+        _INSPECT.residents = residents
+
+
+class _Resident:
+    """The final staged partition of a streaming pass, kept alive so a
+    following pass with the SAME partition schedule (rows, long_dim — hence
+    the same final row range) can consume it without re-staging.  Blocks
+    are keyed by physical-matrix identity; ``mats`` holds strong references
+    so an ``id()`` can't be reissued while the entry is live."""
+
+    __slots__ = ("rows", "long_dim", "blocks", "mats")
+
+    def __init__(self, rows: int, long_dim: int, blocks: dict, mats: list):
+        self.rows = rows
+        self.long_dim = long_dim
+        self.blocks = blocks  # {id(mat): staged device block}
+        self.mats = mats
+
+    def matches(self, rows: int, long_dim: int) -> bool:
+        return self.rows == rows and self.long_dim == long_dim
+
+
+def _reuse_from(residents, group_pairs, rows: int, long_dim: int):
+    """Reusable final-partition blocks for a pass streaming ``group_pairs``
+    ([(group_key, mat)]) at ``rows``: {group_key: block} for every source
+    whose block is resident under an identical partition schedule.
+    Per-source, so a pass that re-streams X alongside a NEW matrix still
+    reuses the X block."""
+    out = {}
+    for entry in residents or ():
+        if not entry.matches(rows, long_dim):
+            continue
+        for key, mat in group_pairs:
+            if key not in out and id(mat) in entry.blocks:
+                out[key] = entry.blocks[id(mat)]
+    return out or None
+
+
 # ---------------------------------------------------------------------------
 # Fused execution
 # ---------------------------------------------------------------------------
 
 
+
+
+class _PassExec:
+    """Executor state of ONE member pass inside a stream group.
+
+    The group runners (`_run_whole_group` / `_run_stream_group`) drive one
+    partition sweep over the UNION of the members' staged sources; while a
+    staged partition is resident every member's compiled ``step`` consumes
+    it and folds its own sink partials through its own ``combine`` before
+    the blocks are evicted — k plans × 1 stream becomes 1 stream × k steps
+    (core/batch.py builds multi-member groups; a solo materialize is the
+    one-member degenerate case).
+
+    ``out_nodes`` pairs each long-dimension output's TEMPLATE node (the
+    plan-cache entry's node, whose id keys the lowered step's outputs) with
+    the node whose save flag / name / shape describe where the result goes
+    — identical for a solo run, the requesting plan's own node for a batch
+    member executing through a borrowed cached template.  ``scopes`` are
+    the metrics scopes captured when the request joined the batch; the
+    runners adopt them around this member's compute so per-request
+    attribution reports the member's OWN share, not the group's.
+    """
+
+    __slots__ = ("ps", "prog", "sources", "smalls", "epi_sources",
+                 "bindings", "out_nodes", "scopes", "accs", "out_parts",
+                 "host_bufs", "disk_stores", "finals", "epi_outs")
+
+    def __init__(self, ps, prog, sources, smalls, epi_sources, bindings, *,
+                 out_nodes=None, scopes=()):
+        self.ps = ps
+        self.prog = prog
+        self.sources = sources
+        self.smalls = smalls
+        self.epi_sources = epi_sources
+        self.bindings = bindings
+        if out_nodes is None:
+            outs = ps.row_local_roots + ps.saves
+            out_nodes = list(zip(outs, outs))
+        self.out_nodes = out_nodes
+        self.scopes = tuple(scopes)
+        self.accs = ps.init_accs()
+        self.out_parts = {tmpl.id: [] for tmpl, _ in out_nodes}
+        self.host_bufs: dict[int, np.ndarray] = {}
+        self.disk_stores: dict[int, object] = {}
+        self.finals = None
+        self.epi_outs = None
+
+    def route_outputs(self, start: int, stop: int, outputs: dict):
+        for nid, val in outputs.items():
+            if nid in self.disk_stores:
+                self.disk_stores[nid].write_rows(start, np.asarray(val))
+            elif nid in self.host_bufs:
+                self.host_bufs[nid][start:stop] = np.asarray(val)
+            else:
+                self.out_parts[nid].append(val)
+
+
+def _member_stack(member: _PassExec):
+    """The metrics-scope stack to adopt around this member's compute: the
+    executor thread's open scopes plus the scopes captured at request time
+    (deduped).  None when nothing extra is captured — record normally."""
+    if not member.scopes:
+        return None
+    cur = metrics.current_scopes()
+    extra = [s for s in member.scopes if s not in set(cur)]
+    return tuple(cur) + tuple(extra) if extra else None
+
+
+def _in_stack(stack):
+    return metrics.use_scopes(stack) if stack else contextlib.nullcontext()
+
+
+def _group_staging(members):
+    """Union staging plan of a group: one ``(key, mat)`` per distinct
+    physical matrix across every member (key = the matrix's identity), and
+    per member the canonical-node-id → key map that fans a staged block
+    back out to its compiled step."""
+    group_pairs: list[tuple[int, object]] = []
+    seen: set[int] = set()
+    maps: list[dict[int, int]] = []
+    for m in members:
+        mp = {}
+        for nid, mat in m.ps.staged_sources(m.sources):
+            if id(mat) not in seen:
+                seen.add(id(mat))
+                group_pairs.append((id(mat), mat))
+            mp[nid] = id(mat)
+        maps.append(mp)
+    return group_pairs, maps
+
+
+def _count_stream(members, union_bytes: int):
+    """Stream accounting.  Root + the executor's ambient scopes record the
+    PHYSICAL sweep — one stream, union bytes read once, one logical pass
+    per member (so a batched group shows passes=k, streams=1).  Each
+    member's request scopes additionally record the stream and their OWN
+    plan's byte share: `fm.collect_stats()` around one request of a batch
+    reports that plan's traffic, not the whole group's."""
+    metrics.inc("streams")
+    metrics.inc("bytes_streamed", union_bytes)
+    metrics.inc("passes", len(members))
+    ambient = set(metrics.REGISTRY.scopes())
+    stream_scopes: list = []
+    for m in members:
+        own = None
+        for sc in m.scopes:
+            if sc in ambient:
+                continue
+            if own is None:
+                own = m.ps.bytes_in(m.sources)
+            sc.inc("passes", 1)
+            sc.inc("bytes_streamed", own)
+            if sc not in stream_scopes:
+                stream_scopes.append(sc)
+    for sc in stream_scopes:
+        sc.inc("streams", 1)
+
+
+def _member_step(member, blocks, key_map, start, stop, *, donate_blocks,
+                 idx):
+    """Run one member's step + combine over the staged partition."""
+    step = member.prog.step_donated if donate_blocks else member.prog.step
+    mblocks = {nid: blocks[key] for nid, key in key_map.items()}
+    metrics.inc("partition_steps")
+    t0 = time.perf_counter()
+    with TRACER.span("device_step", rows=stop - start, member=idx):
+        partials, outputs = step(mblocks, member.smalls, member.bindings,
+                                 jnp.asarray(start, jnp.int32))
+        if TRACER.enabled:  # timing fidelity while tracing only
+            jax.block_until_ready((partials, outputs))
+    metrics.inc("device_step_seconds", time.perf_counter() - t0)
+    # The paper's partial-merge: each partition's sink partials fold into
+    # the member's running accumulators with the aggregation VUDFs'
+    # ``combine`` (donated: the old acc buffers recycle in place).
+    t0 = time.perf_counter()
+    with TRACER.span("combine", member=idx):
+        member.accs = member.prog.combine(member.accs, partials)
+        if TRACER.enabled:
+            jax.block_until_ready(member.accs)
+    metrics.inc("combine_seconds", time.perf_counter() - t0)
+    return outputs
+
+
+def _finish_members(members, stacks):
+    """Finalize + epilogue for every member once the sweep completes."""
+    for m, stack in zip(members, stacks):
+        with _in_stack(stack):
+            m.finals = m.ps.finalize_accs(m.accs)
+            m.epi_outs = _run_epilogue(m.ps, m.prog, m.finals,
+                                       m.epi_sources, m.smalls, m.bindings)
+        for nid, buf in m.host_bufs.items():
+            m.out_parts[nid] = [buf]
+        for st in m.disk_stores.values():
+            st.flush()
+
+
+def _run_whole_group(members, mesh=None):
+    """Whole-mode sweep of a group: the union of the members' sources is
+    staged once, then every member's step consumes it (offset 0, one
+    partition)."""
+    group_pairs, maps = _group_staging(members)
+    long_dim = members[0].ps.long_dim
+    blocks = {}
+    for key, mat in group_pairs:
+        data = mat.logical_data()
+        arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
+        if mesh is not None and mat.shape[0] == long_dim:
+            arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
+        blocks[key] = arr
+    _count_stream(members, sum(mat.nbytes() for _, mat in group_pairs))
+    stacks = [_member_stack(m) for m in members]
+    with TRACER.span("stream", members=len(members), mode="whole"):
+        with TRACER.span("partition", start=0, stop=long_dim):
+            for i, (m, mp, stack) in enumerate(zip(members, maps, stacks)):
+                with _in_stack(stack):
+                    outputs = _member_step(m, blocks, mp, 0, long_dim,
+                                           donate_blocks=False, idx=i)
+                # Whole mode: every output is one full-height value; save
+                # targets are applied later by _store_results.
+                for nid, val in outputs.items():
+                    m.out_parts[nid].append(val)
+    _finish_members(members, stacks)
+    return None
 
 
 def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
@@ -243,6 +521,12 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     call.  Results register only after EVERY pass succeeds, so an
     interrupted pass (a staging error mid-stream) leaves no
     partially-registered sinks behind.
+
+    Streaming passes keep their FINAL staged partition resident whenever
+    the next pass — of this plan, or of the next materialize inside an
+    ``iteration_scope`` — runs an identical partition schedule over (some
+    of) the same physical matrices: the re-drive then starts from the
+    resident blocks instead of re-reading them (``prefetch_reuse_hits``).
     """
     if sources is None:
         sources = [m for _, m in plan.sources]
@@ -267,8 +551,9 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     # once every pass has run — never a half-written module global an
     # interleaved materialize can clobber mid-plan.
     pass_bytes: list[int] = []
+    residents = _tls_residents()
     src_i = bc_i = epi_i = 0
-    for ps, pprog in zip(plan.passes, pass_progs):
+    for k, (ps, pprog) in enumerate(zip(plan.passes, pass_progs)):
         ns, nb, ne = (len(ps.sources), len(ps.broadcast_sources),
                       len(ps.epilogue_sources))
         ps_src = sources[src_i:src_i + ns]
@@ -280,28 +565,41 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
         bindings = {nid: carried[nid] for nid in ps.binding_ids}
         for nid, mat in ps.broadcast_source_pairs(ps_bc):
             bindings[nid] = _stage_whole(mat)
+        member = _PassExec(ps, pprog, ps_src, smalls, ps_epi, bindings)
         t_pass = time.perf_counter()
         with TRACER.span("pass", idx=ps.idx, mode=mode,
                          partition_rows=ps.partition_rows):
             if mode == "whole":
-                finals, out_parts, epi_outs = _execute_whole_pass(
-                    ps, pprog, mesh, ps_src, smalls, ps_epi, bindings)
+                _run_whole_group([member], mesh=mesh)
+                residents = None
             else:
-                finals, out_parts, epi_outs, dstores = _execute_stream_pass(
-                    ps, pprog, ps_src, smalls, ps_epi, bindings,
-                    to_host=(mode == "ooc"), donate=donate,
-                    prefetch=prefetch)
-                disk_all.update(dstores)
+                # Keep the final staged partition resident when the next
+                # streaming pass (this plan's, or — inside an
+                # iteration_scope — the next materialize's first) could
+                # consume it: same partition rows, shared physical matrix.
+                capture = inspecting()
+                nxt = plan.passes[k + 1] if k + 1 < len(plan.passes) else None
+                if (not capture and nxt is not None
+                        and nxt.partition_rows == ps.partition_rows):
+                    cur_ids = {id(mat)
+                               for _, mat in ps.staged_sources(ps_src)}
+                    nxt_src = sources[src_i:src_i + len(nxt.sources)]
+                    capture = any(
+                        id(mat) in cur_ids
+                        for _, mat in nxt.staged_sources(nxt_src))
+                entry = _run_stream_group(
+                    [member], to_host=(mode == "ooc"), donate=donate,
+                    prefetch=prefetch, residents=residents, capture=capture)
+                residents = [entry] if entry is not None else None
+                disk_all.update(member.disk_stores)
         metrics.inc("pass_seconds", time.perf_counter() - t_pass)
-        metrics.inc("passes")
-        pb = ps.bytes_in(ps_src)
-        pass_bytes.append(pb)
-        metrics.inc("bytes_streamed", pb)
-        finals_all.update(finals)
-        parts_all.update(out_parts)
-        epi_all.update(epi_outs)
-        carried.update(finals)
-        carried.update(epi_outs)
+        pass_bytes.append(ps.bytes_in(ps_src))
+        finals_all.update(member.finals)
+        parts_all.update(member.out_parts)
+        epi_all.update(member.epi_outs)
+        carried.update(member.finals)
+        carried.update(member.epi_outs)
+    _set_tls_residents(residents)
     metrics.put("pass_bytes_in", tuple(pass_bytes))
     _store_results(plan, finals_all, parts_all, to_host=(mode == "ooc"),
                    disk_stores=disk_all, epilogue_outs=epi_all)
@@ -321,37 +619,6 @@ def _stage_whole(mat) -> "jax.Array":
     sources, pass bindings must never leak host buffers into jit)."""
     data = mat.logical_data()
     return jnp.asarray(np.asarray(data)) if mat.on_host else data
-
-
-def _execute_whole_pass(ps, prog, mesh, sources, smalls, epi_sources,
-                        bindings):
-    # One staged array per physical matrix; leaves aliasing it share the
-    # buffer through the pass's source_aliases (see LoweredProgram._step).
-    blocks = {}
-    for nid, mat in ps.staged_sources(sources):
-        data = mat.logical_data()
-        arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
-        if mesh is not None and mat.shape[0] == ps.long_dim:
-            arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
-        blocks[nid] = arr
-    offset = jnp.zeros((), jnp.int32)
-    metrics.inc("partition_steps")
-    with TRACER.span("partition", start=0, stop=ps.long_dim):
-        t0 = time.perf_counter()
-        with TRACER.span("device_step", rows=ps.long_dim):
-            partials, outputs = prog.step(blocks, smalls, bindings, offset)
-            if TRACER.enabled:  # timing fidelity; async dispatch otherwise
-                jax.block_until_ready((partials, outputs))
-        metrics.inc("device_step_seconds", time.perf_counter() - t0)
-        t0 = time.perf_counter()
-        with TRACER.span("combine"):
-            accs = prog.combine(ps.init_accs(), partials)
-            if TRACER.enabled:
-                jax.block_until_ready(accs)
-        metrics.inc("combine_seconds", time.perf_counter() - t0)
-    finals = ps.finalize_accs(accs)
-    epi_outs = _run_epilogue(ps, prog, finals, epi_sources, smalls, bindings)
-    return finals, {nid: [v] for nid, v in outputs.items()}, epi_outs
 
 
 def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
@@ -390,111 +657,134 @@ def _long_spec(mesh):
     return P(data_axes, None)
 
 
-def _inline_partitions(src_pairs, rows: int, n: int, donate: bool):
+def _inline_partitions(src_pairs, rows: int, n: int, donate: bool,
+                       reuse=None):
     """Synchronous partition staging (prefetch-off ablation): same staging
     rules as the prefetch thread (storage.stage_block), but the disk read
-    happens on the compute thread; only device_put dispatch overlaps."""
+    happens on the compute thread; only device_put dispatch overlaps.
+    ``reuse`` maps source keys to the previous pass's resident FINAL
+    partition blocks — served in place of the last re-read."""
     from ..storage.prefetch import stage_block
     start = 0
     while start < n:
         stop = min(start + rows, n)
-        yield start, stop, {
-            nid: stage_block(mat, start, stop, donate=donate)
-            for nid, mat in src_pairs}
+        blocks = {}
+        for nid, mat in src_pairs:
+            if stop >= n and reuse and nid in reuse:
+                blocks[nid] = reuse[nid]
+                metrics.inc("prefetch_reuse_hits")
+            else:
+                blocks[nid] = stage_block(mat, start, stop, donate=donate)
+        yield start, stop, blocks
         start = stop
 
 
-def _execute_stream_pass(ps, prog, sources, smalls, epi_sources, bindings, *,
-                         to_host: bool, donate: bool = True,
-                         prefetch: Optional[bool] = None):
-    """Stream ONE pass of a plan partition-by-partition.  Each pass
-    re-drives its own prefetcher over its own staged sources (a pass-2
-    sweep re-reads the long-dimension matrices pass 1 already streamed)."""
+def _run_stream_group(members, *, to_host: bool, donate: bool = True,
+                      prefetch: Optional[bool] = None, residents=None,
+                      capture: bool = False):
+    """Stream ONE co-scheduled group of member passes partition by
+    partition: one prefetcher drive over the UNION of the members' staged
+    sources, every member's step consuming each staged partition while it
+    is resident (1 stream × k steps).  A solo materialize pass is the
+    one-member case and behaves exactly like the classic per-plan stream.
+
+    ``residents`` holds the previous pass's resident final partition(s);
+    blocks whose partition schedule matches are fed to the prefetcher as
+    ``reuse`` so the last partition is not re-staged.  With ``capture``
+    the sweep's OWN final partition is returned as a `_Resident` (its
+    blocks are excluded from donation) for the next pass to consume.
+    """
     from .. import storage  # deferred: storage depends on core.matrix
 
-    rows = ps.partition_rows
-    n = ps.long_dim
-    accs = ps.init_accs()
-    out_parts: dict[int, list] = {x.id: [] for x in ps.row_local_roots + ps.saves}
-    host_bufs: dict[int, np.ndarray] = {}
-    disk_stores: dict[int, "storage.MmapStore"] = {}
+    n = members[0].ps.long_dim
+    # Partition schedules in one group are power-of-two row counts over the
+    # same long dimension: the min is a common partitioning for all members.
+    rows = min(m.ps.partition_rows for m in members)
+    group_pairs, maps = _group_staging(members)
+    _count_stream(members, sum(mat.nbytes() for _, mat in group_pairs))
 
-    for x in ps.row_local_roots + ps.saves:
-        target = x.save or ("host" if to_host else "device")
-        if target == "disk":
-            # Write-through spill: the long-dimension output streams into a
-            # preallocated on-disk matrix, partition by partition — it never
-            # exists whole in RAM.  Works for any pass: scale(X, save='disk')
-            # spills the PASS-2 sweep output out-of-core end to end.
-            disk_stores[x.id] = storage.create_matrix(
-                storage.spill_path(x.name), (x.nrow, x.ncol),
-                dtypes.np_equiv(x.dtype))
-        elif target == "host":
-            host_bufs[x.id] = np.empty((x.nrow, x.ncol), dtypes.np_equiv(x.dtype))
+    for m in members:
+        for tmpl, spec in m.out_nodes:
+            target = spec.save or ("host" if to_host else "device")
+            if target == "disk":
+                # Write-through spill: the long-dimension output streams
+                # into a preallocated on-disk matrix, partition by
+                # partition — it never exists whole in RAM.  Works for any
+                # pass: scale(X, save='disk') spills the PASS-2 sweep
+                # output out-of-core end to end.
+                m.disk_stores[tmpl.id] = storage.create_matrix(
+                    storage.spill_path(spec.name), (spec.nrow, spec.ncol),
+                    dtypes.np_equiv(spec.dtype))
+            elif target == "host":
+                m.host_bufs[tmpl.id] = np.empty(
+                    (spec.nrow, spec.ncol), dtypes.np_equiv(spec.dtype))
 
-    # Deduped staging: one disk/RAM read + device_put per PHYSICAL matrix
-    # per partition, however many leaves reference it (ROADMAP open item).
-    src_pairs = ps.staged_sources(sources)
+    reuse_map = _reuse_from(residents, group_pairs, rows, n)
     if prefetch is None:
         # Default on for slow-tier sources; a single-partition stream has
         # nothing to overlap, so skip the thread.
         prefetch = (storage.get_conf("prefetch") and n > rows
-                    and any(mat.on_host for mat in sources))
+                    and any(mat.on_host for _, mat in group_pairs))
     if prefetch:
         parts = storage.PartitionPrefetcher(
-            src_pairs, rows, n, donate=donate,
-            depth=storage.get_conf("prefetch_depth"))
+            group_pairs, rows, n, donate=donate,
+            depth=storage.get_conf("prefetch_depth"), reuse=reuse_map)
     else:
-        parts = _inline_partitions(src_pairs, rows, n, donate)
+        parts = _inline_partitions(group_pairs, rows, n, donate,
+                                   reuse=reuse_map)
 
-    step = prog.step_donated if donate else prog.step
+    stacks = [_member_stack(m) for m in members]
+    captured = None
     try:
-        for start, stop, blocks in parts:
-            metrics.inc("partition_steps")
-            with TRACER.span("partition", start=start, stop=stop):
-                t0 = time.perf_counter()
-                with TRACER.span("device_step", rows=stop - start):
-                    partials, outputs = step(blocks, smalls, bindings,
-                                             jnp.asarray(start, jnp.int32))
-                    if TRACER.enabled:  # timing fidelity while tracing only
-                        jax.block_until_ready((partials, outputs))
-                metrics.inc("device_step_seconds", time.perf_counter() - t0)
-                # The paper's partial-merge: each partition's sink partials
-                # fold into the running accumulators with the aggregation
-                # VUDFs' ``combine`` (donated: the old acc buffers recycle
-                # in place).
-                t0 = time.perf_counter()
-                with TRACER.span("combine"):
-                    accs = prog.combine(accs, partials)
-                    if TRACER.enabled:
-                        jax.block_until_ready(accs)
-                metrics.inc("combine_seconds", time.perf_counter() - t0)
-                for nid, val in outputs.items():
-                    if nid in disk_stores:
-                        disk_stores[nid].write_rows(start, np.asarray(val))
-                    elif nid in host_bufs:
-                        host_bufs[nid][start:stop] = np.asarray(val)
-                    else:
-                        out_parts[nid].append(val)
+        with TRACER.span("stream", members=len(members), rows=rows,
+                         reused=len(reuse_map or ())):
+            for start, stop, blocks in parts:
+                is_final = stop >= n
+                # The final partition's blocks survive the step when they
+                # are being captured for the next pass, or when they CAME
+                # from a resident entry that may be consulted again.
+                pin_final = is_final and (capture or reuse_map is not None)
+                with TRACER.span("partition", start=start, stop=stop):
+                    for i, (m, mp, stack) in enumerate(
+                            zip(members, maps, stacks)):
+                        # Staged blocks are donated only by the LAST
+                        # member's step — earlier members share them.
+                        donate_blocks = (donate and i == len(members) - 1
+                                         and not pin_final)
+                        with _in_stack(stack):
+                            outputs = _member_step(
+                                m, blocks, mp, start, stop,
+                                donate_blocks=donate_blocks, idx=i)
+                        m.route_outputs(start, stop, outputs)
+                    if capture and is_final:
+                        captured = _Resident(
+                            rows, n,
+                            {key: blocks[key] for key, _ in group_pairs},
+                            [mat for _, mat in group_pairs])
     finally:
         if hasattr(parts, "close"):
             parts.close()
 
-    finals = ps.finalize_accs(accs)
-    epi_outs = _run_epilogue(ps, prog, finals, epi_sources, smalls, bindings)
-    for nid, buf in host_bufs.items():
-        out_parts[nid] = [buf]
-    for st in disk_stores.values():
-        st.flush()
-    return finals, out_parts, epi_outs, disk_stores
+    _finish_members(members, stacks)
+    return captured
 
 
 def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,
-                   disk_stores=None, epilogue_outs=None):
-    for node in plan.sinks:
+                   disk_stores=None, epilogue_outs=None, onto: Plan = None):
+    """Register the execution's values as each result node's cached store.
+
+    ``onto`` is an equal-signature plan to register results ON: a batch
+    member executing through a borrowed cached template reads values keyed
+    by the TEMPLATE's node ids but registers them on its own plan's nodes
+    (positionally aligned — same signature, same deterministic node order),
+    so the template's nodes are never mutated.  Defaults to ``plan``
+    itself (solo materialize, where template borrowing is handled by the
+    snapshot/restore dance in ``materialize``)."""
+    onto = onto if onto is not None else plan
+    for node, dst in zip(plan.sinks, onto.sinks):
         arr = sink_finals[node.id]
-        node.cached_store = FMMatrix(
-            node.shape, node.dtype, store=DenseStore(arr), name=node.name)
+        dst.cached_store = FMMatrix(
+            dst.shape, dst.dtype, store=DenseStore(arr), name=dst.name)
     if epilogue_outs:
         # Epilogue results are small post-merge values: like sinks they stay
         # on device in every mode, unless an explicit save flag retargets
@@ -503,37 +793,39 @@ def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,
         for node in plan.epilogue_roots:
             out_parts[node.id] = [epilogue_outs[node.id]]
     epi_ids = {n.id for n in plan.epilogue_roots}
-    for node in plan.row_local_roots + plan.saves + plan.epilogue_roots:
+    tmpl_outs = plan.row_local_roots + plan.saves + plan.epilogue_roots
+    own_outs = onto.row_local_roots + onto.saves + onto.epilogue_roots
+    for node, dst in zip(tmpl_outs, own_outs):
         if disk_stores and node.id in disk_stores:
-            node.cached_store = FMMatrix(
-                node.shape, node.dtype, store=disk_stores[node.id],
-                name=node.name)
-            node.save = None
+            dst.cached_store = FMMatrix(
+                dst.shape, dst.dtype, store=disk_stores[node.id],
+                name=dst.name)
+            dst.save = None
             continue
         parts = out_parts[node.id]
         if len(parts) == 1:
             data = parts[0]
         else:
             data = jnp.concatenate(parts, axis=0)
-        target = node.save or (
+        target = dst.save or (
             "host" if to_host and node.id not in epi_ids else None)
         if target == "disk":
             # whole-mode save='disk': spill the materialized output in one go.
             from .. import storage
             store = storage.create_matrix(
-                storage.spill_path(node.name), node.shape,
-                dtypes.np_equiv(node.dtype))
+                storage.spill_path(dst.name), dst.shape,
+                dtypes.np_equiv(dst.dtype))
             store.write_rows(0, np.asarray(data))
             store.flush()
-            node.cached_store = FMMatrix(
-                node.shape, node.dtype, store=store, name=node.name)
-            node.save = None
+            dst.cached_store = FMMatrix(
+                dst.shape, dst.dtype, store=store, name=dst.name)
+            dst.save = None
             continue
         if target == "host" and not isinstance(data, np.ndarray):
             data = np.asarray(data)
-        node.cached_store = FMMatrix(
-            node.shape, node.dtype, store=DenseStore(data), name=node.name)
-        node.save = None
+        dst.cached_store = FMMatrix(
+            dst.shape, dst.dtype, store=DenseStore(data), name=dst.name)
+        dst.save = None
 
 
 # ---------------------------------------------------------------------------

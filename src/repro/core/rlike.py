@@ -523,6 +523,53 @@ def materialize(*xs, **kw) -> list[FM]:
     return [FM(m) for m in mats]
 
 
+def batch(*request_groups, **kw):
+    """fm.batch: cross-materialize stream fusion (core/batch.py).
+
+    Each argument is one request — a lazy matrix, or a tuple/list of lazy
+    matrices that would otherwise be one ``fm.materialize(...)`` call.
+    Every request keeps its own plan, but requests whose passes stream the
+    same physical sources are co-scheduled onto ONE partition sweep: k
+    plans × 1 stream (``fm.exec_stats()['streams']``).
+
+        means, (sds, ctp) = fm.batch(fm.colMeans(X),
+                                     (fm.colSds(X), fm.crossprod(X)))
+
+    With no arguments, returns a collector to queue requests explicitly:
+
+        with fm.batch() as b:
+            h = b.add(fm.colMeans(X))
+        h.value
+
+    Keywords (``mode``, ``backend``, ``donate``, ``prefetch``,
+    ``reuse_plans``) follow ``fm.materialize``; ``mode='auto'`` picks per
+    group from the union of that group's sources."""
+    from . import batch as batch_mod
+    b = batch_mod.Batch(**kw)
+    if not request_groups:
+        return b
+    handles = []
+    for grp in request_groups:
+        outs = grp if isinstance(grp, (tuple, list)) else (grp,)
+        handles.append(b.add(*[_fm(x) for x in outs]))
+    b.run()
+    results = []
+    for grp, h in zip(request_groups, handles):
+        v = h.value
+        results.append([FM(m) for m in v] if isinstance(v, list) else FM(v))
+    return results
+
+
+def inspect_iterations():
+    """fm.inspect_iterations: declare an iterative driver's loop so the
+    executor keeps each streaming pass's final staged partition resident
+    across materialize/batch calls — iteration i+1's first pass over the
+    same partition schedule starts from the resident blocks instead of
+    re-reading them (``prefetch_reuse_hits``).  The iterative drivers
+    (kmeans / glm IRLS / nmf / gmm) open this around their loops."""
+    return mat_mod.iteration_scope()
+
+
 def as_scalar(x) -> float:
     (r,) = materialize(x) if _fm(x).is_virtual else (x,)
     return float(np.asarray(_fm(r).logical_data()).reshape(()))
@@ -593,3 +640,16 @@ def explain(*xs, backend: Optional[str] = None) -> str:
     backend dispatch — without executing anything."""
     from ..observability.explain import explain as _explain
     return _explain(*[_fm(x) for x in xs], backend=backend)
+
+
+def explain_batch(*request_groups, backend: Optional[str] = None) -> str:
+    """fm.explain_batch: render the co-schedule ``fm.batch(*requests)``
+    would run — per round, the stream groups with their member plans,
+    shared sources and the union bytes one drive reads — without executing
+    anything.  Arguments mirror ``fm.batch``: each one is a lazy matrix or
+    a tuple/list of them forming one request."""
+    from ..observability.explain import explain_batch as _explain_batch
+    groups = [grp if isinstance(grp, (tuple, list)) else (grp,)
+              for grp in request_groups]
+    return _explain_batch([[_fm(x) for x in g] for g in groups],
+                          backend=backend)

@@ -104,3 +104,61 @@ def explain_plan(plan, backend=None) -> str:
             lines.append("  " + seg.describe())
             lines.append(f"    -> {report.get(seg.sid, '?')}")
     return "\n".join(lines)
+
+
+def explain_batch(request_groups, backend=None) -> str:
+    """Render the co-schedule ``fm.batch`` would run over ``request_groups``
+    (a list of requests, each a list of FMMatrix outputs): per round, the
+    stream groups with their members, shared physical sources and the
+    union bytes the group's ONE drive reads — against the sum the same
+    requests would read serially.  Nothing is computed and no plan-cache
+    entry is created."""
+    from ..core import dtypes
+    from ..core.fusion import Plan, coschedule, stream_group_key
+
+    plans = []
+    for outs in request_groups:
+        virtuals = [m for m in outs if getattr(m, "is_virtual", False)]
+        if virtuals:
+            plans.append(Plan(virtuals))
+    if not plans:
+        return "(nothing to plan: every request is already materialized)"
+
+    n_rounds = max(p.n_passes for p in plans)
+    lines = [f"Batch: requests={len(plans)} rounds={n_rounds}"]
+    total_union = total_serial = 0.0
+    for r in range(n_rounds):
+        live = [(i, p) for i, p in enumerate(plans) if r < p.n_passes]
+        keys = [stream_group_key(p.passes[r]) for _, p in live]
+        lines.append(f"round {r}:")
+        for group in coschedule(keys):
+            members = [live[g] for g in group]
+            union, seen = [], set()
+            for _, p in members:
+                for _, mat in p.passes[r].staged_sources():
+                    if id(mat) not in seen:
+                        seen.add(id(mat))
+                        union.append(mat)
+            union_b = sum(mat.nbytes() for mat in union)
+            serial_b = sum(p.passes[r].bytes_in() for _, p in members)
+            total_union += union_b
+            total_serial += serial_b
+            rows = min(p.passes[r].partition_rows for _, p in members)
+            lines.append(
+                f"  stream group: members={len(members)} "
+                f"io_partition_rows={rows} "
+                f"reads {_fmt_bytes(union_b)} once"
+                + (f" (vs {_fmt_bytes(serial_b)} serially)"
+                   if len(members) > 1 else ""))
+            for mat in union:
+                lines.append(
+                    f"    source {getattr(mat, 'name', '') or '<anon>'}: "
+                    f"{mat.shape[0]}x{mat.shape[1]} "
+                    f"{dtypes.canon(mat.dtype).name} tier={_tier(mat)}")
+            for i, p in members:
+                sinks = ", ".join(n.name for n in p.passes[r].sinks) or "-"
+                lines.append(f"    member request[{i}] pass {r}: "
+                             f"sinks [{sinks}]")
+    lines.append(f"total streamed: {_fmt_bytes(total_union)} batched vs "
+                 f"{_fmt_bytes(total_serial)} serial")
+    return "\n".join(lines)

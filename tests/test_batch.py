@@ -1,0 +1,386 @@
+"""Batch execution layer tests (ISSUE 7 tentpole).
+
+Contract under test: ``fm.batch(...)`` co-schedules independent plans over
+shared physical sources onto ONE streaming drive — per group,
+``exec_stats()['streams'] == 1`` while every member still counts its own
+logical pass, union bytes are read once (vs. k× serially), results match
+the serial execution bit-for-bit on every backend × mode cell, a staging
+fault mid-group leaves NO member partially registered, per-request
+``fm.collect_stats()`` scopes report their own plan's share, and
+consecutive identical partition schedules reuse the resident final
+partition (``prefetch_reuse_hits``) — solo, batched, and across iterations
+under ``fm.inspect_iterations()``.
+"""
+import numpy as np
+import pytest
+
+from helpers_cache import assert_no_partial_results, flaky_matrix
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core.dag import toposort
+from repro.core.fusion import Plan, coschedule, stream_group_key
+from repro import storage
+
+RNG = np.random.default_rng(17)
+
+CELLS = [(backend, mode)
+         for backend in ("xla", "pallas")
+         for mode in ("whole", "stream", "ooc")]
+
+
+def _x(n=600, p=5, seed=None):
+    rng = RNG if seed is None else np.random.default_rng(seed)
+    return (rng.normal(size=(n, p)) * 2 + 0.5).astype(np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _small_partitions():
+    """Multi-partition streams, fresh plan cache per test."""
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=4096)
+    mz.clear_plan_cache()
+    yield
+    matrix_mod.IO_PARTITION_BYTES = old
+    mz.clear_plan_cache()
+
+
+@pytest.fixture()
+def data_dir(tmp_path, monkeypatch):
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    return tmp_path / "fmdata"
+
+
+def _requests_over(X):
+    """Three independent requests sharing one source: the doc example."""
+    return [fm.colMeans(X), (fm.colSds(X), fm.crossprod(X)), fm.sum_(X)]
+
+
+def _check_oracle(a, res):
+    np.testing.assert_allclose(fm.as_np(res[0]).ravel(), a.mean(0),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(res[1][0]).ravel(),
+                               a.std(0, ddof=1), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(
+        fm.as_np(res[1][1]), a.T.astype(np.float64) @ a, rtol=2e-3)
+    np.testing.assert_allclose(fm.as_scalar(res[2]), a.sum(),
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# The tentpole: parity + 1 stream × k plans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,mode", CELLS)
+def test_batched_equals_serial(backend, mode):
+    a = _x()
+    X = fm.conv_R2FM(a, host=(mode == "ooc"))
+    res = fm.batch(*_requests_over(X), mode=mode, backend=backend)
+    _check_oracle(a, res)
+    # Serial reference over the same physical source.  The group streams at
+    # the MIN member partition rows, so partial-combine order can differ
+    # from a solo run by float32 rounding — tight allclose, not bitwise.
+    serial = [fm.materialize(fm.colMeans(X), mode=mode, backend=backend)[0],
+              fm.materialize(fm.colSds(X), fm.crossprod(X), mode=mode,
+                             backend=backend),
+              fm.materialize(fm.sum_(X), mode=mode, backend=backend)[0]]
+    np.testing.assert_allclose(fm.as_np(res[0]), fm.as_np(serial[0]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(fm.as_np(res[1][1]), fm.as_np(serial[1][1]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(fm.as_np(res[2]), fm.as_np(serial[2]),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["stream", "ooc"])
+def test_one_stream_k_plans(mode):
+    a = _x(1200, 6)
+    X = fm.conv_R2FM(a, host=(mode == "ooc"))
+    mz.reset_exec_stats()
+    res = fm.batch(*_requests_over(X), mode=mode)
+    st = mz.exec_stats()
+    # Three plans, ONE physical sweep: union bytes == one pass over X.
+    assert st["streams"] == 1
+    assert st["passes"] == 3
+    assert st["pass_bytes_in"] == (X.m.nbytes(),)
+    _check_oracle(a, res)
+
+
+def test_serial_streams_kx():
+    """The counter-provable win: the same requests serially stream k×."""
+    a = _x(1200, 6)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    for req in _requests_over(X):
+        outs = req if isinstance(req, tuple) else (req,)
+        fm.materialize(*outs, mode="ooc")
+    st = mz.exec_stats()
+    assert st["streams"] == 3 and st["passes"] == 3
+
+
+def test_batch_disk_tier_single_scan(data_dir):
+    """The acceptance shape: k plans over one shared DISK matrix = one
+    scan of the file."""
+    a = _x(2000, 4, seed=3)
+    X = fm.load_dense_matrix(a, "batch_x")
+    assert X.m.on_disk
+    mz.reset_exec_stats()
+    res = fm.batch(*_requests_over(X))
+    st = mz.exec_stats()
+    assert st["streams"] == 1 and st["passes"] == 3
+    assert st["pass_bytes_in"] == (X.m.nbytes(),)
+    _check_oracle(a, res)
+
+
+def test_subset_source_set_rides_superset_stream():
+    """A plan over {X} joins the stream of a plan over {X, Y}."""
+    a, b = _x(900, 3, seed=4), _x(900, 3, seed=5)
+    X = fm.conv_R2FM(a, host=True)
+    Y = fm.conv_R2FM(b, host=True)
+    mz.reset_exec_stats()
+    s_m, m_m = fm.batch(fm.sum_(X * Y), fm.colMeans(X))
+    st = mz.exec_stats()
+    assert st["streams"] == 1 and st["passes"] == 2
+    np.testing.assert_allclose(fm.as_scalar(s_m), (a * b).sum(), rtol=1e-3)
+    np.testing.assert_allclose(fm.as_np(m_m).ravel(), a.mean(0), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_disjoint_sources_stream_separately():
+    a, b = _x(900, 3, seed=6), _x(900, 3, seed=7)
+    X = fm.conv_R2FM(a, host=True)
+    Y = fm.conv_R2FM(b, host=True)
+    mz.reset_exec_stats()
+    mx, my = fm.batch(fm.colMeans(X), fm.colMeans(Y))
+    st = mz.exec_stats()
+    assert st["streams"] == 2 and st["passes"] == 2
+    np.testing.assert_allclose(fm.as_np(mx).ravel(), a.mean(0), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(my).ravel(), b.mean(0), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_multipass_member_batches_round_zero():
+    """scale(X) (two passes) batched with colMeans(X) (one pass): round 0
+    groups both pass-0s onto one stream, round 1 runs scale's sweep."""
+    a = _x(800, 4, seed=8)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    z_m, mu_m = fm.batch(fm.scale(X), fm.colMeans(X))
+    st = mz.exec_stats()
+    assert st["passes"] == 3          # scale's two + colMeans' one
+    assert st["streams"] == 2         # round 0 shared, round 1 solo
+    ref = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(z_m), ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(mu_m).ravel(), a.mean(0),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_collector_form_and_handles():
+    a = _x(500, 3, seed=9)
+    X = fm.conv_R2FM(a)
+    with fm.batch() as b:
+        h1 = b.add(fm.colMeans(X).m)
+        h2 = b.add(fm.colSds(X).m, fm.crossprod(X).m)
+    np.testing.assert_allclose(
+        np.asarray(h1.value.logical_data()).ravel(), a.mean(0),
+        rtol=1e-4, atol=1e-4)
+    sds, ctp = h2.value
+    np.testing.assert_allclose(np.asarray(sds.logical_data()).ravel(),
+                               a.std(0, ddof=1), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ctp.logical_data()),
+                               a.T.astype(np.float64) @ a, rtol=2e-3)
+    with pytest.raises(RuntimeError, match="already executed"):
+        b.add(fm.colMeans(X).m)
+
+
+# ---------------------------------------------------------------------------
+# Attribution: per-request scopes see their own share
+# ---------------------------------------------------------------------------
+
+def test_per_request_scope_attribution():
+    a = _x(1500, 4, seed=10)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    b = fm.batch()
+    with fm.collect_stats("req0") as sc0:
+        h0 = b.add(fm.colMeans(X).m)
+    with fm.collect_stats("req1") as sc1:
+        h1 = b.add(fm.colSds(X).m, fm.crossprod(X).m)
+    b.run()
+    for sc in (sc0, sc1):
+        s = sc.stats()
+        # Each request's scope reports ITS plan: one pass, one stream,
+        # its own bytes — not the group totals.
+        assert s["passes"] == 1
+        assert s["streams"] == 1
+        assert s["bytes_streamed"] == X.m.nbytes()
+        assert s["pass_bytes_in"] == (X.m.nbytes(),)
+        assert s["partition_steps"] >= 1
+    # The root scope saw the group: 2 logical passes, 1 physical stream.
+    st = mz.exec_stats()
+    assert st["passes"] == 2 and st["streams"] == 1
+    assert float(np.asarray(h0.value.logical_data()).ravel()[0]) == \
+        pytest.approx(a.mean(0)[0], rel=1e-4)
+    assert h1.value is not None
+
+
+# ---------------------------------------------------------------------------
+# Fault injection: no partial sinks for ANY member
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_interrupted_group_leaves_no_member_partial(prefetch):
+    a = _x(800, 4, seed=11)
+    Xm, store = flaky_matrix(a, 1)
+    X = fm.FM(Xm)
+    reqs = [fm.colMeans(X), fm.crossprod(X)]
+    nodes = [n for r in reqs for n in toposort([r.m.node])]
+    with pytest.raises(Exception, match="staging failure"):
+        fm.batch(*reqs, prefetch=prefetch)
+    assert store.failed
+    # NO member of the interrupted group registered anything.
+    assert_no_partial_results(*nodes)
+    store.heal()
+    mu_m, ctp_m = fm.batch(*reqs, prefetch=prefetch)
+    np.testing.assert_allclose(fm.as_np(mu_m).ravel(), a.mean(0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(ctp_m),
+                               a.T.astype(np.float64) @ a, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# Partition reuse: resident final partition served instead of re-read
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_intra_plan_partition_reuse(prefetch):
+    """PCA's shape — crossprod(X - colMeans(X)): the pass-2 contraction
+    streams X under the SAME partition schedule as the pass-1 moments, so
+    the final partition must not be re-staged.  (A sweep pass with an
+    n-row OUTPUT halves its partition rows and legitimately re-reads.)"""
+    a = _x(1000, 4, seed=12)
+    X = fm.conv_R2FM(a, host=True)
+    C = fm.crossprod(X - fm.colMeans(X))
+    plan = Plan([C.m])
+    assert plan.n_passes == 2
+    assert plan.passes[0].partition_rows == plan.passes[1].partition_rows
+    mz.reset_exec_stats()
+    (cm,) = fm.materialize(C, mode="ooc", prefetch=prefetch)
+    st = mz.exec_stats()
+    assert st["prefetch_reuse_hits"] == 1
+    c = a - a.mean(0)
+    np.testing.assert_allclose(fm.as_np(cm), c.T.astype(np.float64) @ c,
+                               rtol=2e-3)
+
+
+def test_iteration_scope_reuse_across_materializes():
+    """Inside fm.inspect_iterations(), iteration i+1's stream starts from
+    iteration i's resident final partition; outside, residency is dropped."""
+    a = _x(1000, 4, seed=13)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    with fm.inspect_iterations():
+        for _ in range(3):
+            fm.materialize(fm.colMeans(X), mode="ooc", reuse_plans=False)
+    st = mz.exec_stats()
+    assert st["prefetch_reuse_hits"] == 2    # iterations 2 and 3
+    # Residency must not outlive the scope.
+    mz.reset_exec_stats()
+    fm.materialize(fm.colSds(X), mode="ooc")
+    assert mz.exec_stats()["prefetch_reuse_hits"] == 0
+
+
+def test_iteration_scope_reuse_across_batches():
+    a = _x(1000, 4, seed=14)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    with fm.inspect_iterations():
+        fm.batch(fm.colMeans(X), fm.sum_(X))
+        fm.batch(fm.colMeans(X * 2.0), fm.sum_(X * 0.5))
+    st = mz.exec_stats()
+    assert st["streams"] == 2 and st["passes"] == 4
+    assert st["prefetch_reuse_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Co-schedule unit behavior + explain view
+# ---------------------------------------------------------------------------
+
+def test_coschedule_groups_by_subset():
+    x, y, z = object(), object(), object()
+    keys = [(100, frozenset({id(x)})),
+            (100, frozenset({id(x), id(y)})),
+            (100, frozenset({id(z)})),
+            (200, frozenset({id(x)}))]
+    groups = coschedule(keys)
+    assert sorted(map(sorted, groups)) == [[0, 1], [2], [3]]
+
+
+def test_stream_group_key_is_physical_identity():
+    a = _x(300, 3, seed=15)
+    X = fm.conv_R2FM(a, host=True)
+    k1 = stream_group_key(Plan([fm.colMeans(X).m]).passes[0])
+    k2 = stream_group_key(Plan([fm.colSds(X).m]).passes[0])
+    assert k1 == k2
+
+
+def test_explain_batch_group_view():
+    a = _x(400, 3, seed=16)
+    X = fm.conv_R2FM(a, host=True)
+    out = fm.explain_batch(fm.colMeans(X),
+                           (fm.colSds(X), fm.crossprod(X)))
+    assert "members=2" in out
+    assert "once" in out and "serially" in out
+    # Nothing executed, nothing registered.
+    assert fm.colMeans(X).is_virtual
+
+
+def test_batch_trace_has_stream_spans():
+    a = _x(600, 3, seed=17)
+    X = fm.conv_R2FM(a, host=True)
+    with fm.trace():
+        fm.batch(fm.colMeans(X), fm.crossprod(X))
+    names = [e["name"] for e in fm.trace_events()]
+    assert "batch" in names
+    assert names.count("stream") == 1
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: random 2–3-plan batches over shared sources == serial oracle
+# ---------------------------------------------------------------------------
+
+def _rand_request(rng, X, Y):
+    """One random lazy request over the shared sources."""
+    base = [X, Y, X + Y, X * 0.5, fm.sqrt(fm.abs_(X) + 1.0)][rng.integers(5)]
+    op = rng.integers(4)
+    if op == 0:
+        return fm.colMeans(base)
+    if op == 1:
+        return fm.sum_(base)
+    if op == 2:
+        return fm.crossprod(base)
+    return fm.colMaxs(base)
+
+
+def _oracle(req_fm, X_a, Y_a):
+    """Numpy value of a request built by _rand_request."""
+    (m,) = fm.materialize(req_fm, mode="ooc")
+    return fm.as_np(m)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batch_fuzz_matches_serial(seed):
+    rng = np.random.default_rng(100 + seed)
+    a = (rng.normal(size=(700, 4)) * 2).astype(np.float32)
+    b = (rng.normal(size=(700, 4)) + 1).astype(np.float32)
+    X = fm.conv_R2FM(a, host=True)
+    Y = fm.conv_R2FM(b, host=True)
+    k = int(rng.integers(2, 4))
+    reqs = [_rand_request(rng, X, Y) for _ in range(k)]
+    batched = fm.batch(*reqs)
+    for req, got in zip(reqs, batched):
+        want = _oracle(req, a, b)
+        np.testing.assert_allclose(fm.as_np(got), want, rtol=2e-3,
+                                   atol=1e-4)

@@ -179,6 +179,36 @@ def test_cache_no_collision_with_and_without_epilogue():
                                rtol=1e-5)
 
 
+def test_cache_no_collision_on_requested_epilogue_roots():
+    """Which epilogue nodes are REQUESTED is part of the cache key.
+
+    Regression: materialize([e, sum(e)]) vs materialize([sum(e)]) share the
+    whole DAG structure; only the request set differs.  Before the fix the
+    second borrowed the first's template (whose compiled epilogue returns
+    BOTH roots) and positional result alignment handed ``sum(e)`` the value
+    of ``e``."""
+    a = _x()
+    X = fm.conv_R2FM(a)
+
+    def build():
+        e = fm.sqrt(fm.abs_(fm.colSums(X ** 2) - fm.colSums(X) / 2.0))
+        return e, fm.sum_(e)
+
+    ref_e = np.sqrt(np.abs((a.astype(np.float64) ** 2).sum(0)
+                           - a.astype(np.float64).sum(0) / 2.0))
+    with cache_activity() as act:
+        e1, s1 = build()
+        e_m, s_m = fm.materialize(e1, s1)
+        _, s2 = build()
+        (solo_m,) = fm.materialize(s2)
+    assert_activity(act, misses=2, hits=0)
+    np.testing.assert_allclose(fm.as_np(e_m).reshape(-1), ref_e, rtol=1e-4)
+    np.testing.assert_allclose(float(fm.as_scalar(s_m)), ref_e.sum(),
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(fm.as_scalar(solo_m)), ref_e.sum(),
+                               rtol=1e-4)
+
+
 def test_cached_plan_reuse_with_epilogue_iteration():
     """IRLS-style loop: iteration N+1 (new Small beta) borrows the cached
     executable — including its epilogue — and produces correct results."""

@@ -18,6 +18,10 @@ Knobs (used by CI):
   FUZZ_EXAMPLES   number of random programs (default 25; PR fuzz job 200,
                   nightly cron 2000)
   FUZZ_SEED       base seed (default 0; PRs pin it, nightly varies it)
+  FUZZ_BATCH      when set (nightly), every program ALSO executes through
+                  ``fm.batch`` with its outputs split into 2–3 independent
+                  requests over the shared sources — the co-scheduled
+                  stream groups must match the same numpy oracle
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ from repro.core import materialize as mz
 
 EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "25"))
 BASE_SEED = int(os.environ.get("FUZZ_SEED", "0"))
+FUZZ_BATCH = os.environ.get("FUZZ_BATCH", "") not in ("", "0")
 
 CELLS = [(backend, mode)
          for backend in ("xla", "pallas")
@@ -335,10 +340,11 @@ def eval_numpy(prog: Program) -> List[np.ndarray]:
     return [np.asarray(regs[i], np.float64) for i in prog.outputs]
 
 
-def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
+def _lazy_outputs(prog: Program, mode: str) -> list:
+    """Build the program's lazy output handles (shared by the fused-serial
+    and batched evaluation arms)."""
     xn = _input(prog)
     X = fm.conv_R2FM(xn, host=(mode == "ooc"))
-    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
     regs = [X]
 
     def f1(v, f):
@@ -389,9 +395,33 @@ def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
             regs.append(fm.crossprod(regs[op[1]], b))
         else:  # pragma: no cover
             raise AssertionError(f"unknown op {k}")
-    outs = fm.materialize(*[regs[i] for i in prog.outputs],
-                          mode=exec_mode, backend=backend)
+    return [regs[i] for i in prog.outputs]
+
+
+def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
+    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
+    lazies = _lazy_outputs(prog, mode)
+    outs = fm.materialize(*lazies, mode=exec_mode, backend=backend)
     return [np.asarray(fm.as_np(o), np.float64) for o in outs]
+
+
+def eval_engine_batched(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
+    """The FUZZ_BATCH arm: the same program, but its outputs split
+    round-robin into 2–3 independent requests over the shared sources and
+    executed through ``fm.batch`` — the co-scheduler must fuse the requests'
+    streams without changing any value."""
+    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
+    lazies = _lazy_outputs(prog, mode)
+    k = min(3, len(lazies))
+    reqs = [tuple(lazies[j] for j in range(i, len(lazies), k))
+            for i in range(k)]
+    results = fm.batch(*reqs, mode=exec_mode, backend=backend)
+    out: List[Optional[np.ndarray]] = [None] * len(lazies)
+    for i, res in enumerate(results):
+        vals = res if isinstance(res, list) else [res]
+        for j, v in zip(range(i, len(lazies), k), vals):
+            out[j] = np.asarray(fm.as_np(v), np.float64)
+    return out
 
 
 def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
@@ -399,15 +429,19 @@ def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
     None) instead of raising, so the shrinker can probe cheaply."""
     try:
         refs = eval_numpy(prog)
-        gots = eval_engine(prog, backend, mode)
-        for o, (got, ref) in zip(prog.outputs, zip(gots, refs)):
-            scale = max(1.0, float(np.max(np.abs(ref))))
-            err = float(np.max(np.abs(got - ref))) / scale
-            if not np.isfinite(got).all() and np.isfinite(ref).all():
-                return f"r{o}: non-finite engine result"
-            if err > 2e-3:
-                return (f"r{o}: normalized max abs err {err:.2e} "
-                        f"(got[0,0]={got.flat[0]!r} ref[0,0]={ref.flat[0]!r})")
+        arms = [("", eval_engine(prog, backend, mode))]
+        if FUZZ_BATCH:
+            arms.append(("batched:", eval_engine_batched(prog, backend, mode)))
+        for label, gots in arms:
+            for o, (got, ref) in zip(prog.outputs, zip(gots, refs)):
+                scale = max(1.0, float(np.max(np.abs(ref))))
+                err = float(np.max(np.abs(got - ref))) / scale
+                if not np.isfinite(got).all() and np.isfinite(ref).all():
+                    return f"{label}r{o}: non-finite engine result"
+                if err > 2e-3:
+                    return (f"{label}r{o}: normalized max abs err {err:.2e} "
+                            f"(got[0,0]={got.flat[0]!r} "
+                            f"ref[0,0]={ref.flat[0]!r})")
         return None
     except AssertionError:
         raise
@@ -569,6 +603,33 @@ def test_known_multipass_program_parity():
     for backend, mode in CELLS:
         err = check_cell(prog, backend, mode)
         assert err is None, f"cell=({backend},{mode}): {err}"
+
+
+def test_known_program_batched_parity():
+    """Always-on anchor for the FUZZ_BATCH arm: a hand-pinned multi-output
+    multipass program executed through ``fm.batch`` (outputs split into
+    independent co-scheduled requests) matches the oracle on every cell,
+    independent of the nightly FUZZ_BATCH budget."""
+    prog = Program(
+        seed=9876, n=96, p=3, dtype="f32",
+        ops=[
+            ("colsums", 0),                # -> r1  pass-1 sink
+            ("escalar", 1, "div", 2.0),    # -> r2  pass-1 epilogue
+            ("sweeprow", 0, 2, "sub"),     # -> r3  PASS-2 row-local sweep
+            ("sapply", 3, "abs"),          # -> r4  pass-2 chain
+            ("colmaxs", 4),                # -> r5  pass-2 sink
+            ("sumall", 0),                 # -> r6  independent sink
+        ],
+        outputs=[3, 5, 6])
+    refs = eval_numpy(prog)
+    for backend, mode in CELLS:
+        gots = eval_engine_batched(prog, backend, mode)
+        for o, got, ref in zip(prog.outputs, gots, refs):
+            scale = max(1.0, float(np.max(np.abs(ref))))
+            err = float(np.max(np.abs(got - ref))) / scale
+            assert err <= 2e-3, (
+                f"cell=({backend},{mode}) r{o}: batched err {err:.2e}")
+        mz.clear_plan_cache()
 
 
 def test_generator_emits_multipass_programs():
