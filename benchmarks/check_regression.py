@@ -45,6 +45,8 @@ except ImportError:  # direct `python benchmarks/check_regression.py`
     import algorithms_bench
     import fusion_ablation
 
+from repro.launch import serve as serve_loadgen
+
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "baseline.json")
 
@@ -56,17 +58,26 @@ BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 FUSION_ARGS = ["--n", "40000", "--pallas-n", "5000", "--iters", "5",
                "--skip-nofuse"]
 ALGO_ARGS = ["--n", "12000", "--pallas-n", "3000", "--iters", "3"]
+#: The serving load generator (ISSUE 8): serial vs served arms over one
+#: named disk matrix.  The arms run with mid-stream admission off and
+#: one wave per admission window, so the gated counters are exact.
+SERVE_ARGS = ["--n", "40000", "--p", "8", "--clients", "3", "--waves", "2",
+              "--partition-kib", "64", "--name", "ci_serve_x"]
 
 #: Engine-evidence fields compared EXACTLY (any drift fails the gate).
 #: ``partition_steps`` is deterministic (n and io_partition_bytes are
 #: fixed by the grid); the timing-derived telemetry the rows also carry
-#: (stream_bandwidth_bytes_s, prefetch_wait_frac) is reported, not gated.
-#: ``streams`` (ISSUE 7) is gated exactly: the batched arm reading its
-#: group's sources in ONE streaming drive (vs k serially) is a scheduler
-#: contract, not a timing artifact.
+#: (stream_bandwidth_bytes_s, prefetch_wait_frac, p50/p99 latency) is
+#: reported, not gated.  ``streams`` (ISSUE 7) is gated exactly: the
+#: batched arm reading its group's sources in ONE streaming drive (vs k
+#: serially) is a scheduler contract, not a timing artifact — as are the
+#: serve rows' ``bytes_per_request``/``requests`` (ISSUE 8): the served
+#: arm's bytes-per-request is serial's divided by the window's client
+#: count, or window coalescing has regressed.
 COUNTER_KEYS = ("passes", "passes_over_sources", "bytes_in",
                 "epilogue_launches", "epilogue_launches_per_materialize",
-                "epilogue_nodes", "kernels", "partition_steps", "streams")
+                "epilogue_nodes", "kernels", "partition_steps", "streams",
+                "bytes_per_request", "requests")
 
 GATE_PCT = float(os.environ.get("BENCH_GATE_PCT", "25"))
 #: Absolute per-row slack: most rows are single-digit milliseconds where
@@ -90,8 +101,9 @@ def calibrate() -> float:
 
 
 def _row_key(rec: dict) -> str:
-    parts = [str(rec.get(k)) for k in ("bench", "workload", "algo", "mode",
-                                       "backend") if rec.get(k) is not None]
+    parts = [str(rec.get(k)) for k in ("bench", "workload", "algo", "arm",
+                                       "mode", "backend")
+             if rec.get(k) is not None]
     return "/".join(parts)
 
 
@@ -104,6 +116,7 @@ def collect() -> dict:
         with contextlib.redirect_stdout(buf):
             fusion_ablation.run(FUSION_ARGS)
             algorithms_bench.run(ALGO_ARGS)
+            serve_loadgen.run(SERVE_ARGS)
     finally:
         matrix_mod.IO_PARTITION_BYTES = old_io
     rows = {}
@@ -171,7 +184,8 @@ def main(argv=None) -> int:
         payload = {
             "calibration_us": round(cal_us, 1),
             "grid": {"fusion_ablation": FUSION_ARGS,
-                     "algorithms_bench": ALGO_ARGS},
+                     "algorithms_bench": ALGO_ARGS,
+                     "serve_loadgen": SERVE_ARGS},
             "rows": rows,
         }
         with open(args.baseline, "w", encoding="utf-8") as fh:
@@ -182,7 +196,8 @@ def main(argv=None) -> int:
 
     with open(args.baseline, encoding="utf-8") as fh:
         baseline = json.load(fh)
-    grid = {"fusion_ablation": FUSION_ARGS, "algorithms_bench": ALGO_ARGS}
+    grid = {"fusion_ablation": FUSION_ARGS, "algorithms_bench": ALGO_ARGS,
+            "serve_loadgen": SERVE_ARGS}
     if baseline.get("grid") != grid:
         print("check_regression: grid definition changed — rerun with "
               "--update and commit the new baseline")

@@ -81,6 +81,37 @@ def _request_stack(req: BatchRequest):
     return tuple(cur) + tuple(extra)
 
 
+def _plan_request(req: BatchRequest, backend: str, mesh,
+                  reuse_plans: bool) -> bool:
+    """Build ``req``'s own Plan + acquire its (possibly cached) template.
+    Returns False for a pure pass-through request (no virtual outputs).
+    Thread-safe: plan construction classifies live DAG node state, so it
+    runs under materialize's _DAG_LOCK (fm.serve plans on many caller
+    threads concurrently)."""
+    virtuals = [m for m in req.outputs if m.is_virtual]
+    if not virtuals:
+        return False
+    with metrics.use_scopes(_request_stack(req)):
+        metrics.inc("materialize_calls")
+        with mz._DAG_LOCK:
+            req.plan = Plan(virtuals)
+            req.exec_plan = mz._acquire_exec_plan(
+                req.plan, backend, mesh, reuse_plans)
+    prog = req.exec_plan.program(backend)
+    req.pass_progs = getattr(prog, "passes", None) or [prog]
+    return True
+
+
+def pass_group_key(req: BatchRequest, r: int) -> tuple:
+    """The co-schedule key of request ``req``'s pass ``r`` — its
+    `fusion.stream_group_key` over the request's OWN source matrices."""
+    own_ps = req.plan.passes[r]
+    src_off = sum(len(p.sources) for p in req.plan.passes[:r])
+    srcs = [m for _, m in req.plan.sources][
+        src_off:src_off + len(own_ps.sources)]
+    return stream_group_key(own_ps, srcs)
+
+
 def _member_for(req: BatchRequest, r: int):
     """Build the `_PassExec` for request ``req``'s pass ``r``: template
     PassSchedule/program (the possibly-borrowed cached plan) driven with
@@ -116,31 +147,14 @@ def plan_rounds(requests, *, backend: Optional[str] = None,
     read.  Requests whose outputs are all physical come back with
     ``plan is None`` (pure pass-through)."""
     backend = lowering.resolve_backend(backend)
-    active = []
-    for req in requests:
-        virtuals = [m for m in req.outputs if m.is_virtual]
-        if not virtuals:
-            continue
-        with metrics.use_scopes(_request_stack(req)):
-            metrics.inc("materialize_calls")
-            req.plan = Plan(virtuals)
-            req.exec_plan = mz._acquire_exec_plan(
-                req.plan, backend, mesh, reuse_plans)
-        prog = req.exec_plan.program(backend)
-        req.pass_progs = getattr(prog, "passes", None) or [prog]
-        active.append(req)
+    active = [req for req in requests
+              if _plan_request(req, backend, mesh, reuse_plans)]
 
     rounds = []
     n_rounds = max((req.n_passes for req in active), default=0)
     for r in range(n_rounds):
         live = [req for req in active if r < req.n_passes]
-        keys = []
-        for req in live:
-            own_ps = req.plan.passes[r]
-            src_off = sum(len(p.sources) for p in req.plan.passes[:r])
-            srcs = [m for _, m in req.plan.sources][
-                src_off:src_off + len(own_ps.sources)]
-            keys.append(stream_group_key(own_ps, srcs))
+        keys = [pass_group_key(req, r) for req in live]
         rounds.append([[(live[i], r) for i in group]
                        for group in coschedule(keys)])
     return active, rounds

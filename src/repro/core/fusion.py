@@ -41,6 +41,7 @@ reports two passes over its bytes.
 """
 from __future__ import annotations
 
+import threading
 from typing import Sequence
 
 import jax.numpy as jnp
@@ -368,18 +369,26 @@ class Plan:
         self.partition_rows = self.passes[0].partition_rows
         self.ir = self.passes[0].ir
         self._programs: dict[str, "object"] = {}
+        # Cached plans are borrowed by concurrent callers (materialize,
+        # fm.batch, fm.serve workers); the lazy compile below must not
+        # race itself or torn-publish a half-built MultiPassProgram.
+        self._prog_lock = threading.Lock()
 
     def program(self, backend: str):
         """The lowered executable for ``backend``: a `LoweredProgram` for a
-        one-pass plan, a `MultiPassProgram` otherwise (core/lowering.py)."""
+        one-pass plan, a `MultiPassProgram` otherwise (core/lowering.py).
+        Thread-safe: first caller compiles, concurrent callers wait."""
         prog = self._programs.get(backend)
         if prog is None:
-            from . import lowering  # deferred: lowering pulls in kernels
-            compiled = [lowering.lower(ps, ps.ir, backend)
-                        for ps in self.passes]
-            prog = (compiled[0] if len(compiled) == 1
-                    else lowering.MultiPassProgram(compiled))
-            self._programs[backend] = prog
+            with self._prog_lock:
+                prog = self._programs.get(backend)
+                if prog is None:
+                    from . import lowering  # deferred: lowering pulls in kernels
+                    compiled = [lowering.lower(ps, ps.ir, backend)
+                                for ps in self.passes]
+                    prog = (compiled[0] if len(compiled) == 1
+                            else lowering.MultiPassProgram(compiled))
+                    self._programs[backend] = prog
         return prog
 
     def staged_sources(self) -> list[tuple[int, FMMatrix]]:

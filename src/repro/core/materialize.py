@@ -67,6 +67,25 @@ except ImportError:  # pragma: no cover
 _PLANS: "OrderedDict" = OrderedDict()
 PLAN_CACHE_LIMIT = 256
 
+# Thread-safety (ISSUE 8 audit) — two locks with distinct jobs:
+#
+# _PLANS_LOCK guards the cache OrderedDict itself (get / LRU move_to_end /
+# insert / evict).  Eviction racing a borrow is safe WITHOUT further
+# locking because eviction only drops the cache's reference: a borrower
+# holds a strong reference to the template Plan for the whole execution,
+# and template nodes are never mutated by executions (results land on the
+# requesting plan's own nodes via _store_results(onto=...)).
+#
+# _DAG_LOCK serializes the two operations that touch LIVE DAG node
+# metadata (cached_store / save): plan construction (which classifies
+# nodes by that state) and result registration.  Concurrent requests may
+# share upstream nodes (fm.serve, threads over one traced graph), so a
+# registration must never interleave with another thread's classification
+# pass.  Both are cheap relative to execution; execution itself runs
+# outside the lock.
+_PLANS_LOCK = threading.Lock()
+_DAG_LOCK = threading.RLock()
+
 # Execution counters — the observable evidence the benchmarks and tests
 # assert on (one fused pass, one epilogue launch, compile-once/stream-many).
 # ``epilogue_host_inputs`` counts host (numpy/memmap) buffers that reached
@@ -93,6 +112,7 @@ EXEC_COUNTERS = (
     "partition_steps",
     "passes",
     "streams",
+    "midstream_admits",
     "prefetch_reuse_hits",
     "epilogue_launches",
     "epilogue_host_inputs",
@@ -116,7 +136,8 @@ def reset_exec_stats():
 
 
 def clear_plan_cache():
-    _PLANS.clear()
+    with _PLANS_LOCK:
+        _PLANS.clear()
 
 
 def _mesh_key(mesh):
@@ -158,52 +179,27 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
                                backend=backend)
         return [_result_of(m) for m in mats]
 
-    plan = Plan(virtuals)
-    exec_plan = _acquire_exec_plan(plan, backend, mesh, reuse_plans)
+    with _DAG_LOCK:
+        plan = Plan(virtuals)
+        exec_plan = _acquire_exec_plan(plan, backend, mesh, reuse_plans)
 
-    # A cached plan's nodes belong to the FIRST caller's live DAG: its
-    # persisted results (set_mate_level cut points used by that DAG's other
-    # virtual matrices) must survive us borrowing the plan.  Snapshot them,
-    # scrub for execution (stale cached_store would flip _is_source() on a
-    # retrace — e.g. the same signature executing whole after ooc — and
-    # silently skip those nodes; _store_results also zeroed save flags, and
-    # the signature guarantees the new plan's flags match construction
-    # time), execute, copy the results onto the new plan's nodes, then
-    # restore the template exactly as we found it.
-    # A cached plan built over the SAME node objects (a retry after a
-    # failed execution left the entry behind) needs no borrowing dance:
-    # results land on the right nodes directly, and snapshot-restore would
-    # clobber them with the pre-failure (empty) state.
-    borrowed = exec_plan is not plan and any(
-        a is not b for a, b in zip(exec_plan.result_nodes(),
-                                   plan.result_nodes()))
-    snapshot = None
-    if borrowed:
-        snapshot = [(n, n.cached_store, n.save)
-                    for n in exec_plan.result_nodes()]
-        for (n, _, _), new_n in zip(snapshot, plan.result_nodes()):
-            n.cached_store = None
-            n.save = new_n.save
-    try:
-        with TRACER.span("materialize", backend=backend,
-                         passes=plan.n_passes, outputs=len(virtuals),
-                         cached=exec_plan is not plan):
-            _execute(exec_plan, mode=mode, mesh=mesh, donate=donate,
-                     sources=[m for _, m in plan.sources],
-                     bc_sources=[m for _, m in plan.broadcast_sources],
-                     epi_sources=[m for _, m in plan.epilogue_sources],
-                     smalls=plan.small_values(), prefetch=prefetch,
-                     backend=backend)
-        if borrowed:
-            for old_n, new_n in zip(exec_plan.result_nodes(),
-                                    plan.result_nodes()):
-                new_n.cached_store = old_n.cached_store
-                new_n.save = None
-    finally:
-        if snapshot is not None:
-            for n, cs, sv in snapshot:
-                n.cached_store = cs
-                n.save = sv
+    # A cached plan's nodes belong to the FIRST caller's live DAG.  The
+    # execution reads schedule/program state from the (possibly borrowed)
+    # template but registers results onto THIS call's own nodes
+    # (_store_results onto= — the same borrow discipline as fm.batch), so
+    # the template is never mutated: its persisted results survive, a
+    # retry after a failed execution sees clean state, and concurrent
+    # materializes of structurally identical plans (fm.serve workers) can
+    # share one cache entry safely.
+    with TRACER.span("materialize", backend=backend,
+                     passes=plan.n_passes, outputs=len(virtuals),
+                     cached=exec_plan is not plan):
+        _execute(exec_plan, onto=plan, mode=mode, mesh=mesh, donate=donate,
+                 sources=[m for _, m in plan.sources],
+                 bc_sources=[m for _, m in plan.broadcast_sources],
+                 epi_sources=[m for _, m in plan.epilogue_sources],
+                 smalls=plan.small_values(), prefetch=prefetch,
+                 backend=backend)
     return [_result_of(m) for m in mats]
 
 
@@ -225,20 +221,24 @@ def _acquire_exec_plan(plan: Plan, backend: str, mesh, reuse_plans: bool):
     than reuse an executable built for different tiling.  (plan.signature()
     itself embeds the pass structure: node roles carry pass numbers, so
     one-pass and two-pass cuts never collide.)
+
+    Thread-safe: lookup, LRU touch and eviction happen under _PLANS_LOCK
+    (see the lock's comment for why eviction racing a borrow is benign).
     """
     if not reuse_plans:
         return plan
     sig = (plan.signature(), plan.pass_key(), backend, _mesh_key(mesh))
-    cached = _PLANS.get(sig)
-    if cached is not None:
-        metrics.inc("plan_cache_hits")
-        _PLANS.move_to_end(sig)  # LRU touch
-        return cached
-    metrics.inc("plan_cache_misses")
-    _PLANS[sig] = plan
-    while len(_PLANS) > PLAN_CACHE_LIMIT:
-        _PLANS.popitem(last=False)  # evict least-recently-used
-    return plan
+    with _PLANS_LOCK:
+        cached = _PLANS.get(sig)
+        if cached is not None:
+            metrics.inc("plan_cache_hits")
+            _PLANS.move_to_end(sig)  # LRU touch
+            return cached
+        metrics.inc("plan_cache_misses")
+        _PLANS[sig] = plan
+        while len(_PLANS) > PLAN_CACHE_LIMIT:
+            _PLANS.popitem(last=False)  # evict least-recently-used
+        return plan
 
 
 # ---------------------------------------------------------------------------
@@ -414,6 +414,22 @@ def _group_staging(members):
     return group_pairs, maps
 
 
+def _count_member_scopes(member, ambient, stream_scopes: list):
+    """One member's request-scope share of a stream: its own plan's pass +
+    bytes (what a solo run of that request would have read), recorded on
+    every captured scope that is not already ambient on the executor."""
+    own = None
+    for sc in member.scopes:
+        if sc in ambient:
+            continue
+        if own is None:
+            own = member.ps.bytes_in(member.sources)
+        sc.inc("passes", 1)
+        sc.inc("bytes_streamed", own)
+        if sc not in stream_scopes:
+            stream_scopes.append(sc)
+
+
 def _count_stream(members, union_bytes: int):
     """Stream accounting.  Root + the executor's ambient scopes record the
     PHYSICAL sweep — one stream, union bytes read once, one logical pass
@@ -427,16 +443,23 @@ def _count_stream(members, union_bytes: int):
     ambient = set(metrics.REGISTRY.scopes())
     stream_scopes: list = []
     for m in members:
-        own = None
-        for sc in m.scopes:
-            if sc in ambient:
-                continue
-            if own is None:
-                own = m.ps.bytes_in(m.sources)
-            sc.inc("passes", 1)
-            sc.inc("bytes_streamed", own)
-            if sc not in stream_scopes:
-                stream_scopes.append(sc)
+        _count_member_scopes(m, ambient, stream_scopes)
+    for sc in stream_scopes:
+        sc.inc("streams", 1)
+
+
+def _count_admitted(member):
+    """Accounting for a mid-stream-admitted member (ISSUE 8): its logical
+    pass joins the CURRENT physical sweep — root passes +1 but streams
+    unchanged, since no new partition sweep starts.  Root bytes for the
+    catch-up prefix are added as those partitions actually stage
+    (`_catch_up`); the member's own request scopes see what a solo run
+    would have reported (one stream, its full plan bytes)."""
+    metrics.inc("passes")
+    metrics.inc("midstream_admits")
+    ambient = set(metrics.REGISTRY.scopes())
+    stream_scopes: list = []
+    _count_member_scopes(member, ambient, stream_scopes)
     for sc in stream_scopes:
         sc.inc("streams", 1)
 
@@ -508,11 +531,17 @@ def _run_whole_group(members, mesh=None):
     return None
 
 
-def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
-             sources=None, smalls=None, prefetch: Optional[bool] = None,
-             backend: Optional[str] = None, epi_sources=None,
-             bc_sources=None):
+def _execute(plan: Plan, *, onto: Optional[Plan] = None, mode: str = "auto",
+             mesh=None, donate: bool = True, sources=None, smalls=None,
+             prefetch: Optional[bool] = None, backend: Optional[str] = None,
+             epi_sources=None, bc_sources=None):
     """Run every pass of ``plan`` in order, then register the results.
+
+    ``onto`` is the equal-signature plan results belong to (the caller's
+    own trace) when ``plan`` is a borrowed cached template; the template's
+    schedules/programs drive execution, the out specs and registration
+    target ``onto``'s nodes, and the template is never mutated.  Defaults
+    to ``plan`` itself.
 
     A multi-pass plan (fusion.PassSchedule) carries each pass's finalized
     sinks + epilogue outputs forward as the next pass's ``bindings``
@@ -528,14 +557,15 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     of) the same physical matrices: the re-drive then starts from the
     resident blocks instead of re-reading them (``prefetch_reuse_hits``).
     """
+    own = onto if onto is not None else plan
     if sources is None:
-        sources = [m for _, m in plan.sources]
+        sources = [m for _, m in own.sources]
     if bc_sources is None:
-        bc_sources = [m for _, m in plan.broadcast_sources]
+        bc_sources = [m for _, m in own.broadcast_sources]
     if epi_sources is None:
-        epi_sources = [m for _, m in plan.epilogue_sources]
+        epi_sources = [m for _, m in own.epilogue_sources]
     if smalls is None:
-        smalls = plan.small_values()
+        smalls = own.small_values()
     prog = plan.program(lowering.resolve_backend(backend))
     pass_progs = getattr(prog, "passes", None) or [prog]
     mode = _pick_mode_src(sources, mode)
@@ -565,7 +595,13 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
         bindings = {nid: carried[nid] for nid in ps.binding_ids}
         for nid, mat in ps.broadcast_source_pairs(ps_bc):
             bindings[nid] = _stage_whole(mat)
-        member = _PassExec(ps, pprog, ps_src, smalls, ps_epi, bindings)
+        out_nodes = None
+        if own is not plan:
+            own_ps = own.passes[k]
+            out_nodes = list(zip(ps.row_local_roots + ps.saves,
+                                 own_ps.row_local_roots + own_ps.saves))
+        member = _PassExec(ps, pprog, ps_src, smalls, ps_epi, bindings,
+                           out_nodes=out_nodes)
         t_pass = time.perf_counter()
         with TRACER.span("pass", idx=ps.idx, mode=mode,
                          partition_rows=ps.partition_rows):
@@ -602,7 +638,7 @@ def _execute(plan: Plan, *, mode: str = "auto", mesh=None, donate: bool = True,
     _set_tls_residents(residents)
     metrics.put("pass_bytes_in", tuple(pass_bytes))
     _store_results(plan, finals_all, parts_all, to_host=(mode == "ooc"),
-                   disk_stores=disk_all, epilogue_outs=epi_all)
+                   disk_stores=disk_all, epilogue_outs=epi_all, onto=own)
     return plan
 
 
@@ -679,9 +715,96 @@ def _inline_partitions(src_pairs, rows: int, n: int, donate: bool,
         start = stop
 
 
+def _alloc_out_targets(member, to_host: bool):
+    """Allocate a member's long-dimension output targets before its first
+    partition step."""
+    from .. import storage  # deferred: storage depends on core.matrix
+    for tmpl, spec in member.out_nodes:
+        target = spec.save or ("host" if to_host else "device")
+        if target == "disk":
+            # Write-through spill: the long-dimension output streams
+            # into a preallocated on-disk matrix, partition by
+            # partition — it never exists whole in RAM.  Works for any
+            # pass: scale(X, save='disk') spills the PASS-2 sweep
+            # output out-of-core end to end.
+            member.disk_stores[tmpl.id] = storage.create_matrix(
+                storage.spill_path(spec.name), (spec.nrow, spec.ncol),
+                dtypes.np_equiv(spec.dtype))
+        elif target == "host":
+            member.host_bufs[tmpl.id] = np.empty(
+                (spec.nrow, spec.ncol), dtypes.np_equiv(spec.dtype))
+
+
+def _join_member(member, members, maps, stacks, joined, group_keys,
+                 to_host: bool, start: int):
+    """Splice a mid-stream-admitted member into a live sweep at a
+    partition boundary (ISSUE 8).  The member consumes every partition
+    from ``start`` on alongside the group, then `_catch_up` re-drives the
+    prefix it missed.  Requirements checked here:
+
+    * its staged sources must be a subset of the group's (it adds
+      consumers to already-staged blocks, never new staging);
+    * its long-dimension outputs must be row-addressed (host or disk
+      targets) — device-resident outputs concatenate in partition order,
+      which a late joiner would scramble.  Sink/epilogue-only plans (the
+      typical serving analytics shape) always qualify.
+    """
+    mp = {}
+    for nid, mat in member.ps.staged_sources(member.sources):
+        if id(mat) not in group_keys:
+            raise ValueError(
+                "mid-stream admission requires the member's staged sources "
+                "to be a subset of the live group's")
+        mp[nid] = id(mat)
+    if any((spec.save or ("host" if to_host else "device")) == "device"
+           for _, spec in member.out_nodes):
+        raise ValueError(
+            "mid-stream admission cannot take device-resident "
+            "long-dimension outputs (order-dependent concatenation)")
+    _alloc_out_targets(member, to_host)
+    members.append(member)
+    maps.append(mp)
+    stacks.append(_member_stack(member))
+    joined[len(members) - 1] = start
+    _count_admitted(member)
+
+
+def _catch_up(members, maps, stacks, joined, group_pairs, rows: int,
+              donate: bool):
+    """Re-drive the partition prefix [0, join_start) that mid-stream
+    admitted members missed.  Sink combines are order-independent and late
+    long-dimension outputs are row-addressed (enforced by `_join_member`),
+    so sweeping the prefix after the tail is exact."""
+    from ..storage.prefetch import stage_block
+    max_join = max(joined.values())
+    late_keys = {key for idx in joined for key in maps[idx].values()}
+    pairs = [(key, mat) for key, mat in group_pairs if key in late_keys]
+    start = 0
+    with TRACER.span("catch_up", members=len(joined), upto=max_join):
+        while start < max_join:
+            stop = min(start + rows, max_join)
+            blocks = {key: stage_block(mat, start, stop, donate=donate)
+                      for key, mat in pairs}
+            metrics.inc("bytes_streamed",
+                        sum(int(getattr(b, "nbytes", 0))
+                            for b in blocks.values()))
+            live = [i for i, j0 in joined.items() if j0 > start]
+            with TRACER.span("partition", start=start, stop=stop):
+                for pos, i in enumerate(live):
+                    m, mp, stack = members[i], maps[i], stacks[i]
+                    donate_blocks = donate and pos == len(live) - 1
+                    with _in_stack(stack):
+                        outputs = _member_step(
+                            m, blocks, mp, start, stop,
+                            donate_blocks=donate_blocks, idx=i)
+                    m.route_outputs(start, stop, outputs)
+            start = stop
+
+
 def _run_stream_group(members, *, to_host: bool, donate: bool = True,
                       prefetch: Optional[bool] = None, residents=None,
-                      capture: bool = False):
+                      capture: bool = False, admit=None,
+                      depth: Optional[int] = None):
     """Stream ONE co-scheduled group of member passes partition by
     partition: one prefetcher drive over the UNION of the members' staged
     sources, every member's step consuming each staged partition while it
@@ -693,6 +816,14 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
     ``reuse`` so the last partition is not re-staged.  With ``capture``
     the sweep's OWN final partition is returned as a `_Resident` (its
     blocks are excluded from donation) for the next pass to consume.
+
+    ``admit`` is the mid-stream admission hook (fm.serve): called at every
+    partition boundary with ``(start, stop)``, it may return new
+    `_PassExec` members that join the live sweep from this partition on
+    (`_join_member`); after the main sweep they catch up on the prefix
+    they missed (`_catch_up`).  ``depth`` overrides the prefetch queue
+    depth; None negotiates a group-aware depth
+    (`storage.negotiate_depth`).
     """
     from .. import storage  # deferred: storage depends on core.matrix
 
@@ -704,20 +835,7 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
     _count_stream(members, sum(mat.nbytes() for _, mat in group_pairs))
 
     for m in members:
-        for tmpl, spec in m.out_nodes:
-            target = spec.save or ("host" if to_host else "device")
-            if target == "disk":
-                # Write-through spill: the long-dimension output streams
-                # into a preallocated on-disk matrix, partition by
-                # partition — it never exists whole in RAM.  Works for any
-                # pass: scale(X, save='disk') spills the PASS-2 sweep
-                # output out-of-core end to end.
-                m.disk_stores[tmpl.id] = storage.create_matrix(
-                    storage.spill_path(spec.name), (spec.nrow, spec.ncol),
-                    dtypes.np_equiv(spec.dtype))
-            elif target == "host":
-                m.host_bufs[tmpl.id] = np.empty(
-                    (spec.nrow, spec.ncol), dtypes.np_equiv(spec.dtype))
+        _alloc_out_targets(m, to_host)
 
     reuse_map = _reuse_from(residents, group_pairs, rows, n)
     if prefetch is None:
@@ -726,19 +844,32 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
         prefetch = (storage.get_conf("prefetch") and n > rows
                     and any(mat.on_host for _, mat in group_pairs))
     if prefetch:
+        if depth is None:
+            # Group-aware depth: k members consume each staged partition,
+            # so the stager can usefully run further ahead (ISSUE 8).
+            part_nbytes = rows * sum(
+                mat.nbytes() // max(1, mat.shape[0])
+                for _, mat in group_pairs)
+            depth = storage.negotiate_depth(len(members), part_nbytes)
         parts = storage.PartitionPrefetcher(
-            group_pairs, rows, n, donate=donate,
-            depth=storage.get_conf("prefetch_depth"), reuse=reuse_map)
+            group_pairs, rows, n, donate=donate, depth=depth,
+            reuse=reuse_map)
     else:
         parts = _inline_partitions(group_pairs, rows, n, donate,
                                    reuse=reuse_map)
 
+    group_keys = {key for key, _ in group_pairs}
+    joined: dict[int, int] = {}  # member index -> partition start it joined at
     stacks = [_member_stack(m) for m in members]
     captured = None
     try:
         with TRACER.span("stream", members=len(members), rows=rows,
                          reused=len(reuse_map or ())):
             for start, stop, blocks in parts:
+                if admit is not None:
+                    for new_member in admit(start, stop):
+                        _join_member(new_member, members, maps, stacks,
+                                     joined, group_keys, to_host, start)
                 is_final = stop >= n
                 # The final partition's blocks survive the step when they
                 # are being captured for the next pass, or when they CAME
@@ -765,6 +896,8 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
         if hasattr(parts, "close"):
             parts.close()
 
+    if joined:
+        _catch_up(members, maps, stacks, joined, group_pairs, rows, donate)
     _finish_members(members, stacks)
     return captured
 
@@ -773,14 +906,25 @@ def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,
                    disk_stores=None, epilogue_outs=None, onto: Plan = None):
     """Register the execution's values as each result node's cached store.
 
-    ``onto`` is an equal-signature plan to register results ON: a batch
-    member executing through a borrowed cached template reads values keyed
-    by the TEMPLATE's node ids but registers them on its own plan's nodes
-    (positionally aligned — same signature, same deterministic node order),
-    so the template's nodes are never mutated.  Defaults to ``plan``
-    itself (solo materialize, where template borrowing is handled by the
-    snapshot/restore dance in ``materialize``)."""
+    ``onto`` is an equal-signature plan to register results ON: a request
+    executing through a borrowed cached template (solo materialize, batch
+    member, serve member alike) reads values keyed by the TEMPLATE's node
+    ids but registers them on its own plan's nodes (positionally aligned —
+    same signature, same deterministic node order), so the template's
+    nodes are never mutated.  Defaults to ``plan`` itself.
+
+    Runs under _DAG_LOCK: registration flips nodes to physical, and must
+    not interleave with another thread's plan construction over a shared
+    subgraph (ISSUE 8 audit)."""
     onto = onto if onto is not None else plan
+    with _DAG_LOCK:
+        _store_results_locked(plan, onto, sink_finals, out_parts,
+                              to_host=to_host, disk_stores=disk_stores,
+                              epilogue_outs=epilogue_outs)
+
+
+def _store_results_locked(plan, onto, sink_finals, out_parts, *, to_host,
+                          disk_stores, epilogue_outs):
     for node, dst in zip(plan.sinks, onto.sinks):
         arr = sink_finals[node.id]
         dst.cached_store = FMMatrix(
@@ -847,14 +991,15 @@ def _materialize_eager(nodes: Sequence[Node], *, mode: str = "auto",
     temp: list[Node] = []
     ooc = any(isinstance(n, LeafNode) and n.mat.on_host for n in order)
     for n in order:
-        if Plan._is_source(n):
-            continue
-        sub = Plan([wrap(n)])
+        with _DAG_LOCK:
+            if Plan._is_source(n):
+                continue
+            sub = Plan([wrap(n)])
+            if ooc and not n.is_sink:
+                n.save = "host"  # roundtrip the slow tier, as an unfused engine must
         sub_mode = mode
         if mode == "auto":
             sub_mode = "ooc" if ooc else "whole"
-        if ooc and not n.is_sink:
-            n.save = "host"  # roundtrip the slow tier, as an unfused engine must
         _execute(sub, mode=sub_mode, backend=backend)
         temp.append(n)
     return temp

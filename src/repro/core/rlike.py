@@ -560,6 +560,34 @@ def batch(*request_groups, **kw):
     return results
 
 
+def serve(**kw):
+    """fm.serve: start an async multi-tenant serving `Engine`
+    (core/serve.py) — concurrent threads ``submit()`` lazy requests, a
+    short admission window groups strangers' plans by shared sources, and
+    each group streams its matrices ONCE for all members (k requests ×
+    1 stream), with bandwidth admission control and mid-stream admission
+    of late same-group plans.
+
+        with fm.serve(window_ms=5) as eng:
+            h1 = eng.submit(fm.colMeans(X))   # any thread
+            h2 = eng.submit(fm.crossprod(X))  # same window, same stream
+            mu, G = h1.result(), h2.result()
+
+    Keywords are `Engine`'s (window_ms, max_window_requests,
+    max_concurrent_streams, max_inflight_bytes, midstream_admission,
+    mode, backend, donate, prefetch, prefetch_depth, reuse_plans)."""
+    from . import serve as serve_mod
+    return serve_mod.Engine(**kw)
+
+
+def __getattr__(name):
+    # fm.Engine without importing the serving layer at fm import time.
+    if name == "Engine":
+        from .serve import Engine
+        return Engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 def inspect_iterations():
     """fm.inspect_iterations: declare an iterative driver's loop so the
     executor keeps each streaming pass's final staged partition resident

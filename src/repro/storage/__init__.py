@@ -15,7 +15,8 @@ Three pieces, mirroring FlashR's external-memory stack:
 from . import format, prefetch, registry, store
 from .format import (MatrixHeader, create_matrix, open_matrix, read_header,
                      save_matrix)
-from .prefetch import PartitionPrefetcher, PrefetchError, stage_block
+from .prefetch import (PartitionPrefetcher, PrefetchError, negotiate_depth,
+                       stage_block)
 from .registry import (get_conf, get_dense_matrix, list_matrices,
                        load_dense_matrix, save_dense_matrix, set_conf,
                        spill_path)
@@ -26,5 +27,6 @@ __all__ = [
     "MatrixHeader", "MmapStore", "PartitionPrefetcher", "PrefetchError",
     "create_matrix", "open_matrix", "read_header", "save_matrix",
     "get_conf", "get_dense_matrix", "list_matrices", "load_dense_matrix",
-    "save_dense_matrix", "set_conf", "spill_path", "stage_block",
+    "negotiate_depth", "save_dense_matrix", "set_conf", "spill_path",
+    "stage_block",
 ]

@@ -33,6 +33,33 @@ from ..observability.trace import TRACER
 
 _DONE = object()
 
+#: Hard ceiling on a negotiated prefetch depth: beyond this the queue only
+#: adds staged-memory pressure (depth × partition bytes) without hiding any
+#: more latency.
+MAX_NEGOTIATED_DEPTH = 8
+
+
+def negotiate_depth(n_members: int, partition_nbytes: int,
+                    base: Optional[int] = None,
+                    budget_bytes: Optional[int] = None) -> int:
+    """Group-aware prefetch depth for a co-scheduled stream (ISSUE 8).
+
+    A solo stream double-buffers (``base``, default the configured
+    ``prefetch_depth``); a group of k member plans consumes each staged
+    partition k times, so compute per partition is ~k× longer and the
+    stager can usefully run further ahead — one extra slot per extra
+    member, capped at `MAX_NEGOTIATED_DEPTH` and (when ``budget_bytes``
+    is given) at the number of partitions that fit the staging budget —
+    the budget clamp may go below ``base``, but never below 1.
+    """
+    from . import registry
+    if base is None:
+        base = int(registry.get_conf("prefetch_depth"))
+    depth = min(base + max(0, int(n_members) - 1), MAX_NEGOTIATED_DEPTH)
+    if budget_bytes and partition_nbytes > 0:
+        depth = min(depth, int(budget_bytes) // int(partition_nbytes))
+    return max(1, depth)
+
 
 def stage_block(mat, start: int, stop: int, *, donate: bool = True,
                 to_device: bool = True):

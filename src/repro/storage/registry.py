@@ -21,6 +21,7 @@ import os
 import pathlib
 import re
 import tempfile
+import threading
 from typing import Optional
 
 import numpy as np
@@ -38,6 +39,12 @@ _CONF = {
 }
 
 _spill_ids = itertools.count()
+
+#: Guards _CONF mutation — most importantly the lazy ``data_dir()`` init:
+#: without it two threads racing the first disk-tier touch (fm.serve
+#: workers, concurrent materialize) could each mkdtemp their OWN data dir
+#: and then fail to see each other's named matrices (ISSUE 8 audit).
+_CONF_LOCK = threading.Lock()
 
 
 def set_conf(*, data_dir: Optional[str] = None,
@@ -63,7 +70,8 @@ def set_conf(*, data_dir: Optional[str] = None,
     if data_dir is not None:
         p = pathlib.Path(data_dir)
         p.mkdir(parents=True, exist_ok=True)
-        _CONF["data_dir"] = p
+        with _CONF_LOCK:
+            _CONF["data_dir"] = p
     if prefetch is not None:
         _CONF["prefetch"] = bool(prefetch)
     if prefetch_depth is not None:
@@ -99,11 +107,13 @@ def get_conf(key: str):
 
 def data_dir() -> pathlib.Path:
     """The configured data directory (lazily a fresh temp dir, so the disk
-    tier works out of the box in tests and examples)."""
-    if _CONF["data_dir"] is None:
-        _CONF["data_dir"] = pathlib.Path(
-            tempfile.mkdtemp(prefix="fm-data-"))
-    return _CONF["data_dir"]
+    tier works out of the box in tests and examples).  Thread-safe: the
+    lazy init is locked so concurrent first touches agree on ONE dir."""
+    with _CONF_LOCK:
+        if _CONF["data_dir"] is None:
+            _CONF["data_dir"] = pathlib.Path(
+                tempfile.mkdtemp(prefix="fm-data-"))
+        return _CONF["data_dir"]
 
 
 def _sanitize(name: str) -> str:

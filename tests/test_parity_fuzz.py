@@ -22,11 +22,16 @@ Knobs (used by CI):
                   ``fm.batch`` with its outputs split into 2–3 independent
                   requests over the shared sources — the co-scheduled
                   stream groups must match the same numpy oracle
+  FUZZ_SERVE      when set (nightly), every program ALSO executes through
+                  a ``fm.serve`` Engine with its outputs split into 2–3
+                  requests SUBMITTED FROM CONCURRENT THREADS — the
+                  admission window + group runner must match the oracle
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import List, Optional, Tuple
 
 import numpy as np
@@ -38,6 +43,7 @@ from repro.core import materialize as mz
 EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "25"))
 BASE_SEED = int(os.environ.get("FUZZ_SEED", "0"))
 FUZZ_BATCH = os.environ.get("FUZZ_BATCH", "") not in ("", "0")
+FUZZ_SERVE = os.environ.get("FUZZ_SERVE", "") not in ("", "0")
 
 CELLS = [(backend, mode)
          for backend in ("xla", "pallas")
@@ -424,6 +430,48 @@ def eval_engine_batched(prog: Program, backend: str, mode: str) -> List[np.ndarr
     return out
 
 
+def eval_engine_served(prog: Program, backend: str,
+                       mode: str) -> List[np.ndarray]:
+    """The FUZZ_SERVE arm: the same program through the async serving
+    layer — outputs split round-robin into 2–3 requests, each SUBMITTED
+    FROM ITS OWN THREAD into one admission window, so the fuzzer drives
+    the concurrent plan-construction + window-coalescing path."""
+    from repro.core.serve import Engine
+    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
+    lazies = _lazy_outputs(prog, mode)
+    k = min(3, len(lazies))
+    reqs = [tuple(lazies[j] for j in range(i, len(lazies), k))
+            for i in range(k)]
+    handles: List = [None] * k
+    errors: List[BaseException] = []
+    barrier = threading.Barrier(k)
+
+    def submit(i):
+        try:
+            barrier.wait(timeout=30)
+            handles[i] = eng.submit(*reqs[i])
+        except BaseException as exc:  # noqa: BLE001 - re-raised below
+            errors.append(exc)
+
+    with Engine(window_ms=2000, max_window_requests=k, mode=exec_mode,
+                backend=backend, midstream_admission=False) as eng:
+        threads = [threading.Thread(target=submit, args=(i,))
+                   for i in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        if errors:
+            raise errors[0]
+        out: List[Optional[np.ndarray]] = [None] * len(lazies)
+        for i, h in enumerate(handles):
+            res = h.result(timeout=120)
+            vals = res if isinstance(res, (list, tuple)) else [res]
+            for j, v in zip(range(i, len(lazies), k), vals):
+                out[j] = np.asarray(fm.as_np(v), np.float64)
+    return out
+
+
 def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
     """Run one grid cell against the oracle; returns an error string (or
     None) instead of raising, so the shrinker can probe cheaply."""
@@ -432,6 +480,8 @@ def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
         arms = [("", eval_engine(prog, backend, mode))]
         if FUZZ_BATCH:
             arms.append(("batched:", eval_engine_batched(prog, backend, mode)))
+        if FUZZ_SERVE:
+            arms.append(("served:", eval_engine_served(prog, backend, mode)))
         for label, gots in arms:
             for o, (got, ref) in zip(prog.outputs, zip(gots, refs)):
                 scale = max(1.0, float(np.max(np.abs(ref))))
@@ -629,6 +679,33 @@ def test_known_program_batched_parity():
             err = float(np.max(np.abs(got - ref))) / scale
             assert err <= 2e-3, (
                 f"cell=({backend},{mode}) r{o}: batched err {err:.2e}")
+        mz.clear_plan_cache()
+
+
+def test_known_program_served_parity():
+    """Always-on anchor for the FUZZ_SERVE arm: a hand-pinned multi-output
+    multipass program served through an Engine admission window with its
+    requests submitted from concurrent threads matches the oracle on every
+    cell, independent of the nightly FUZZ_SERVE budget."""
+    prog = Program(
+        seed=6789, n=96, p=3, dtype="f32",
+        ops=[
+            ("colsums", 0),                # -> r1  pass-1 sink
+            ("escalar", 1, "div", 2.0),    # -> r2  pass-1 epilogue
+            ("sweeprow", 0, 2, "sub"),     # -> r3  PASS-2 row-local sweep
+            ("sapply", 3, "abs"),          # -> r4  pass-2 chain
+            ("colmaxs", 4),                # -> r5  pass-2 sink
+            ("sumall", 0),                 # -> r6  independent sink
+        ],
+        outputs=[3, 5, 6])
+    refs = eval_numpy(prog)
+    for backend, mode in CELLS:
+        gots = eval_engine_served(prog, backend, mode)
+        for o, got, ref in zip(prog.outputs, gots, refs):
+            scale = max(1.0, float(np.max(np.abs(ref))))
+            err = float(np.max(np.abs(got - ref))) / scale
+            assert err <= 2e-3, (
+                f"cell=({backend},{mode}) r{o}: served err {err:.2e}")
         mz.clear_plan_cache()
 
 

@@ -1,0 +1,618 @@
+"""Async multi-tenant serving layer tests (ISSUE 8 tentpole).
+
+Contract under test: ``fm.serve()`` / `Engine` accepts lazy-DAG requests
+from many threads, holds them in an admission window, and co-schedules
+same-source strangers onto ONE streaming drive — per window
+``exec_stats()['streams'] == 1`` with every request counting its own
+logical pass, total bytes strictly below naive serial execution, correct
+per-request ``fm.collect_stats()`` attribution, NO partial sinks when a
+member fails mid-group, and mid-stream admission of a late same-group
+plan at the next partition boundary (with an exact catch-up of the
+missed prefix).  Plus the ISSUE 8 thread-safety audit regressions: plan
+cache under concurrent LRU/borrow, lazy data-dir init, lazy program
+compile, and concurrent materialize through one borrowed template.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from helpers_cache import FlakyStore, StagingFault, assert_no_partial_results, \
+    flaky_matrix
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core import batch as batch_mod
+from repro.core.fusion import Plan
+from repro.core.matrix import DenseStore, FMMatrix
+from repro.core.serve import Engine, _Gate
+from repro import storage
+from repro.observability import metrics
+from repro.storage.prefetch import PrefetchError, negotiate_depth
+
+# A staging fault may surface raw (inline staging) or wrapped by the
+# prefetch worker, depending on the prefetch heuristic.
+FAULTS = (StagingFault, PrefetchError)
+
+RNG = np.random.default_rng(23)
+
+
+def _x(n=3000, p=6, seed=None):
+    rng = RNG if seed is None else np.random.default_rng(seed)
+    return (rng.normal(size=(n, p)) * 2 + 0.5).astype(np.float32)
+
+
+@pytest.fixture(autouse=True)
+def _small_partitions():
+    """Multi-partition streams, fresh plan cache per test."""
+    from repro.core import matrix as matrix_mod
+    old = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=4096)
+    mz.clear_plan_cache()
+    yield
+    matrix_mod.IO_PARTITION_BYTES = old
+    mz.clear_plan_cache()
+
+
+@pytest.fixture()
+def data_dir(tmp_path, monkeypatch):
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    return tmp_path / "fmdata"
+
+
+def _submit_from_threads(eng, requests):
+    """Submit each request from its own thread (barrier-released), return
+    the handles in request order."""
+    barrier = threading.Barrier(len(requests))
+    handles = [None] * len(requests)
+    errors = []
+
+    def worker(i, outs):
+        try:
+            barrier.wait(timeout=30)
+            handles[i] = eng.submit(*outs)
+        except Exception as exc:  # noqa: BLE001 - surfaced below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker,
+                                args=(i, outs if isinstance(outs, tuple)
+                                      else (outs,)))
+               for i, outs in enumerate(requests)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errors, errors
+    return handles
+
+
+class PacedStore(DenseStore):
+    """Host store that signals ``started`` after its second partition read
+    and then holds the stream until ``release`` — the deterministic hook
+    the mid-stream admission tests use to submit a late request while the
+    sweep is provably live."""
+
+    def __init__(self, arr, started, release):
+        super().__init__(np.asarray(arr))
+        self.reads = 0
+        self.started = started
+        self.release = release
+
+    def block(self, start, stop):
+        self.reads += 1
+        if self.reads == 2:
+            self.started.set()
+            self.release.wait(timeout=30)
+        return super().block(start, stop)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: window coalescing, bytes, attribution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["stream", "ooc"])
+def test_window_coalesces_concurrent_requests(mode):
+    a = _x()
+    X = fm.conv_R2FM(a, host=(mode == "ooc"))
+    reqs = [fm.colMeans(X), fm.colSums(X), (fm.colSds(X), fm.crossprod(X)),
+            fm.sum_(X)]
+    mz.reset_exec_stats()
+    with fm.serve(window_ms=2000, max_window_requests=len(reqs),
+                  mode=mode, midstream_admission=False) as eng:
+        handles = _submit_from_threads(eng, reqs)
+        res = [h.result(timeout=120) for h in handles]
+    st = mz.exec_stats()
+    # k concurrent same-source requests: ONE physical sweep, k logical passes.
+    assert st["streams"] == 1
+    assert st["passes"] == len(reqs)
+    assert st["pass_bytes_in"] == (X.m.nbytes(),)
+    np.testing.assert_allclose(fm.as_np(res[0]).ravel(), a.mean(0),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(res[1]).ravel(), a.sum(0),
+                               rtol=1e-3)
+    np.testing.assert_allclose(fm.as_np(res[2][0]).ravel(),
+                               a.std(0, ddof=1), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(res[2][1]),
+                               a.T.astype(np.float64) @ a, rtol=2e-3)
+    np.testing.assert_allclose(float(np.asarray(fm.as_np(res[3]))), a.sum(),
+                               rtol=1e-3)
+
+
+def test_served_bytes_strictly_below_serial():
+    a = _x(2400, 6)
+    X = fm.conv_R2FM(a, host=True)
+
+    def fresh_reqs():
+        return [fm.colMeans(X), fm.colSums(X), fm.sum_(X)]
+
+    mz.reset_exec_stats()
+    for r in fresh_reqs():
+        fm.materialize(r, mode="ooc")
+    serial_bytes = metrics.root_counter("bytes_streamed")
+
+    mz.clear_plan_cache()
+    mz.reset_exec_stats()
+    with fm.serve(window_ms=2000, max_window_requests=3,
+                  mode="ooc", midstream_admission=False) as eng:
+        for h in _submit_from_threads(eng, fresh_reqs()):
+            h.result(timeout=120)
+    served_bytes = metrics.root_counter("bytes_streamed")
+    assert served_bytes < serial_bytes
+    assert served_bytes == X.m.nbytes()  # union read exactly once
+
+
+def test_multipass_request_in_window():
+    """A two-pass plan (scale: moment pass -> sweep pass) served alongside
+    single-pass requests resolves correctly across rounds."""
+    a = _x(1500, 5)
+    X = fm.conv_R2FM(a, host=True)
+    with fm.serve(window_ms=2000, max_window_requests=2,
+                  midstream_admission=False) as eng:
+        handles = _submit_from_threads(
+            eng, [fm.scale(X), fm.colMeans(X)])
+        scaled, mu = [h.result(timeout=120) for h in handles]
+    oracle = (a - a.mean(0)) / a.std(0, ddof=1)
+    np.testing.assert_allclose(fm.as_np(scaled), oracle, rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(mu).ravel(), a.mean(0), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_per_request_scope_attribution():
+    """Each tenant's fm.collect_stats() scope sees ITS plan's share: one
+    stream, its own bytes — not the group's union."""
+    a = _x(2000, 4)
+    X = fm.conv_R2FM(a, host=True)
+    own_bytes = X.m.nbytes()
+    eng = Engine(window_ms=2000, max_window_requests=2,
+                 midstream_admission=False)
+    stats = [None, None]
+    barrier = threading.Barrier(2)
+
+    def tenant(i, out):
+        with fm.collect_stats(f"tenant{i}") as sc:
+            barrier.wait(timeout=30)
+            eng.submit(out).result(timeout=120)
+        stats[i] = sc.stats()
+
+    threads = [threading.Thread(target=tenant, args=(0, fm.colMeans(X))),
+               threading.Thread(target=tenant, args=(1, fm.sum_(X)))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    eng.close()
+    for st in stats:
+        assert st is not None
+        assert st["streams"] == 1
+        assert st["passes"] == 1
+        assert st["bytes_streamed"] == own_bytes
+        assert st["pass_bytes_in"] == (own_bytes,)
+        assert st["materialize_calls"] == 1
+
+
+def test_no_partial_sinks_when_member_fails_midgroup():
+    """A staging fault inside one group fails every member of THAT group
+    with no partial sinks; an unrelated group in the same window still
+    completes.  Healing the store lets a resubmit succeed through the
+    same (undamaged) cached template."""
+    a = _x(1600, 5)
+    F, fstore = flaky_matrix(a, fail_after=3)
+    b = _x(1600, 5, seed=7)
+    Y = fm.conv_R2FM(b, host=True)
+
+    flaky_reqs = [fm.colMeans(F), fm.sum_(F)]
+    with fm.serve(window_ms=2000, max_window_requests=3, mode="ooc",
+                  midstream_admission=False) as eng:
+        handles = _submit_from_threads(eng, flaky_reqs + [fm.colMeans(Y)])
+        for h in handles[:2]:
+            with pytest.raises(FAULTS):
+                h.result(timeout=120)
+        np.testing.assert_allclose(fm.as_np(handles[2].result(120)).ravel(),
+                                   b.mean(0), rtol=1e-3, atol=1e-4)
+        assert_no_partial_results(*[r.m.node for r in flaky_reqs])
+
+        fstore.heal()
+        h = eng.submit(*flaky_reqs)
+        r1, r2 = h.result(timeout=120)
+        np.testing.assert_allclose(fm.as_np(r1).ravel(), a.mean(0),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(float(np.asarray(fm.as_np(r2))), a.sum(),
+                                   rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream admission
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefetch", [False, True])
+def test_midstream_admission_at_partition_boundary(prefetch):
+    a = _x(8000, 8)
+    started, release = threading.Event(), threading.Event()
+    X = FMMatrix(a.shape, a.dtype,
+                 store=PacedStore(a, started, release), name="paced")
+
+    mz.reset_exec_stats()
+    with fm.serve(window_ms=1, prefetch=prefetch) as eng:
+        h1 = eng.submit(fm.colMeans(X))
+        assert started.wait(timeout=30), "stream never started"
+        # The sweep is live (partition 0 consumed or staged): this request
+        # must ride it from the next boundary, not wait for a new window.
+        h2 = eng.submit(fm.colSums(X))
+        release.set()
+        r1 = h1.result(timeout=120)
+        r2 = h2.result(timeout=120)
+    st = mz.exec_stats()
+    assert st["midstream_admits"] == 1
+    assert st["streams"] == 1          # no second sweep
+    assert st["passes"] == 2
+    # Catch-up of the missed prefix is exact: full-precision parity.
+    np.testing.assert_allclose(fm.as_np(r1).ravel(), a.mean(0), rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(r2).ravel(), a.sum(0), rtol=1e-3)
+
+
+def test_submit_after_stream_done_uses_new_window():
+    a = _x(1200, 4)
+    X = fm.conv_R2FM(a, host=True)
+    mz.reset_exec_stats()
+    with fm.serve(window_ms=1) as eng:
+        h1 = eng.submit(fm.colMeans(X))
+        h1.result(timeout=120)        # first stream fully done
+        h2 = eng.submit(fm.colSums(X))
+        h2.result(timeout=120)
+    st = mz.exec_stats()
+    assert st["midstream_admits"] == 0
+    assert st["streams"] == 2
+
+
+def test_gate_rejects_device_resident_long_outputs():
+    """A late plan with a device-target long-dimension output cannot join a
+    device-mode sweep (partition-order concatenation would scramble), but a
+    sink-only plan can; in ooc mode the output is row-addressed on host and
+    both qualify."""
+    a = _x(1600, 4)
+    Xd = fm.conv_R2FM(a, host=False)   # device tier -> 'stream' mode
+    Xh = fm.conv_R2FM(a, host=True)    # host tier -> 'ooc' mode
+
+    def gate_for(out, to_host, rows=None):
+        req = batch_mod.BatchRequest([out.m], structured=False)
+        assert batch_mod._plan_request(req, "xla", None, True)
+        member = batch_mod._member_for(req, 0)
+        ps = member.ps
+        ids = frozenset(id(m) for _, m in ps.staged_sources(member.sources))
+        gate = _Gate(ps.long_dim, rows if rows is not None
+                     else ps.partition_rows, ids, to_host=to_host)
+        return gate, req
+
+    # rows=1: the sweep granularity never disqualifies, isolating the
+    # output-residency check.
+    gate, _ = gate_for(fm.colMeans(Xd), to_host=False, rows=1)
+    sink_req = batch_mod.BatchRequest([fm.sum_(Xd).m], structured=False)
+    assert batch_mod._plan_request(sink_req, "xla", None, True)
+    assert gate.accepts(sink_req)
+    rowlocal_req = batch_mod.BatchRequest([fm.sqrt(fm.abs_(Xd)).m],
+                                          structured=False)
+    assert batch_mod._plan_request(rowlocal_req, "xla", None, True)
+    assert not gate.accepts(rowlocal_req)   # device-resident long output
+
+    gate_h, _ = gate_for(fm.colMeans(Xh), to_host=True, rows=1)
+    rowlocal_h = batch_mod.BatchRequest([fm.sqrt(fm.abs_(Xh)).m],
+                                        structured=False)
+    assert batch_mod._plan_request(rowlocal_h, "xla", None, True)
+    assert gate_h.accepts(rowlocal_h)       # host-addressed: fine
+
+    # A late plan whose partitions are FINER than the live sweep cannot
+    # consume the sweep's partitions whole: rejected on granularity.
+    gate_coarse, _ = gate_for(fm.colMeans(Xh), to_host=True)
+    assert gate_coarse.rows > rowlocal_h.plan.passes[0].partition_rows
+    assert not gate_coarse.accepts(rowlocal_h)
+
+    # Multi-pass and foreign-source requests never ride a gate.
+    twopass = batch_mod.BatchRequest([fm.scale(Xh).m], structured=False)
+    assert batch_mod._plan_request(twopass, "xla", None, True)
+    assert not gate_h.accepts(twopass)
+    other = batch_mod.BatchRequest(
+        [fm.colMeans(fm.conv_R2FM(_x(1600, 4, seed=3), host=True)).m],
+        structured=False)
+    assert batch_mod._plan_request(other, "xla", None, True)
+    assert not gate_h.accepts(other)
+
+    # A closed gate refuses offers; leftovers come back for re-queueing.
+    g = _Gate(1600, 1, frozenset(), to_host=True)
+    assert g.offer("req", "member")
+    assert g.close() == ["req"]
+    assert not g.offer("req2", "member2")
+
+
+def test_midstream_admitted_scope_attribution():
+    a = _x(8000, 8)
+    started, release = threading.Event(), threading.Event()
+    X = FMMatrix(a.shape, a.dtype,
+                 store=PacedStore(a, started, release), name="paced")
+    with fm.serve(window_ms=1, prefetch=False) as eng:
+        h1 = eng.submit(fm.colMeans(X))
+        assert started.wait(timeout=30)
+        with fm.collect_stats("late") as sc:
+            h2 = eng.submit(fm.colSums(X))
+            release.set()
+            h2.result(timeout=120)
+        h1.result(timeout=120)
+    st = sc.stats()
+    # The late tenant sees a solo-run view: one stream, its full bytes.
+    assert st["streams"] == 1
+    assert st["passes"] == 1
+    assert st["bytes_streamed"] == X.nbytes()
+
+
+# ---------------------------------------------------------------------------
+# Admission control + prefetch depth negotiation
+# ---------------------------------------------------------------------------
+
+def test_bandwidth_cap_defers_second_group():
+    a = _x(4000, 6)
+    b = _x(4000, 6, seed=5)
+    started, release = threading.Event(), threading.Event()
+    Xa = FMMatrix(a.shape, a.dtype,
+                  store=PacedStore(a, started, release), name="paced-a")
+    Xb = fm.conv_R2FM(b, host=True)
+
+    mz.reset_exec_stats()
+    # Cap of 1 byte: any group defers while another is in flight; the
+    # "always admit when idle" rule keeps it deadlock-free.
+    with fm.serve(window_ms=2000, max_window_requests=2,
+                  max_concurrent_streams=2, max_inflight_bytes=1,
+                  midstream_admission=False) as eng:
+        handles = _submit_from_threads(
+            eng, [fm.colMeans(Xa), fm.colMeans(Xb)])
+        assert started.wait(timeout=30)
+        # Group A is provably mid-stream; group B must be deferring now or
+        # have already recorded its deferral.
+        deadline = 30.0
+        import time as _time
+        t0 = _time.perf_counter()
+        while (metrics.root_counter("serve_deferrals") < 1
+               and _time.perf_counter() - t0 < deadline):
+            _time.sleep(0.01)
+        release.set()
+        ra, rb = [h.result(timeout=120) for h in handles]
+    assert metrics.root_counter("serve_deferrals") >= 1
+    assert metrics.root_counter("serve_admission_wait_seconds") > 0
+    np.testing.assert_allclose(fm.as_np(ra).ravel(), a.mean(0), rtol=1e-3,
+                               atol=1e-4)
+    np.testing.assert_allclose(fm.as_np(rb).ravel(), b.mean(0), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_negotiate_depth_group_aware():
+    assert negotiate_depth(1, 1 << 20, base=2) == 2       # solo: unchanged
+    assert negotiate_depth(4, 1 << 20, base=2) == 5       # +1 per member
+    assert negotiate_depth(32, 1 << 20, base=2) == 8      # hard ceiling
+    assert negotiate_depth(4, 1 << 20, base=2,
+                           budget_bytes=2 << 20) == 2     # budget clamp
+    assert negotiate_depth(4, 8 << 20, base=2,
+                           budget_bytes=1 << 20) == 1     # floor at 1
+
+
+def test_engine_close_drains_pending():
+    a = _x(1200, 4)
+    X = fm.conv_R2FM(a, host=True)
+    eng = fm.serve(window_ms=60_000)   # window far longer than the test
+    h = eng.submit(fm.colMeans(X))
+    eng.close()                        # must cut the window short + drain
+    np.testing.assert_allclose(fm.as_np(h.result(timeout=10)).ravel(),
+                               a.mean(0), rtol=1e-3, atol=1e-4)
+    with pytest.raises(RuntimeError):
+        eng.submit(fm.colSums(X))
+
+
+def test_physical_passthrough_resolves_immediately():
+    a = _x(600, 3)
+    X = fm.conv_R2FM(a, host=False)
+    with fm.serve(window_ms=60_000) as eng:   # scheduler never needed
+        h = eng.submit(X)
+        assert h.done()
+        np.testing.assert_allclose(fm.as_np(h.result(0)), a, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Thread-safety audit regressions (ISSUE 8 satellite)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_materialize_through_one_cached_template():
+    """N threads repeatedly materialize structurally identical plans over
+    their OWN data through one shared plan-cache template.  The borrow
+    discipline (_store_results onto=) must keep every result correct —
+    the old snapshot/scrub dance corrupted concurrent borrowers."""
+    n_threads, iters = 4, 6
+    datas = [_x(900, 4, seed=i) for i in range(n_threads)]
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=30)
+            for _ in range(iters):
+                X = fm.conv_R2FM(datas[i], host=True)
+                (r,) = fm.materialize(fm.colMeans(X), mode="ooc")
+                np.testing.assert_allclose(
+                    fm.as_np(r).ravel(), datas[i].mean(0), rtol=1e-3,
+                    atol=1e-4)
+        except Exception as exc:  # noqa: BLE001
+            errors.append((i, exc))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    assert not errors, errors
+
+
+def test_plan_cache_lru_eviction_racing_borrows(monkeypatch):
+    """Concurrent materializes churning a 2-entry cache: eviction may drop
+    a template another thread is borrowing — results must stay correct
+    (borrowers hold their own strong reference)."""
+    monkeypatch.setattr(mz, "PLAN_CACHE_LIMIT", 2)
+    n_threads, iters = 4, 5
+    datas = [_x(700, 3 + i, seed=10 + i) for i in range(n_threads)]
+    errors = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=30)
+            for _ in range(iters):
+                X = fm.conv_R2FM(datas[i], host=True)
+                (r,) = fm.materialize(fm.colSums(X), mode="ooc")
+                np.testing.assert_allclose(
+                    fm.as_np(r).ravel(), datas[i].sum(0), rtol=1e-3)
+        except Exception as exc:  # noqa: BLE001
+            errors.append((i, exc))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180)
+    assert not errors, errors
+    assert len(mz._PLANS) <= 2
+
+
+def test_data_dir_lazy_init_is_threadsafe(monkeypatch):
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    results = []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait(timeout=30)
+        results.append(storage.registry.data_dir())
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert len(results) == 8
+    assert len({str(p) for p in results}) == 1  # ONE dir, not eight
+
+
+def test_program_compile_is_single_and_shared():
+    a = _x(1000, 4)
+    X = fm.conv_R2FM(a, host=True)
+    plan = Plan([fm.colMeans(X).m])
+    progs = [None] * 6
+    barrier = threading.Barrier(6)
+
+    def worker(i):
+        barrier.wait(timeout=30)
+        progs[i] = plan.program("xla")
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert all(p is progs[0] and p is not None for p in progs)
+
+
+def test_mixed_materialize_batch_serve_stress(data_dir):
+    """The ISSUE 8 stress shape: N threads mixing fm.materialize, fm.batch
+    and Engine.submit against shared NAMED disk matrices, every result
+    checked against numpy."""
+    a = _x(2000, 5, seed=40)
+    b = _x(2000, 5, seed=41)
+    A = storage.load_dense_matrix(a, "stress_a")
+    B = storage.load_dense_matrix(b, "stress_b")
+    eng = Engine(window_ms=10, max_concurrent_streams=2)
+    errors = []
+    barrier = threading.Barrier(3)
+
+    def check(res, arr, kind):
+        got = np.asarray(fm.as_np(res)).ravel()
+        want = arr.mean(0) if kind == "mean" else arr.sum(0)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=30)
+            for j in range(4):
+                which = (i + j) % 3
+                src, arr = (A, a) if (i + j) % 2 == 0 else (B, b)
+                if which == 0:
+                    (r,) = fm.materialize(fm.colMeans(src))
+                    check(r, arr, "mean")
+                elif which == 1:
+                    r1, r2 = fm.batch(fm.colMeans(src), fm.colSums(src))
+                    check(r1, arr, "mean")
+                    check(r2, arr, "sum")
+                else:
+                    h = eng.submit(fm.colSums(src))
+                    check(h.result(timeout=120), arr, "sum")
+        except Exception as exc:  # noqa: BLE001
+            errors.append((i, exc))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    eng.close()
+    assert not errors, errors
+
+
+def test_flaky_group_leaves_no_partials_with_midstream_member():
+    """A mid-stream-admitted member's future fails with the group's fault
+    and registers nothing."""
+    a = _x(8000, 8)
+    started, release = threading.Event(), threading.Event()
+
+    class FlakyPaced(FlakyStore):
+        def __init__(self, arr):
+            super().__init__(arr, fail_after=-1)
+
+        def block(self, start, stop):
+            self.reads += 1
+            if self.reads == 2:
+                started.set()
+                release.wait(timeout=30)
+            if self.fail_after >= 0 and self.reads > self.fail_after:
+                raise StagingFault("injected fault after admission")
+            return DenseStore.block(self, start, stop)
+
+    st = FlakyPaced(a)
+    X = FMMatrix(a.shape, a.dtype, store=st, name="flaky-paced")
+    with fm.serve(window_ms=1, prefetch=False) as eng:
+        h1 = eng.submit(fm.colMeans(X))
+        assert started.wait(timeout=30)
+        late = fm.colSums(X)
+        h2 = eng.submit(late)
+        st.fail_after = st.reads + 1   # fault a couple partitions later
+        release.set()
+        with pytest.raises(FAULTS):
+            h1.result(timeout=120)
+        with pytest.raises(FAULTS):
+            h2.result(timeout=120)
+    assert_no_partial_results(late.m.node)

@@ -45,8 +45,8 @@ def test_flashr_user_journey():
     np.testing.assert_allclose(corr, corr2, rtol=1e-4, atol=1e-5)
 
 
-def test_lm_train_checkpoint_resume_serve(tmp_path):
-    from repro.launch import serve, train
+def test_lm_train_checkpoint_resume(tmp_path):
+    from repro.launch import train
 
     ck = str(tmp_path / "ck")
     losses = train.main(["--arch", "qwen2-0.5b", "--reduced", "--steps", "8",
@@ -59,7 +59,18 @@ def test_lm_train_checkpoint_resume_serve(tmp_path):
                           "--resume", "--log-every", "100"])
     assert len(resumed) == 2  # steps 8..9 only: resume picked up step 8
 
-    out = serve.main(["--arch", "qwen2-0.5b", "--reduced", "--batch", "2",
-                      "--prompt-len", "8", "--gen", "4"])
-    assert out.shape == (2, 4)
-    assert (out >= 0).all()
+
+def test_serve_loadgen_journey(tmp_path):
+    """The serving journey (ISSUE 8): the load generator's serial-vs-serve
+    arms over one named disk matrix — each wave's concurrent same-source
+    requests share ONE streaming drive and read strictly fewer bytes."""
+    from repro.launch import serve
+
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    serial, served = serve.main([
+        "--n", "6000", "--p", "4", "--clients", "3", "--waves", "2",
+        "--partition-kib", "16", "--name", "system_serve_x"])
+    assert served["streams"] == 2            # one stream per wave
+    assert serial["streams"] == 6            # one stream per request
+    assert served["bytes_per_request"] * 3 == serial["bytes_per_request"]
+    assert served["requests"] == serial["requests"] == 6
