@@ -73,11 +73,14 @@ SERVE_ARGS = ["--n", "40000", "--p", "8", "--clients", "3", "--waves", "2",
 #: serially) is a scheduler contract, not a timing artifact — as are the
 #: serve rows' ``bytes_per_request``/``requests`` (ISSUE 8): the served
 #: arm's bytes-per-request is serial's divided by the window's client
-#: count, or window coalescing has regressed.
+#: count, or window coalescing has regressed.  ``shards``/``shard_merges``
+#: (ISSUE 9) gate the sharded-execution contract: one shard per mesh
+#: data-axis device per streamed pass, one combine merge per shard
+#: boundary (deterministic on the bench runner's single-device mesh).
 COUNTER_KEYS = ("passes", "passes_over_sources", "bytes_in",
                 "epilogue_launches", "epilogue_launches_per_materialize",
                 "epilogue_nodes", "kernels", "partition_steps", "streams",
-                "bytes_per_request", "requests")
+                "bytes_per_request", "requests", "shards", "shard_merges")
 
 GATE_PCT = float(os.environ.get("BENCH_GATE_PCT", "25"))
 #: Absolute per-row slack: most rows are single-digit milliseconds where

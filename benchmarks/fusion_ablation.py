@@ -228,6 +228,49 @@ def run(argv=None):
                          f"streams={st['streams']};"
                          f"passes={st['passes']};"
                          f"bytes_streamed={streamed:.2e}"))
+
+    # ------------------------------------------------------------------
+    # Sharded arm (sharded multi-device execution): the standardized-Gram
+    # multi-pass workload streamed single-device vs with the partition
+    # loop split across the default host mesh (`materialize(mesh=...)`).
+    # `shards` / `shard_merges` are the counter-gated proof: one shard
+    # per mesh data-axis device per streamed pass, one combine merge per
+    # shard boundary.  On the single-device CI bench runner the mesh has
+    # one data shard, so the gated counters are deterministic; under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 the same rows
+    # show the 8-way split.
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    shard_tiers = (
+        ("ooc", fm.conv_R2FM(X_np, host=True)),
+        ("ooc-disk", fm.load_dense_matrix(X_np, "ablation_shard_x")),
+    )
+    for mode, X in shard_tiers:
+        for arm, kw in (("single", {}), ("sharded", {"mesh": mesh})):
+            def work(X=X, kw=kw):
+                return fm.as_np(
+                    fm.materialize(fm.crossprod(fm.scale(X)),
+                                   mode="stream", **kw)[0])
+            mz.clear_plan_cache()
+            mz.reset_exec_stats()
+            work()
+            st = mz.exec_stats()
+            us = time_call(work, iters=args.iters)
+            record = {
+                "bench": "fusion", "workload": f"scale-{arm}",
+                "mode": mode, "backend": "xla",
+                "n": args.n, "p": args.p,
+                "us_per_call": round(us, 1),
+                "passes": st["passes"],
+                "streams": st["streams"],
+                "shards": st["shards"],
+                "shard_merges": st["shard_merges"],
+            }
+            print("BENCH " + json.dumps(record, sort_keys=True))
+            rows.append((f"fusion/scale-shard/{mode}/{arm}/xla", us,
+                         f"shards={st['shards']};"
+                         f"shard_merges={st['shard_merges']};"
+                         f"streams={st['streams']}"))
     return emit(rows)
 
 

@@ -162,15 +162,34 @@ def plan_rounds(requests, *, backend: Optional[str] = None,
 
 def execute_batch(requests, *, mode: str = "auto",
                   backend: Optional[str] = None, donate: bool = True,
-                  prefetch: Optional[bool] = None, reuse_plans: bool = True):
+                  prefetch: Optional[bool] = None, reuse_plans: bool = True,
+                  mesh=None):
     """Execute every request, one streaming drive per co-scheduled group.
 
     Returns the requests' result lists (physical FMMatrix per output).
     ``mode`` follows ``fm.materialize`` ('auto' picks per group from the
-    union of that group's sources)."""
+    union of that group's sources).  ``mesh`` (default: the configured
+    ``fm.set_conf(mesh=...)``) shards every group's partition sweep over
+    the mesh's data axis exactly like a solo materialize — grouped streams
+    shard too, each member's partials merging through its own ``combine``
+    across the shard boundaries.  A failure mid-batch clears the thread's
+    resident-partition capture (ISSUE 9): stale residents from a previous
+    round must not stay pinned for the rest of the iteration scope."""
+    try:
+        return _execute_batch(requests, mode=mode, backend=backend,
+                              donate=donate, prefetch=prefetch,
+                              reuse_plans=reuse_plans, mesh=mesh)
+    except BaseException:
+        mz._set_tls_residents(None)
+        raise
+
+
+def _execute_batch(requests, *, mode, backend, donate, prefetch,
+                   reuse_plans, mesh):
     backend = lowering.resolve_backend(backend)
+    mesh = mz._default_mesh(mesh)
     active, rounds = plan_rounds(requests, backend=backend,
-                                 reuse_plans=reuse_plans)
+                                 reuse_plans=reuse_plans, mesh=mesh)
     residents = mz._tls_residents()
     stream_bytes: list[int] = []
     with TRACER.span("batch", requests=len(active), rounds=len(rounds)):
@@ -195,13 +214,13 @@ def execute_batch(requests, *, mode: str = "auto",
                     [(m.ps, m.prog) for m in members])
                 t_pass = time.perf_counter()
                 if group_mode == "whole":
-                    mz._run_whole_group(members)
+                    mz._run_whole_group(members, mesh=mesh)
                 else:
                     capture = mz.inspecting() or r + 1 < len(rounds)
                     entry = mz._run_stream_group(
                         members, to_host=(group_mode == "ooc"),
                         donate=donate, prefetch=prefetch,
-                        residents=residents, capture=capture)
+                        residents=residents, capture=capture, mesh=mesh)
                     if entry is not None:
                         next_residents.append(entry)
                 metrics.inc("pass_seconds", time.perf_counter() - t_pass)
@@ -255,9 +274,10 @@ class Batch:
 
     def __init__(self, *, mode: str = "auto", backend: Optional[str] = None,
                  donate: bool = True, prefetch: Optional[bool] = None,
-                 reuse_plans: bool = True):
+                 reuse_plans: bool = True, mesh=None):
         self._kw = dict(mode=mode, backend=backend, donate=donate,
-                        prefetch=prefetch, reuse_plans=reuse_plans)
+                        prefetch=prefetch, reuse_plans=reuse_plans,
+                        mesh=mesh)
         self.requests: list[BatchRequest] = []
         self._ran = False
 

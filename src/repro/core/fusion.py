@@ -52,6 +52,45 @@ from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of,
 from .matrix import FMMatrix, io_partition_rows
 
 
+def shard_ranges(long_dim: int, partition_rows: int,
+                 n_shards: int) -> list[tuple[int, int]]:
+    """Contiguous, partition-aligned half-open row ranges splitting
+    ``[0, long_dim)`` into ``n_shards`` shards (ISSUE 9).
+
+    Every boundary lands on a multiple of ``partition_rows`` so each shard
+    streams WHOLE I/O-level partitions — the disk tier's ``block(start,
+    stop)`` granule — and partitions are spread as evenly as possible
+    (leading shards take the remainder).  When there are fewer partitions
+    than shards, trailing ranges are empty ``(start, start)``: those
+    shards idle and the shards counter reflects only the driven ones.
+    """
+    n_shards = max(1, int(n_shards))
+    n_parts = max(1, -(-int(long_dim) // max(1, int(partition_rows))))
+    base, extra = divmod(n_parts, n_shards)
+    ranges, part = [], 0
+    for s in range(n_shards):
+        take = base + (1 if s < extra else 0)
+        lo = min(part * partition_rows, long_dim)
+        part += take
+        hi = min(part * partition_rows, long_dim)
+        ranges.append((int(lo), int(hi)))
+    return ranges
+
+
+def _conf_data_shards() -> int:
+    """Data-axis size of the CONFIGURED mesh (fm.set_conf(mesh=...)), 1
+    when unsharded.  Deferred imports: fusion is imported by the storage
+    layer, so reaching back into it must happen at call time — same
+    precedent as io_partition_rows reading IO_PARTITION_BYTES at
+    plan-build time."""
+    from ..storage import registry
+    mesh = registry.get_conf("mesh")
+    if mesh is None:
+        return 1
+    from ..distributed.sharding import data_axis_size
+    return data_axis_size(mesh)
+
+
 class PassSchedule:
     """One streaming pass of a plan: its own cut classification, staging
     groups, partition size and segment IR.
@@ -239,6 +278,15 @@ class PassSchedule:
         self.partition_rows = io_partition_rows(
             max(widths), widest_dtype, n_live)
 
+        # Per-shard row ranges for sharded execution (ISSUE 9): the I/O
+        # partition loop splits over the configured mesh's data axis,
+        # contiguous and partition-aligned.  Part of ``Plan.pass_key`` so a
+        # mesh change (or a long_dim that packs into fewer partitions than
+        # shards) re-plans instead of reusing a stale schedule — this is
+        # what makes the cache's mesh keying real.
+        self.shard_ranges = shard_ranges(
+            self.long_dim, self.partition_rows, _conf_data_shards())
+
         # Segment IR + processor-level tile schedule (paper §III-F level 2).
         self.ir = plan_ir.compile_ir(self)
 
@@ -406,8 +454,11 @@ class Plan:
 
     def pass_key(self) -> tuple:
         """Per-pass partition schedule: both partition levels of every pass
-        (the non-structural half of the plan-cache key)."""
-        return tuple((ps.partition_rows, ps.ir.schedule_key())
+        plus its per-shard row ranges (ISSUE 9 — the mesh keying made
+        real: a mesh change re-plans), the non-structural half of the
+        plan-cache key."""
+        return tuple((ps.partition_rows, tuple(ps.shard_ranges),
+                      ps.ir.schedule_key())
                      for ps in self.passes)
 
     def signature(self) -> str:

@@ -127,6 +127,22 @@ class LoweredProgram:
                          f"outs={[n.name for n in self.plan.epilogue_roots]}")
         return "\n".join(lines)
 
+    def shard_specs(self, mesh) -> dict:
+        """PartitionSpec per result node of this pass under a data-sharded
+        mesh (ISSUE 9), resolved through the shared divisibility-checked
+        policy (``distributed.sharding.resolve``): long-dim outputs shard
+        their row dimension over the data tier (``rows`` — falls back to
+        replicate when the row count does not divide), merged sinks and
+        epilogue values replicate (``rep`` — every device holds the full
+        reduction, which is what lets the epilogue run replicated)."""
+        from ..distributed import sharding as shd
+        specs = {}
+        for n in self.plan.row_local_roots + self.plan.saves:
+            specs[n.id] = shd.resolve("rows|rep", (n.nrow, n.ncol), mesh)
+        for n in list(self.plan.sinks) + list(self.plan.epilogue_roots):
+            specs[n.id] = shd.resolve("rep|rep", (n.nrow, n.ncol), mesh)
+        return specs
+
     def _step(self, source_blocks, smalls, bindings, offset):
         """One I/O-level partition through the fused cut of this pass.
 
@@ -219,6 +235,16 @@ class MultiPassProgram:
             lines.append(f" pass {k}:")
             lines.extend("  " + line for line in p.describe().splitlines())
         return "\n".join(lines)
+
+    def shard_specs(self, mesh) -> dict:
+        """Union of every pass's per-node output specs (node ids are unique
+        across the plan) — the sharded executor runs the SAME per-pass
+        programs as per-device executors, one row range each, and places
+        results by these specs."""
+        specs = {}
+        for p in self.passes:
+            specs.update(p.shard_specs(mesh))
+        return specs
 
 
 class GroupProgram:

@@ -105,6 +105,16 @@ _DAG_LOCK = threading.RLock()
 # logical pass — k plans × 1 stream shows up as passes=k, streams=1.
 # ``prefetch_reuse_hits`` counts staged partition blocks served from the
 # previous pass's resident final partition instead of a re-read.
+#
+# ``shards`` counts per-device shard drives under a mesh (ISSUE 9): a
+# sharded sweep adds one per non-empty shard range (= the mesh's data-axis
+# size whenever the matrix has at least one partition per shard); a whole-
+# mode mesh run adds the data-axis size its inputs actually sharded over.
+# ``shard_merges`` counts cross-device sink merges through the associative
+# ``combine`` path — exactly one per shard boundary (shards − 1 per pass
+# with sinks); ``bytes_in`` stays the UNION of rows read (each row is
+# staged by exactly one shard), with the per-shard split observable as the
+# ``shard_bytes_in`` tuple.
 EXEC_COUNTERS = (
     "materialize_calls",
     "plan_cache_hits",
@@ -112,6 +122,8 @@ EXEC_COUNTERS = (
     "partition_steps",
     "passes",
     "streams",
+    "shards",
+    "shard_merges",
     "midstream_admits",
     "prefetch_reuse_hits",
     "epilogue_launches",
@@ -128,6 +140,7 @@ def exec_stats() -> dict:
     ``observability.metrics.stats()`` or a ``fm.collect_stats()`` scope."""
     st = {k: int(metrics.root_counter(k)) for k in EXEC_COUNTERS}
     st["pass_bytes_in"] = tuple(metrics.root_value("pass_bytes_in", ()))
+    st["shard_bytes_in"] = tuple(metrics.root_value("shard_bytes_in", ()))
     return st
 
 
@@ -144,6 +157,16 @@ def _mesh_key(mesh):
     if mesh is None:
         return None
     return (tuple(mesh.axis_names), tuple(np.shape(mesh.devices)))
+
+
+def _default_mesh(mesh):
+    """Resolve the execution mesh: an explicit ``mesh=`` argument wins,
+    else the configured default (``fm.set_conf(mesh=...)``), else None
+    (unsharded)."""
+    if mesh is not None:
+        return mesh
+    from ..storage import registry  # deferred: storage depends on core
+    return registry.get_conf("mesh")
 
 
 def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
@@ -171,6 +194,7 @@ def materialize(*mats: FMMatrix, mode: str = "auto", fuse: bool = True,
 
     metrics.inc("materialize_calls")
     backend = lowering.resolve_backend(backend)
+    mesh = _default_mesh(mesh)
 
     if not fuse:
         with TRACER.span("materialize", backend=backend, fuse=False,
@@ -489,13 +513,31 @@ def _member_step(member, blocks, key_map, start, stop, *, donate_blocks,
     return outputs
 
 
-def _finish_members(members, stacks):
-    """Finalize + epilogue for every member once the sweep completes."""
+def _replicate(tree, mesh):
+    """Commit every jax leaf of ``tree`` replicated across ``mesh`` (empty
+    PartitionSpec): merged sink values, epilogue inputs and bindings are
+    held by EVERY device, so the epilogue runs replicated and the next
+    pass's shard executors find their broadcast values wherever they run."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sh) if isinstance(x, jax.Array) else x,
+        tree)
+
+
+def _finish_members(members, stacks, mesh=None):
+    """Finalize + epilogue for every member once the sweep completes.
+    Under a mesh the merged accumulators are replicated first (the
+    cross-device reduction already happened — `_run_sharded_stream`'s
+    shard merges, or GSPMD's all-reduce in whole mode), so finalize and
+    the epilogue execute replicated on every device."""
     for m, stack in zip(members, stacks):
         with _in_stack(stack):
+            if mesh is not None:
+                m.accs = _replicate(m.accs, mesh)
             m.finals = m.ps.finalize_accs(m.accs)
             m.epi_outs = _run_epilogue(m.ps, m.prog, m.finals,
-                                       m.epi_sources, m.smalls, m.bindings)
+                                       m.epi_sources, m.smalls, m.bindings,
+                                       mesh=mesh)
         for nid, buf in m.host_bufs.items():
             m.out_parts[nid] = [buf]
         for st in m.disk_stores.values():
@@ -505,15 +547,21 @@ def _finish_members(members, stacks):
 def _run_whole_group(members, mesh=None):
     """Whole-mode sweep of a group: the union of the members' sources is
     staged once, then every member's step consumes it (offset 0, one
-    partition)."""
+    partition).  Under a mesh, long-aligned inputs are committed sharded
+    over the data axis (when the row count divides — `_long_spec`) so XLA
+    runs the fused step SPMD with one logical shard per data slot."""
     group_pairs, maps = _group_staging(members)
     long_dim = members[0].ps.long_dim
+    spec = n_shards = None
+    if mesh is not None:
+        spec, n_shards = _long_spec(mesh, long_dim)
+        metrics.inc("shards", n_shards)
     blocks = {}
     for key, mat in group_pairs:
         data = mat.logical_data()
         arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
         if mesh is not None and mat.shape[0] == long_dim:
-            arr = jax.device_put(arr, NamedSharding(mesh, _long_spec(mesh)))
+            arr = jax.device_put(arr, NamedSharding(mesh, spec))
         blocks[key] = arr
     _count_stream(members, sum(mat.nbytes() for _, mat in group_pairs))
     stacks = [_member_stack(m) for m in members]
@@ -527,14 +575,30 @@ def _run_whole_group(members, mesh=None):
                 # targets are applied later by _store_results.
                 for nid, val in outputs.items():
                     m.out_parts[nid].append(val)
-    _finish_members(members, stacks)
+    _finish_members(members, stacks, mesh=mesh)
     return None
 
 
-def _execute(plan: Plan, *, onto: Optional[Plan] = None, mode: str = "auto",
-             mesh=None, donate: bool = True, sources=None, smalls=None,
-             prefetch: Optional[bool] = None, backend: Optional[str] = None,
-             epi_sources=None, bc_sources=None):
+def _execute(plan: Plan, **kw):
+    """`_execute_passes` plus the ISSUE 9 concurrency fix: a failure mid-
+    plan (a staging error, an interrupted stream) clears the thread's
+    resident-partition capture.  The residents in TLS belong to the
+    PREVIOUS materialize's final partition; after a partial run they no
+    longer correspond to any upcoming schedule, and leaving them pinned
+    holds device memory for the rest of the iteration scope."""
+    try:
+        return _execute_passes(plan, **kw)
+    except BaseException:
+        _set_tls_residents(None)
+        raise
+
+
+def _execute_passes(plan: Plan, *, onto: Optional[Plan] = None,
+                    mode: str = "auto",
+                    mesh=None, donate: bool = True, sources=None, smalls=None,
+                    prefetch: Optional[bool] = None,
+                    backend: Optional[str] = None,
+                    epi_sources=None, bc_sources=None):
     """Run every pass of ``plan`` in order, then register the results.
 
     ``onto`` is the equal-signature plan results belong to (the caller's
@@ -625,7 +689,8 @@ def _execute(plan: Plan, *, onto: Optional[Plan] = None, mode: str = "auto",
                         for _, mat in nxt.staged_sources(nxt_src))
                 entry = _run_stream_group(
                     [member], to_host=(mode == "ooc"), donate=donate,
-                    prefetch=prefetch, residents=residents, capture=capture)
+                    prefetch=prefetch, residents=residents, capture=capture,
+                    mesh=mesh)
                 residents = [entry] if entry is not None else None
                 disk_all.update(member.disk_stores)
         metrics.inc("pass_seconds", time.perf_counter() - t_pass)
@@ -657,7 +722,8 @@ def _stage_whole(mat) -> "jax.Array":
     return jnp.asarray(np.asarray(data)) if mat.on_host else data
 
 
-def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
+def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings,
+                  mesh=None):
     """Invoke the lowered epilogue exactly ONCE after a pass's merge.
 
     Inputs are the finalized sink values (device arrays out of the jitted
@@ -665,12 +731,21 @@ def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
     consumes, staged with ``jnp.asarray`` so a disk-backed plan never leaks
     ``np.memmap``/numpy buffers into the compiled callable — the
     ``epilogue_host_inputs`` counter records any violation.
+
+    Under a mesh the epilogue runs REPLICATED: its committed inputs (the
+    finalized sinks — already replicated by `_finish_members` — plus the
+    epilogue sources and earlier-pass bindings, replicated here) all live
+    on every mesh device, so one jit call executes the identical epilogue
+    per device with no cross-device traffic.
     """
     if prog.epilogue is None:
         return {}
     epi_vals = {}
     for nid, mat in ps.epilogue_source_pairs(epi_sources):
         epi_vals[nid] = _stage_whole(mat)
+    if mesh is not None:
+        epi_vals = _replicate(epi_vals, mesh)
+        bindings = _replicate(bindings, mesh)
     leaves = jax.tree_util.tree_leaves((sink_finals, epi_vals))
     metrics.inc("epilogue_host_inputs", sum(
         1 for leaf in leaves if isinstance(leaf, np.ndarray)))
@@ -684,24 +759,29 @@ def _run_epilogue(ps, prog, sink_finals, epi_sources, smalls, bindings):
     return outs
 
 
-def _long_spec(mesh):
-    """Shard the long dimension across every data-like mesh axis; model-like
-    axes (if any) replicate — GenOps are row-parallel (DESIGN.md §1.3)."""
-    data_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data", "x", "i"))
-    if not data_axes:
-        data_axes = (mesh.axis_names[0],)
-    return P(data_axes, None)
+def _long_spec(mesh, long_dim: int):
+    """(PartitionSpec, shard count) for a whole-mode long-aligned input:
+    the row dimension shards across the data tier when it divides evenly
+    (``distributed.sharding.resolve``'s divisibility check — the ``rows``
+    rule), otherwise replicates with shard count 1.  Model-like axes
+    always replicate — GenOps are row-parallel."""
+    from ..distributed import sharding as shd
+    spec = shd.resolve("rows|rep", (long_dim, 1), mesh)
+    n_shards = shd.data_axis_size(mesh) if spec[0] is not None else 1
+    return P(spec[0], None), n_shards
 
 
 def _inline_partitions(src_pairs, rows: int, n: int, donate: bool,
-                       reuse=None):
+                       reuse=None, row_start: int = 0, device=None):
     """Synchronous partition staging (prefetch-off ablation): same staging
     rules as the prefetch thread (storage.stage_block), but the disk read
     happens on the compute thread; only device_put dispatch overlaps.
     ``reuse`` maps source keys to the previous pass's resident FINAL
-    partition blocks — served in place of the last re-read."""
+    partition blocks — served in place of the last re-read.  ``row_start``
+    and ``device`` mirror the prefetcher's shard parameters: one shard's
+    half-open range, staged onto that shard's device."""
     from ..storage.prefetch import stage_block
-    start = 0
+    start = row_start
     while start < n:
         stop = min(start + rows, n)
         blocks = {}
@@ -710,7 +790,8 @@ def _inline_partitions(src_pairs, rows: int, n: int, donate: bool,
                 blocks[nid] = reuse[nid]
                 metrics.inc("prefetch_reuse_hits")
             else:
-                blocks[nid] = stage_block(mat, start, stop, donate=donate)
+                blocks[nid] = stage_block(mat, start, stop, donate=donate,
+                                          device=device)
         yield start, stop, blocks
         start = stop
 
@@ -804,7 +885,7 @@ def _catch_up(members, maps, stacks, joined, group_pairs, rows: int,
 def _run_stream_group(members, *, to_host: bool, donate: bool = True,
                       prefetch: Optional[bool] = None, residents=None,
                       capture: bool = False, admit=None,
-                      depth: Optional[int] = None):
+                      depth: Optional[int] = None, mesh=None):
     """Stream ONE co-scheduled group of member passes partition by
     partition: one prefetcher drive over the UNION of the members' staged
     sources, every member's step consuming each staged partition while it
@@ -824,8 +905,21 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
     they missed (`_catch_up`).  ``depth`` overrides the prefetch queue
     depth; None negotiates a group-aware depth
     (`storage.negotiate_depth`).
+
+    ``mesh`` routes the sweep to the SHARDED runner — one prefetcher drive
+    per device shard (`_run_sharded_stream`) — unless a live-admission
+    gate is active: mid-stream admission splices a member into ONE
+    sequential sweep at a partition boundary, and a sharded sweep has no
+    single boundary order to splice into, so gated streams run unsharded
+    (fm.serve instead serializes admission under a mesh — late requests
+    wait for the next window; see Engine._run_group).
     """
     from .. import storage  # deferred: storage depends on core.matrix
+
+    if mesh is not None and admit is None:
+        return _run_sharded_stream(members, mesh, to_host=to_host,
+                                   donate=donate, prefetch=prefetch,
+                                   depth=depth)
 
     n = members[0].ps.long_dim
     # Partition schedules in one group are power-of-two row counts over the
@@ -838,11 +932,18 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
         _alloc_out_targets(m, to_host)
 
     reuse_map = _reuse_from(residents, group_pairs, rows, n)
+    group_keys = {key for key, _ in group_pairs}
+    joined: dict[int, int] = {}  # member index -> partition start it joined at
+    stacks = [_member_stack(m) for m in members]
+    captured = None
     if prefetch is None:
         # Default on for slow-tier sources; a single-partition stream has
         # nothing to overlap, so skip the thread.
         prefetch = (storage.get_conf("prefetch") and n > rows
                     and any(mat.on_host for _, mat in group_pairs))
+    # Nothing may come between pipeline construction and the try below:
+    # the finally's close() is what guarantees an interrupted stream never
+    # leaves the worker thread alive or staged partitions pinned.
     if prefetch:
         if depth is None:
             # Group-aware depth: k members consume each staged partition,
@@ -857,11 +958,6 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
     else:
         parts = _inline_partitions(group_pairs, rows, n, donate,
                                    reuse=reuse_map)
-
-    group_keys = {key for key, _ in group_pairs}
-    joined: dict[int, int] = {}  # member index -> partition start it joined at
-    stacks = [_member_stack(m) for m in members]
-    captured = None
     try:
         with TRACER.span("stream", members=len(members), rows=rows,
                          reused=len(reuse_map or ())):
@@ -900,6 +996,199 @@ def _run_stream_group(members, *, to_host: bool, donate: bool = True,
         _catch_up(members, maps, stacks, joined, group_pairs, rows, donate)
     _finish_members(members, stacks)
     return captured
+
+
+def _to_device(tree, dev):
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, dev) if isinstance(x, jax.Array) else x,
+        tree)
+
+
+def _run_sharded_stream(members, mesh, *, to_host: bool, donate: bool = True,
+                        prefetch: Optional[bool] = None,
+                        depth: Optional[int] = None):
+    """Shard a group's partition sweep across the mesh's data axis
+    (ISSUE 9 tentpole — the paper's partition-per-thread NUMA mapping,
+    §III-D, as partition-range-per-device):
+
+    * the long dimension splits into contiguous partition-aligned row
+      ranges (`fusion.shard_ranges`), one per data shard;
+    * each shard runs its OWN prefetcher drive + per-device executor over
+      its range (the disk tier serves arbitrary ``block(start, stop)``),
+      staging blocks onto its device — shard workers are plain threads, so
+      N shards stream and compute concurrently;
+    * sink partials merge across shards through the SAME associative
+      ``combine`` the partition loop uses, pairwise (a tree all-reduce):
+      exactly one merge per shard boundary (``shard_merges``);
+    * the merged sinks replicate across the mesh and the epilogue runs
+      replicated (`_finish_members(mesh=...)`).
+
+    Row-addressed targets (ooc host buffers, ``save='disk'`` spill stores)
+    are SHARED by the shard clones — ranges are disjoint, so concurrent
+    row writes never overlap and a spill streams every shard's rows into
+    one on-disk matrix.  Device-resident long outputs gather to the first
+    shard's device in shard order, then re-commit sharded over the mesh
+    when the row count divides (`LoweredProgram.shard_specs`, resolved
+    through ``distributed.sharding.resolve``).
+
+    One failed shard fails the whole sweep (every drive is joined, the
+    first error re-raised AFTER all prefetchers shut down), so callers
+    never register partial sinks.  Capture/residency reuse is disabled
+    under a mesh: the resident-final-partition optimization assumes one
+    sequential sweep.  ``bytes_in`` accounting stays the union — each row
+    is staged by exactly one shard — with the per-shard byte split
+    published as ``shard_bytes_in``.
+    """
+    import concurrent.futures as cf
+
+    from .. import storage  # deferred: storage depends on core.matrix
+    from ..distributed import sharding as shd
+    from .fusion import shard_ranges
+
+    n = members[0].ps.long_dim
+    rows = min(m.ps.partition_rows for m in members)
+    group_pairs, maps = _group_staging(members)
+    _count_stream(members, sum(mat.nbytes() for _, mat in group_pairs))
+    for m in members:
+        _alloc_out_targets(m, to_host)
+
+    devices = shd.shard_devices(mesh)
+    ranges = shard_ranges(n, rows, len(devices))
+    shards = [(si, lo, hi, dev)
+              for si, ((lo, hi), dev) in enumerate(zip(ranges, devices))
+              if hi > lo]
+    metrics.inc("shards", len(shards))
+    row_bytes = sum(mat.nbytes() // max(1, mat.shape[0])
+                    for _, mat in group_pairs)
+    metrics.put("shard_bytes_in",
+                tuple(row_bytes * (hi - lo) for _, lo, hi, _d in shards))
+
+    if prefetch is None:
+        prefetch = (storage.get_conf("prefetch") and n > rows
+                    and any(mat.on_host for _, mat in group_pairs))
+    if prefetch and depth is None:
+        depth = storage.negotiate_depth(len(members), rows * row_bytes)
+
+    # Per-shard executor clones: the SAME compiled per-pass program run as
+    # per-device executors, one row range each.  Bindings (earlier passes'
+    # merged values) and device-resident smalls REPLICATE — each clone
+    # gets a copy committed to its shard's device, so the jitted step
+    # never sees inputs committed to two different devices.
+    clones_by_shard = []
+    for _si, _lo, _hi, dev in shards:
+        clones = []
+        for m in members:
+            bindings = _to_device(m.bindings, dev)
+            smalls = _to_device(m.smalls, dev)
+            sm = _PassExec(m.ps, m.prog, m.sources, smalls, m.epi_sources,
+                           bindings, out_nodes=m.out_nodes, scopes=m.scopes)
+            sm.host_bufs = m.host_bufs
+            sm.disk_stores = m.disk_stores
+            clones.append(sm)
+        clones_by_shard.append(clones)
+
+    # Metrics scopes are thread-local: capture the calling thread's full
+    # stack (ambient + each member's request scopes) here and re-enter it
+    # on the shard worker threads, so per-request attribution and the
+    # prefetcher's scope adoption keep working off the caller.
+    ambient = metrics.current_scopes()
+    amb_set = set(ambient)
+    stacks = [tuple(ambient)
+              + tuple(s for s in m.scopes if s not in amb_set)
+              for m in members]
+
+    def drive(shard_idx: int):
+        si, lo, hi, dev = shards[shard_idx]
+        clones = clones_by_shard[shard_idx]
+        with metrics.use_scopes(ambient):
+            if prefetch:
+                parts = storage.PartitionPrefetcher(
+                    group_pairs, rows, hi, row_start=lo, donate=donate,
+                    depth=depth, device=dev)
+            else:
+                parts = _inline_partitions(group_pairs, rows, hi, donate,
+                                           row_start=lo, device=dev)
+            try:
+                with TRACER.span("shard", idx=si, start=lo, stop=hi):
+                    for start, stop, blocks in parts:
+                        with TRACER.span("partition", start=start,
+                                         stop=stop, shard=si):
+                            for i, (sm, mp) in enumerate(zip(clones, maps)):
+                                donate_blocks = (donate
+                                                 and i == len(clones) - 1)
+                                with metrics.use_scopes(stacks[i]):
+                                    outputs = _member_step(
+                                        sm, blocks, mp, start, stop,
+                                        donate_blocks=donate_blocks, idx=i)
+                                sm.route_outputs(start, stop, outputs)
+            finally:
+                if hasattr(parts, "close"):
+                    parts.close()
+
+    with TRACER.span("stream", members=len(members), rows=rows,
+                     shards=len(shards)):
+        if len(shards) == 1:
+            drive(0)
+        else:
+            with cf.ThreadPoolExecutor(
+                    max_workers=len(shards),
+                    thread_name_prefix="fm-shard") as pool:
+                futures = [pool.submit(drive, i)
+                           for i in range(len(shards))]
+                errors = [f.exception() for f in futures]
+            for exc in errors:
+                if exc is not None:
+                    raise exc
+
+    dev0 = shards[0][3]
+    for mi, m in enumerate(members):
+        if m.ps.sinks:
+            entries = [(clones_by_shard[s][mi].accs, shards[s][3])
+                       for s in range(len(shards))]
+            while len(entries) > 1:
+                nxt = []
+                for j in range(0, len(entries) - 1, 2):
+                    (a, dev_a), (b, _dev_b) = entries[j], entries[j + 1]
+                    with TRACER.span("shard_combine", member=mi):
+                        a = m.prog.combine(a, _to_device(b, dev_a))
+                    metrics.inc("shard_merges")
+                    nxt.append((a, dev_a))
+                if len(entries) % 2:
+                    nxt.append(entries[-1])
+                entries = nxt
+            m.accs = entries[0][0]
+        for tmpl, _spec in m.out_nodes:
+            nid = tmpl.id
+            if nid in m.host_bufs or nid in m.disk_stores:
+                continue  # row-addressed shared targets: already written
+            for s in range(len(shards)):
+                m.out_parts[nid].extend(
+                    _to_device(p, dev0)
+                    for p in clones_by_shard[s][mi].out_parts[nid])
+
+    _finish_members(members, [_member_stack(m) for m in members], mesh=mesh)
+    _apply_output_specs(members, mesh)
+    return None
+
+
+def _apply_output_specs(members, mesh):
+    """Re-commit device-resident long-dimension outputs by their resolved
+    specs: shard the rows over the mesh when they divide (the ``rows``
+    rule), so a sharded materialize hands downstream consumers an already
+    data-sharded result."""
+    for m in members:
+        specs = m.prog.shard_specs(mesh)
+        for tmpl, _spec in m.out_nodes:
+            nid = tmpl.id
+            parts = m.out_parts.get(nid)
+            if not parts or isinstance(parts[0], np.ndarray):
+                continue
+            spec = specs.get(nid)
+            if spec is None or not len(spec) or spec[0] is None:
+                continue
+            data = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            m.out_parts[nid] = [
+                jax.device_put(data, NamedSharding(mesh, spec))]
 
 
 def _store_results(plan: Plan, sink_finals, out_parts, *, to_host: bool,

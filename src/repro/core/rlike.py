@@ -482,7 +482,9 @@ def conv_store(x, where: str, *, name: str = "") -> FM:
 # -- the disk tier / EM-matrix registry (repro/storage/) ----------------------
 def set_conf(**kw) -> dict:
     """fm.set.conf: data_dir / prefetch / prefetch_depth /
-    io_partition_bytes / vmem_partition_bytes / backend / direct_io."""
+    io_partition_bytes / vmem_partition_bytes / backend / direct_io /
+    mesh (a jax Mesh from launch.mesh.make_host_mesh — installs sharded
+    execution engine-wide; ``mesh=False`` clears it)."""
     from ..storage import registry
     return registry.set_conf(**kw)
 
@@ -542,8 +544,8 @@ def batch(*request_groups, **kw):
         h.value
 
     Keywords (``mode``, ``backend``, ``donate``, ``prefetch``,
-    ``reuse_plans``) follow ``fm.materialize``; ``mode='auto'`` picks per
-    group from the union of that group's sources."""
+    ``reuse_plans``, ``mesh``) follow ``fm.materialize``; ``mode='auto'``
+    picks per group from the union of that group's sources."""
     from . import batch as batch_mod
     b = batch_mod.Batch(**kw)
     if not request_groups:
@@ -574,17 +576,18 @@ def serve(**kw):
             mu, G = h1.result(), h2.result()
 
     Keywords are `Engine`'s (window_ms, max_window_requests,
-    max_concurrent_streams, max_inflight_bytes, midstream_admission,
-    mode, backend, donate, prefetch, prefetch_depth, reuse_plans)."""
+    max_concurrent_streams, max_inflight_bytes, max_pending_requests,
+    submit_timeout_s, midstream_admission, mode, backend, donate,
+    prefetch, prefetch_depth, reuse_plans, mesh)."""
     from . import serve as serve_mod
     return serve_mod.Engine(**kw)
 
 
 def __getattr__(name):
     # fm.Engine without importing the serving layer at fm import time.
-    if name == "Engine":
-        from .serve import Engine
-        return Engine
+    if name in ("Engine", "EngineSaturated"):
+        from . import serve as serve_mod
+        return getattr(serve_mod, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

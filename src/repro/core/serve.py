@@ -52,6 +52,12 @@ from ..observability.trace import TRACER
 MIN_INFLIGHT_BYTES = 32 << 20
 
 
+class EngineSaturated(RuntimeError):
+    """`Engine.submit` backpressure (ISSUE 9): the pending queue held
+    ``max_pending_requests`` for the whole ``submit_timeout_s`` wait.  The
+    request was NOT enqueued; retry later or raise the cap."""
+
+
 class ServeRequest(batch_mod.BatchRequest):
     """One submitted request: a BatchRequest plus its future + timing."""
 
@@ -160,11 +166,26 @@ class Engine:
         telemetry (≈ ``bandwidth_window_s`` seconds of disk work,
         ≥ MIN_INFLIGHT_BYTES); None disables the cap.  At least one group
         is always admitted, so the cap can never deadlock.
+    max_pending_requests : int or None
+        Submitter backpressure (ISSUE 9): the pending queue is bounded.
+        A ``submit()`` that finds the queue full blocks up to
+        ``submit_timeout_s`` for the scheduler to drain a window, then
+        raises `EngineSaturated` (``serve_rejections`` counter).  None
+        (default) keeps the queue unbounded — the pre-ISSUE-9 behavior,
+        where a burst of submitters could grow the queue without limit.
+    submit_timeout_s : float
+        How long a blocked ``submit()`` waits for queue space before
+        rejecting (default 0: reject immediately when full).
     midstream_admission : bool
         Allow late same-group plans to join a live sweep at the next
-        partition boundary (default True).
-    mode / backend / donate / prefetch / reuse_plans
-        Per-group execution knobs, following ``fm.materialize``.
+        partition boundary (default True).  Under a ``mesh`` admission is
+        SERIALIZED — a sharded sweep has no single partition-boundary
+        order to splice into, so late requests wait for the next window
+        (see `_run_group`).
+    mode / backend / donate / prefetch / reuse_plans / mesh
+        Per-group execution knobs, following ``fm.materialize``
+        (``mesh=None`` adopts the configured ``fm.set_conf(mesh=...)``
+        at submit time).
     prefetch_depth : int or None
         Override the group-aware negotiated prefetch depth.
     """
@@ -174,17 +195,23 @@ class Engine:
                  max_concurrent_streams: int = 2,
                  max_inflight_bytes="auto",
                  bandwidth_window_s: float = 0.25,
+                 max_pending_requests: Optional[int] = None,
+                 submit_timeout_s: float = 0.0,
                  midstream_admission: bool = True,
                  mode: str = "auto", backend: Optional[str] = None,
                  donate: bool = True, prefetch: Optional[bool] = None,
                  prefetch_depth: Optional[int] = None,
-                 reuse_plans: bool = True):
+                 reuse_plans: bool = True, mesh=None):
         self.window_s = max(float(window_ms), 0.0) / 1e3
         self.max_window_requests = (int(max_window_requests)
                                     if max_window_requests else None)
         self.max_inflight_bytes = max_inflight_bytes
         self.bandwidth_window_s = float(bandwidth_window_s)
+        self.max_pending_requests = (int(max_pending_requests)
+                                     if max_pending_requests else None)
+        self.submit_timeout_s = max(float(submit_timeout_s), 0.0)
         self.midstream_admission = bool(midstream_admission)
+        self.mesh = mesh
         self.mode = mode
         self.backend = lowering.resolve_backend(backend)
         self.donate = donate
@@ -222,17 +249,36 @@ class Engine:
                 raise TypeError(f"submit() takes lazy matrices, got {m!r}")
         req = ServeRequest(mats, structured=len(mats) != 1)
         metrics.inc("serve_requests")
-        if not batch_mod._plan_request(req, self.backend, None,
+        mesh = mz._default_mesh(self.mesh)
+        if not batch_mod._plan_request(req, self.backend, mesh,
                                        self.reuse_plans):
             # Pure pass-through: every output is already physical.
             req.future.set_result(
                 req.results() if req.structured else req.results()[0])
             return RequestHandle(req)
-        if self.midstream_admission and self._try_midstream(req):
+        if (mesh is None and self.midstream_admission
+                and self._try_midstream(req)):
             return RequestHandle(req)
         with self._cv:
             if self._closed:
                 raise RuntimeError("engine is closed")
+            # Submitter backpressure (ISSUE 9): an unbounded pending list
+            # let a submit storm outrun the scheduler without limit.  Wait
+            # for a window to drain up to submit_timeout_s, then reject.
+            if self.max_pending_requests is not None:
+                deadline = time.perf_counter() + self.submit_timeout_s
+                while (len(self._pending) >= self.max_pending_requests
+                       and not self._closed):
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        metrics.inc("serve_rejections")
+                        raise EngineSaturated(
+                            f"pending queue full "
+                            f"({self.max_pending_requests} requests) for "
+                            f"{self.submit_timeout_s:g}s")
+                    self._cv.wait(timeout=left)
+                if self._closed:
+                    raise RuntimeError("engine is closed")
             self._pending.append(req)
             metrics.observe("serve_queue_depth", len(self._pending))
             self._cv.notify_all()
@@ -267,6 +313,9 @@ class Engine:
                         break
                     self._cv.wait(timeout=left)
                 window, self._pending = self._pending, []
+                # Wake submitters blocked on max_pending_requests: the
+                # queue just drained.
+                self._cv.notify_all()
             try:
                 self._run_window(window)
             except Exception as exc:  # noqa: BLE001 - fail the window, not the loop
@@ -325,22 +374,30 @@ class Engine:
             raise ValueError(f"unknown mode {group_mode!r}")
 
         gate = None
+        mesh = mz._default_mesh(self.mesh)
         self._acquire_bandwidth(union_bytes)
         try:
             with TRACER.span("serve_group", members=len(members), round=r,
                              mode=group_mode):
                 if group_mode == "whole":
-                    mz._run_whole_group(members)
+                    mz._run_whole_group(members, mesh=mesh)
                 else:
+                    # Mid-stream admission is serialized under a mesh: the
+                    # gate splices a late member into ONE sequential sweep
+                    # at a partition boundary, but a sharded sweep has N
+                    # concurrent boundary orders.  No gate opens, so late
+                    # requests queue for the next window instead
+                    # (test_serve: midstream_admits == 0 under mesh).
                     admit = None
-                    if self.midstream_admission and r == 0:
+                    if (mesh is None and self.midstream_admission
+                            and r == 0):
                         gate = self._open_gate(members, group_mode)
                         admit = gate.take
                     mz._run_stream_group(
                         members, to_host=(group_mode == "ooc"),
                         donate=self.donate, prefetch=self.prefetch,
                         capture=False, admit=admit,
-                        depth=self.prefetch_depth)
+                        depth=self.prefetch_depth, mesh=mesh)
             admitted = gate.admitted if gate is not None else []
             pairs = list(zip(members, reqs)) + [(m, req)
                                                 for req, m in admitted]
@@ -463,9 +520,12 @@ class Engine:
         out["midstream_admits"] = int(st.get("midstream_admits", 0))
         return out
 
-    def close(self):
+    def close(self, release_storage: bool = False):
         """Drain every pending request, stop the scheduler, shut the pool
-        down.  Idempotent; the context-manager exit calls it."""
+        down.  Idempotent; the context-manager exit calls it.
+        ``release_storage=True`` additionally removes every registry-OWNED
+        lazily-created data dir (`storage.registry.cleanup`) — never a
+        user-configured ``data_dir``."""
         with self._cv:
             if self._closed:
                 self._cv.notify_all()
@@ -473,6 +533,9 @@ class Engine:
             self._cv.notify_all()
         self._scheduler.join(timeout=60.0)
         self._pool.shutdown(wait=True)
+        if release_storage:
+            from ..storage import registry
+            registry.cleanup()
 
     def __enter__(self) -> "Engine":
         return self

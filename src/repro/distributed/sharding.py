@@ -61,7 +61,50 @@ RULES: dict[str, list] = {
     "apps": [],                       # zamba2 shared-block applications
     "rep": [],                        # force-replicated (gathered KV in
                                       # sequence-parallel attention)
+    # Engine matrices: the long (streamed-row) dimension of a materialized
+    # output shards over the data tier — the sharded partition loop
+    # (core/materialize) writes each device's row range; sinks/epilogue
+    # values use "rep".  Falls through to replicate when the row count
+    # does not divide (resolve's divisibility check).
+    "rows": [("pod", "data"), ("data",)],
 }
+
+#: Mesh axes that carry the engine's DATA tier: the I/O-level partition
+#: loop shards its row ranges over the product of these axes; any other
+#: axis (``model``) replicates the sweep.  Shared with
+#: ``materialize._long_spec`` so the whole-mode input sharding and the
+#: streaming shard runner always agree on the shard count.
+DATA_AXES = ("pod", "data", "x", "i")
+
+
+def mesh_data_axes(mesh: Mesh) -> tuple:
+    """The mesh's data-tier axis names, in mesh order (never empty: a mesh
+    with no recognized data axis falls back to its first axis)."""
+    axes = tuple(a for a in mesh.axis_names if a in DATA_AXES)
+    return axes or (mesh.axis_names[0],)
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    """Number of row shards the engine's partition loop splits into."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in mesh_data_axes(mesh):
+        n *= int(sizes[a])
+    return n
+
+
+def shard_devices(mesh: Mesh) -> list:
+    """One representative device per data shard (index 0 along non-data
+    axes), in row-shard order — the devices the sharded partition loop
+    drives its per-shard prefetchers and fused steps on."""
+    import numpy as np
+    names = list(mesh.axis_names)
+    devs = np.asarray(mesh.devices, dtype=object)
+    data_idx = [names.index(a) for a in mesh_data_axes(mesh)]
+    other = [i for i in range(devs.ndim) if i not in data_idx]
+    devs = np.transpose(devs, data_idx + other).reshape(
+        data_axis_size(mesh), -1)
+    return list(devs[:, 0])
 
 
 def resolve(axes: str, shape, mesh: Mesh) -> P:

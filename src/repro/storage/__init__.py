@@ -15,9 +15,9 @@ Three pieces, mirroring FlashR's external-memory stack:
 from . import format, prefetch, registry, store
 from .format import (MatrixHeader, create_matrix, open_matrix, read_header,
                      save_matrix)
-from .prefetch import (PartitionPrefetcher, PrefetchError, negotiate_depth,
-                       stage_block)
-from .registry import (get_conf, get_dense_matrix, list_matrices,
+from .prefetch import (PartitionPrefetcher, PrefetchError, live_prefetchers,
+                       negotiate_depth, stage_block, staged_leaks)
+from .registry import (cleanup, get_conf, get_dense_matrix, list_matrices,
                        load_dense_matrix, save_dense_matrix, set_conf,
                        spill_path)
 from .store import MmapStore
@@ -25,8 +25,8 @@ from .store import MmapStore
 __all__ = [
     "format", "prefetch", "registry", "store",
     "MatrixHeader", "MmapStore", "PartitionPrefetcher", "PrefetchError",
-    "create_matrix", "open_matrix", "read_header", "save_matrix",
-    "get_conf", "get_dense_matrix", "list_matrices", "load_dense_matrix",
-    "negotiate_depth", "save_dense_matrix", "set_conf", "spill_path",
-    "stage_block",
+    "cleanup", "create_matrix", "open_matrix", "read_header", "save_matrix",
+    "get_conf", "get_dense_matrix", "list_matrices", "live_prefetchers",
+    "load_dense_matrix", "negotiate_depth", "save_dense_matrix", "set_conf",
+    "spill_path", "stage_block", "staged_leaks",
 ]

@@ -22,6 +22,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+import weakref
 from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
@@ -62,7 +63,7 @@ def negotiate_depth(n_members: int, partition_nbytes: int,
 
 
 def stage_block(mat, start: int, stop: int, *, donate: bool = True,
-                to_device: bool = True):
+                to_device: bool = True, device=None):
     """Read one I/O-level partition from ``mat`` and stage it for the fused
     step — the single definition of the staging rules, shared by the
     prefetch thread and the synchronous (prefetch-off) path:
@@ -77,6 +78,10 @@ def stage_block(mat, start: int, stop: int, *, donate: bool = True,
     worker's own track when pipelined) and feeds the slow-tier read
     bandwidth counters (``stage_bytes_read`` / ``stage_read_seconds``:
     memmap/numpy reads only — device-resident blocks involve no tier read).
+
+    ``device`` pins the staged block to one device of a mesh (the sharded
+    partition loop stages each shard's rows onto that shard's device);
+    ``None`` keeps the default uncommitted placement.
     """
     t0 = time.perf_counter()
     blk = mat.block(start, stop)
@@ -87,7 +92,11 @@ def stage_block(mat, start: int, stop: int, *, donate: bool = True,
         metrics.inc("stage_bytes_read", blk.nbytes)
         metrics.inc("stage_read_seconds", time.perf_counter() - t0)
         if to_device:
-            blk = jax.device_put(blk)
+            blk = jax.device_put(blk, device)
+    elif device is not None:
+        # Cross-device copy: commits to the shard's device and leaves the
+        # resident source buffer untouched, so donation stays safe.
+        blk = jax.device_put(blk, device)
     elif donate:
         blk = jnp.copy(blk)
     TRACER.record("stage", t0, time.perf_counter(),
@@ -112,6 +121,28 @@ class PrefetchError(RuntimeError):
     """A staging-thread failure, re-raised on the consumer side."""
 
 
+#: Every constructed prefetcher, weakly held — leak-audit introspection
+#: (ISSUE 9): after a stream ends (normally or via a fault) no entry may
+#: have a live worker thread or staged partitions still queued.
+_LIVE: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def live_prefetchers() -> list:
+    """Prefetchers whose worker thread is still running — must be empty
+    between streams; a non-empty result is a shutdown leak."""
+    return [p for p in list(_LIVE) if p.alive]
+
+
+def staged_leaks() -> list:
+    """Closed-or-dead prefetchers still holding staged partitions in their
+    queue (device memory pinned past shutdown) — must be empty."""
+    leaks = []
+    for p in list(_LIVE):
+        if not p.alive and p.queued:
+            leaks.append(p)
+    return leaks
+
+
 class PartitionPrefetcher:
     """Iterate ``(start, stop, {node_id: staged_block})`` over partitions.
 
@@ -122,12 +153,18 @@ class PartitionPrefetcher:
     def __init__(self, sources: Sequence[Tuple[int, object]],
                  partition_rows: int, long_dim: int, *, depth: int = 2,
                  donate: bool = True, stage_to_device: bool = True,
-                 reuse: Optional[dict] = None):
+                 reuse: Optional[dict] = None, row_start: int = 0,
+                 device=None):
         if depth < 1:
             raise ValueError("prefetch depth must be >= 1")
         self.sources = list(sources)
         self.partition_rows = int(partition_rows)
         self.long_dim = int(long_dim)
+        # Half-open row range [row_start, long_dim): a sharded partition
+        # loop drives one prefetcher per device shard, each over its own
+        # range, staged onto that shard's ``device``.
+        self.row_start = int(row_start)
+        self.device = device
         self.donate = donate
         self.stage_to_device = stage_to_device
         # {node_id: staged block} for the FINAL partition: when the previous
@@ -145,13 +182,14 @@ class PartitionPrefetcher:
         self._scopes = metrics.current_scopes()
         self._thread = threading.Thread(
             target=self._worker, name="fm-prefetch", daemon=True)
+        _LIVE.add(self)
         self._thread.start()
 
     # -- staging thread --------------------------------------------------------
     def _worker(self):
         with metrics.use_scopes(self._scopes):
             try:
-                start = 0
+                start = self.row_start
                 while start < self.long_dim and not self._stop.is_set():
                     stop = min(start + self.partition_rows, self.long_dim)
                     final = stop >= self.long_dim
@@ -166,7 +204,8 @@ class PartitionPrefetcher:
                         try:
                             blocks[nid] = stage_block(
                                 mat, start, stop, donate=self.donate,
-                                to_device=self.stage_to_device)
+                                to_device=self.stage_to_device,
+                                device=self.device)
                         except Exception as exc:
                             raise PrefetchError(
                                 f"prefetch thread failed staging rows "
@@ -214,19 +253,39 @@ class PartitionPrefetcher:
 
     def close(self):
         """Stop the staging thread and drop queued partitions.  Idempotent;
-        safe to call mid-stream (early consumer exit) or after exhaustion."""
+        safe to call mid-stream (early consumer exit) or after exhaustion.
+
+        Drain and join must INTERLEAVE: a worker parked in ``_put`` on a
+        full queue re-checks ``_stop`` only on its 50 ms timeout, so a
+        single drain *before* the join races it — the worker could enqueue
+        one more staged partition after the drain and leave device blocks
+        pinned in the dead pipeline's queue (the ISSUE 9 shutdown leak).
+        """
         self._stop.set()
+        deadline = time.monotonic() + 10.0
+        while True:
+            self._drain()
+            self._thread.join(timeout=0.05)
+            if not self._thread.is_alive() or time.monotonic() > deadline:
+                break
+        self._drain()
+        self._closed = True
+
+    def _drain(self):
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
             pass
-        self._thread.join(timeout=10.0)
-        self._closed = True
 
     @property
     def alive(self) -> bool:
         return self._thread.is_alive()
+
+    @property
+    def queued(self) -> int:
+        """Staged partitions currently parked in the queue (leak audit)."""
+        return self._q.qsize()
 
     def __enter__(self):
         return self

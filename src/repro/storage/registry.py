@@ -16,10 +16,12 @@ RAM beyond the mmap handles.
 """
 from __future__ import annotations
 
+import atexit
 import itertools
 import os
 import pathlib
 import re
+import shutil
 import tempfile
 import threading
 from typing import Optional
@@ -36,7 +38,15 @@ _CONF = {
     "prefetch": True,       # default for ooc execution (overridable per call)
     "prefetch_depth": 2,    # bounded-queue depth (2 = double buffering)
     "direct_io": False,     # best-effort page-cache bypass on partition reads
+    "mesh": None,           # default jax Mesh for sharded execution (ISSUE 9)
 }
+
+#: Temp dirs the registry itself mkdtemp'd (NEVER a user-supplied
+#: data_dir): removed at interpreter exit and by ``cleanup()`` /
+#: ``Engine.close(release_storage=True)`` — repeated test/bench runs used
+#: to leak one ``fm-data-*`` dir per process (ISSUE 9 satellite).
+_OWNED_DIRS: list[pathlib.Path] = []
+_ATEXIT_REGISTERED = False
 
 _spill_ids = itertools.count()
 
@@ -53,7 +63,8 @@ def set_conf(*, data_dir: Optional[str] = None,
              io_partition_bytes: Optional[int] = None,
              vmem_partition_bytes: Optional[int] = None,
              backend: Optional[str] = None,
-             direct_io: Optional[bool] = None) -> dict:
+             direct_io: Optional[bool] = None,
+             mesh=None) -> dict:
     """fm.set.conf: configure the storage tier + execution engine.
     Returns the live config.
 
@@ -66,6 +77,12 @@ def set_conf(*, data_dir: Optional[str] = None,
     core/lowering.py).  ``direct_io`` enables best-effort page-cache bypass
     (posix_fadvise/madvise DONTNEED) after each disk partition read, so
     benchmarks can measure genuinely cold reads.
+
+    ``mesh`` installs a default jax ``Mesh`` (launch.mesh.make_host_mesh)
+    for SHARDED execution: every materialize/batch/serve drive splits its
+    partition loop over the mesh's data axis (core/materialize).  Pass
+    ``mesh=False`` to clear it (``None`` means "leave unchanged", like
+    every other knob here).
     """
     if data_dir is not None:
         p = pathlib.Path(data_dir)
@@ -90,6 +107,15 @@ def set_conf(*, data_dir: Optional[str] = None,
         lowering_mod.DEFAULT_BACKEND = backend
     if direct_io is not None:
         _CONF["direct_io"] = bool(direct_io)
+    if mesh is not None:
+        if mesh is False:
+            _CONF["mesh"] = None
+        else:
+            if not (hasattr(mesh, "axis_names") and hasattr(mesh, "devices")):
+                raise TypeError(
+                    f"mesh must be a jax Mesh (see launch.mesh."
+                    f"make_host_mesh) or False to clear; got {mesh!r}")
+            _CONF["mesh"] = mesh
     return dict(_CONF, io_partition_bytes=matrix_mod.IO_PARTITION_BYTES,
                 vmem_partition_bytes=matrix_mod.VMEM_PARTITION_BYTES,
                 backend=lowering_mod.DEFAULT_BACKEND)
@@ -108,12 +134,34 @@ def get_conf(key: str):
 def data_dir() -> pathlib.Path:
     """The configured data directory (lazily a fresh temp dir, so the disk
     tier works out of the box in tests and examples).  Thread-safe: the
-    lazy init is locked so concurrent first touches agree on ONE dir."""
+    lazy init is locked so concurrent first touches agree on ONE dir.
+    Lazily-created dirs are registry-OWNED: they are removed at process
+    exit (atexit) or by ``cleanup()``; a user-supplied ``data_dir`` is
+    never touched."""
+    global _ATEXIT_REGISTERED
     with _CONF_LOCK:
         if _CONF["data_dir"] is None:
-            _CONF["data_dir"] = pathlib.Path(
-                tempfile.mkdtemp(prefix="fm-data-"))
+            d = pathlib.Path(tempfile.mkdtemp(prefix="fm-data-"))
+            _CONF["data_dir"] = d
+            _OWNED_DIRS.append(d)
+            if not _ATEXIT_REGISTERED:
+                atexit.register(cleanup)
+                _ATEXIT_REGISTERED = True
         return _CONF["data_dir"]
+
+
+def cleanup() -> list[pathlib.Path]:
+    """Remove every ``fm-data-*`` dir the registry itself created and
+    forget them.  User-configured directories are never removed.  Returns
+    the removed paths.  Runs automatically at interpreter exit; callable
+    any time (``Engine.close(release_storage=True)`` routes here)."""
+    with _CONF_LOCK:
+        owned, _OWNED_DIRS[:] = list(_OWNED_DIRS), []
+        for d in owned:
+            shutil.rmtree(d, ignore_errors=True)
+        if _CONF["data_dir"] in owned:
+            _CONF["data_dir"] = None
+    return owned
 
 
 def _sanitize(name: str) -> str:

@@ -132,6 +132,158 @@ def test_multidevice_equivalence():
     assert '"ok": true' in proc.stdout
 
 
+_MESH_GRID_TEST = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%d" % {ndev})
+    import json, threading, time
+    import numpy as np, jax
+
+    from repro.core import fm
+    from repro.core import materialize as mz
+    from repro.core.matrix import DenseStore, FMMatrix
+    from repro.launch.mesh import make_host_mesh
+    from repro import storage
+
+    NDEV = {ndev}
+    assert len(jax.devices()) == NDEV
+    mesh = make_host_mesh(NDEV)
+
+    rng = np.random.default_rng(7)
+    A = rng.normal(size=(512, 6)).astype(np.float32)
+    fm.set_conf(io_partition_bytes=2048)   # 512x6 f32 -> >= 8 partitions
+
+    def run_cases(X, mode):
+        return [
+            ("colMeans", fm.as_np(fm.materialize(fm.colMeans(X),
+                                                 mode=mode)[0])),
+            ("colSds", fm.as_np(fm.materialize(fm.colSds(X),
+                                               mode=mode)[0])),
+            ("crossprod", fm.as_np(fm.materialize(fm.crossprod(X),
+                                                  mode=mode)[0])),
+            ("scale", fm.as_np(fm.materialize(fm.scale(X),
+                                              mode=mode)[0])),
+        ]
+
+    # Single-device baselines (no mesh configured).
+    base = {}
+    for mode, mk in (("whole", "mem"), ("stream", "mem"), ("ooc", "disk")):
+        X = fm.conv_R2FM(A)
+        if mk == "disk":
+            X = fm.conv_store(X, "disk")
+        base[mode] = run_cases(X, mode)
+
+    # Sharded runs: the engine-wide conf mesh (fm.set_conf) for stream/ooc,
+    # the explicit materialize(mesh=) argument for whole — both entry
+    # points must key the plan cache and shard identically.
+    for mode, mk in (("whole", "mem"), ("stream", "mem"), ("ooc", "disk")):
+        X = fm.conv_R2FM(A)
+        if mk == "disk":
+            X = fm.conv_store(X, "disk")
+        if mode == "whole":
+            got = [(nm, fm.as_np(fm.materialize(getattr(fm, nm)(X)
+                                                if nm != "scale"
+                                                else fm.scale(X),
+                                                mode=mode, mesh=mesh)[0]))
+                   for nm, _ in base[mode]]
+        else:
+            fm.set_conf(mesh=mesh)
+            fm.reset_exec_stats()
+            got = run_cases(X, mode)
+            st = fm.exec_stats()
+            assert st["shards"] > 0 and st["shards"] % NDEV == 0, \\
+                (mode, st["shards"])
+            fm.set_conf(mesh=False)
+        for (nm, want), (nm2, have) in zip(base[mode], got):
+            assert nm == nm2
+            assert np.allclose(want, have, rtol=1e-4, atol=1e-4), \\
+                (mode, nm, np.abs(want - have).max())
+
+    # One combine-merge per shard boundary: a solo single-pass stream
+    # materialize merges exactly shards-1 times.
+    fm.set_conf(mesh=mesh)
+    fm.reset_exec_stats()
+    X = fm.conv_R2FM(A)
+    (g,) = fm.materialize(fm.crossprod(X), mode="stream")
+    st = fm.exec_stats()
+    assert st["shards"] == NDEV, st
+    assert st["shard_merges"] == NDEV - 1, st
+    assert len(st["shard_bytes_in"]) == NDEV
+    assert sum(st["shard_bytes_in"]) == A.nbytes
+    assert np.allclose(fm.as_np(g), A.T @ A, rtol=1e-4, atol=1e-3)
+
+    # Write-through save='disk': every shard's rows land in ONE store.
+    D = fm.conv_store(fm.conv_R2FM(A), "disk")
+    (S,) = fm.materialize(fm.scale(D, save="disk"), mode="ooc")
+    ref = (A - A.mean(0)) / A.std(0, ddof=1)
+    assert np.allclose(fm.as_np(S), ref, rtol=1e-3, atol=1e-3)
+
+    # Grouped streams shard too (fm.batch): one stream, NDEV shards.
+    fm.reset_exec_stats()
+    X = fm.conv_R2FM(A)
+    means, (sds, ctp) = fm.batch(fm.colMeans(X),
+                                 (fm.colSds(X), fm.crossprod(X)),
+                                 mode="stream")
+    st = fm.exec_stats()
+    assert st["streams"] == 1 and st["shards"] == NDEV, st
+    assert np.allclose(fm.as_np(means), A.mean(0), atol=1e-4)
+    assert np.allclose(fm.as_np(ctp), A.T @ A, rtol=1e-4, atol=1e-3)
+
+    # Interrupted shard: one shard's staging fails mid-sweep -> the whole
+    # materialize fails, NO sinks register, and no prefetcher worker or
+    # staged partition outlives the failure.
+    class FlakyStore(DenseStore):
+        def __init__(self, data, fail_after):
+            super().__init__(np.asarray(data))
+            self.fail_after = fail_after
+            self.reads = 0
+            self._lk = threading.Lock()
+        def block(self, start, stop):
+            with self._lk:
+                self.reads += 1
+                n = self.reads
+            if n > self.fail_after:
+                raise RuntimeError("injected shard staging failure")
+            return super().block(start, stop)
+
+    n_threads0 = threading.active_count()
+    Xf = FMMatrix(A.shape, A.dtype, store=FlakyStore(A, 2), name="flaky")
+    G = fm.crossprod(fm.FM(Xf) * 2.0)
+    try:
+        fm.materialize(G, mode="stream")
+        raise SystemExit("expected injected failure")
+    except RuntimeError:
+        pass
+    assert G.m.is_virtual, "partial sink registered"
+    assert getattr(G.m, "cached_store", None) is None
+    deadline = time.time() + 10
+    while time.time() < deadline and (
+            storage.live_prefetchers() or
+            threading.active_count() > n_threads0):
+        time.sleep(0.05)
+    assert storage.live_prefetchers() == [], "prefetcher leaked"
+    assert storage.staged_leaks() == [], "staged partitions leaked"
+    assert threading.active_count() <= n_threads0, "shard thread leaked"
+
+    fm.set_conf(mesh=False)
+    print(json.dumps({"ok": True, "ndev": NDEV}))
+""")
+
+
+@pytest.mark.parametrize("ndev", [1, 2, 8])
+def test_mesh_parity_grid(ndev):
+    """Sharded materialize == single-device across algorithms x modes,
+    with exact shard accounting, under 1/2/8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_GRID_TEST.replace("{ndev}", str(ndev))],
+        capture_output=True, text=True, env=env, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert '"ok": true' in proc.stdout
+
+
 def test_dryrun_smoke_subprocess():
     """A tiny end-to-end dry-run (reduced arch, 8-device mesh) proving the
     lowering/compile/analysis pipeline works without the 512-device env."""

@@ -26,6 +26,12 @@ Knobs (used by CI):
                   a ``fm.serve`` Engine with its outputs split into 2–3
                   requests SUBMITTED FROM CONCURRENT THREADS — the
                   admission window + group runner must match the oracle
+  FUZZ_MESH       when set (nightly / the 8-device CI arm), every program
+                  ALSO executes SHARDED over a host mesh
+                  (``fm.materialize(mesh=make_host_mesh())``) — the
+                  per-shard drives + cross-shard combine merges must match
+                  the oracle for every cell (under 1 forced device this
+                  still exercises the sharded code path with one shard)
 """
 from __future__ import annotations
 
@@ -44,6 +50,20 @@ EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "25"))
 BASE_SEED = int(os.environ.get("FUZZ_SEED", "0"))
 FUZZ_BATCH = os.environ.get("FUZZ_BATCH", "") not in ("", "0")
 FUZZ_SERVE = os.environ.get("FUZZ_SERVE", "") not in ("", "0")
+FUZZ_MESH = os.environ.get("FUZZ_MESH", "") not in ("", "0")
+
+_HOST_MESH = None
+
+
+def _host_mesh():
+    """The fuzzer's shared host mesh over however many devices XLA exposes
+    (1 locally; 8 under the CI --xla_force_host_platform_device_count=8
+    arm).  Built once: mesh identity keys the plan cache."""
+    global _HOST_MESH
+    if _HOST_MESH is None:
+        from repro.launch.mesh import make_host_mesh
+        _HOST_MESH = make_host_mesh()
+    return _HOST_MESH
 
 CELLS = [(backend, mode)
          for backend in ("xla", "pallas")
@@ -411,6 +431,19 @@ def eval_engine(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
     return [np.asarray(fm.as_np(o), np.float64) for o in outs]
 
 
+def eval_engine_meshed(prog: Program, backend: str,
+                       mode: str) -> List[np.ndarray]:
+    """The FUZZ_MESH arm: the same program materialized with an explicit
+    host mesh — whole mode runs the step SPMD over sharded inputs,
+    stream/ooc split the partition sweep into per-device shard drives
+    merged through each plan's ``combine``."""
+    exec_mode = {"mem": "whole", "stream": "stream", "ooc": "ooc"}[mode]
+    lazies = _lazy_outputs(prog, mode)
+    outs = fm.materialize(*lazies, mode=exec_mode, backend=backend,
+                          mesh=_host_mesh())
+    return [np.asarray(fm.as_np(o), np.float64) for o in outs]
+
+
 def eval_engine_batched(prog: Program, backend: str, mode: str) -> List[np.ndarray]:
     """The FUZZ_BATCH arm: the same program, but its outputs split
     round-robin into 2–3 independent requests over the shared sources and
@@ -478,6 +511,8 @@ def check_cell(prog: Program, backend: str, mode: str) -> Optional[str]:
     try:
         refs = eval_numpy(prog)
         arms = [("", eval_engine(prog, backend, mode))]
+        if FUZZ_MESH:
+            arms.append(("meshed:", eval_engine_meshed(prog, backend, mode)))
         if FUZZ_BATCH:
             arms.append(("batched:", eval_engine_batched(prog, backend, mode)))
         if FUZZ_SERVE:
@@ -706,6 +741,33 @@ def test_known_program_served_parity():
             err = float(np.max(np.abs(got - ref))) / scale
             assert err <= 2e-3, (
                 f"cell=({backend},{mode}) r{o}: served err {err:.2e}")
+        mz.clear_plan_cache()
+
+
+def test_known_program_meshed_parity():
+    """Always-on anchor for the FUZZ_MESH arm: a hand-pinned multi-output
+    multipass program materialized with an explicit host mesh matches the
+    oracle on every cell, independent of the nightly FUZZ_MESH budget
+    (1 shard locally; 8 under the CI forced-8-device arm)."""
+    prog = Program(
+        seed=2468, n=96, p=3, dtype="f32",
+        ops=[
+            ("colsums", 0),                # -> r1  pass-1 sink
+            ("escalar", 1, "div", 2.0),    # -> r2  pass-1 epilogue
+            ("sweeprow", 0, 2, "sub"),     # -> r3  PASS-2 row-local sweep
+            ("sapply", 3, "abs"),          # -> r4  pass-2 chain
+            ("colmaxs", 4),                # -> r5  pass-2 sink
+            ("sumall", 0),                 # -> r6  independent sink
+        ],
+        outputs=[3, 5, 6])
+    refs = eval_numpy(prog)
+    for backend, mode in CELLS:
+        gots = eval_engine_meshed(prog, backend, mode)
+        for o, got, ref in zip(prog.outputs, gots, refs):
+            scale = max(1.0, float(np.max(np.abs(ref))))
+            err = float(np.max(np.abs(got - ref))) / scale
+            assert err <= 2e-3, (
+                f"cell=({backend},{mode}) r{o}: meshed err {err:.2e}")
         mz.clear_plan_cache()
 
 

@@ -616,3 +616,85 @@ def test_flaky_group_leaves_no_partials_with_midstream_member():
         with pytest.raises(FAULTS):
             h2.result(timeout=120)
     assert_no_partial_results(late.m.node)
+
+
+# ---------------------------------------------------------------------------
+# Submit backpressure (ISSUE 9 satellite): bounded pending queue
+# ---------------------------------------------------------------------------
+
+def test_submit_backpressure_rejects_when_saturated():
+    """With the queue at max_pending_requests and submit_timeout_s=0, the
+    next submit raises EngineSaturated, increments serve_rejections, and
+    enqueues nothing — gated on the observed queue depth so the test only
+    asserts once saturation is real."""
+    from repro.core.serve import EngineSaturated
+    a = _x(600, 4)
+    X = FMMatrix(a.shape, a.dtype, store=DenseStore(a), name="bp")
+    # A huge window holds every submit in the pending queue: depth is
+    # deterministic, no scheduler race.
+    eng = Engine(window_ms=60_000, max_window_requests=None,
+                 max_pending_requests=2, submit_timeout_s=0.0)
+    try:
+        eng.submit(fm.colMeans(X))
+        eng.submit(fm.colSums(X))
+        depth = metrics.REGISTRY.root.stats().get("serve_queue_depth", {})
+        assert depth.get("max", 0) >= 2, depth  # queue provably full
+        with pytest.raises(EngineSaturated):
+            eng.submit(fm.colMaxs(X))
+        assert eng.stats()["serve_rejections"] == 1
+        with eng._cv:
+            assert len(eng._pending) == 2  # rejected submit not enqueued
+    finally:
+        eng.close()
+
+
+def test_submit_backpressure_blocks_until_window_drains():
+    """A blocking submit (submit_timeout_s > 0) waits for the scheduler to
+    swap the window out and then succeeds — no rejection counted."""
+    a = _x(600, 4)
+    X = FMMatrix(a.shape, a.dtype, store=DenseStore(a), name="bp2")
+    eng = Engine(window_ms=200, max_pending_requests=1,
+                 submit_timeout_s=10.0)
+    try:
+        h1 = eng.submit(fm.colMeans(X))
+        h2 = eng.submit(fm.colSums(X))  # blocks ~200ms for the drain
+        assert np.allclose(fm.as_np(h1.result(60)), a.mean(0), atol=1e-4)
+        assert np.allclose(fm.as_np(h2.result(60)), a.sum(0), atol=1e-3)
+        assert eng.stats().get("serve_rejections", 0) == 0
+    finally:
+        eng.close()
+
+
+def test_engine_saturated_reexported():
+    assert fm.EngineSaturated is __import__(
+        "repro.core.serve", fromlist=["EngineSaturated"]).EngineSaturated
+
+
+# ---------------------------------------------------------------------------
+# Serving under a mesh (ISSUE 9 tentpole): sharded groups, serialized
+# admission
+# ---------------------------------------------------------------------------
+
+def test_serve_under_mesh_shards_groups_and_serializes_admission():
+    """An Engine(mesh=...) drives every group through the sharded runner
+    (``shards`` counts the drive) and opens NO mid-stream gates — a late
+    compatible request waits for the next window (midstream_admits == 0)
+    but still computes correctly.  Runs with however many devices XLA
+    exposes (1 locally, 8 under the CI forced-device arm)."""
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
+    ndata = mesh.devices.shape[0]
+    a = _x(4096, 4)
+    X = FMMatrix(a.shape, a.dtype, store=DenseStore(a), name="mesh-serve")
+    with Engine(window_ms=50, max_window_requests=2, mode="stream",
+                mesh=mesh) as eng:
+        h1, h2 = _submit_from_threads(
+            eng, [fm.colMeans(X), fm.crossprod(X)])
+        assert np.allclose(fm.as_np(h1.result(120)), a.mean(0), atol=1e-4)
+        assert np.allclose(fm.as_np(h2.result(120)), a.T @ a,
+                           rtol=1e-4, atol=1e-2)
+        st = mz.exec_stats()
+        assert st["shards"] > 0 and st["shards"] % ndata == 0, st
+        assert st["midstream_admits"] == 0
+        with eng._gates_lock:
+            assert eng._gates == []  # no gate ever opens under a mesh

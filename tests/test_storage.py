@@ -446,3 +446,137 @@ def test_plan_cache_mesh_key_not_id(monkeypatch):
     n_before = len(mz._PLANS)
     fm.materialize(fm.colSums(fm.conv_R2FM(A) * 2.0), mesh=m2)
     assert len(mz._PLANS) == n_before  # structurally equal mesh ⇒ cache hit
+
+
+# ---------------------------------------------------------------------------
+# Registry-owned temp-dir cleanup (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_registry_cleanup_removes_owned_dirs_only(tmp_path, monkeypatch):
+    """Lazily-mkdtemp'd fm-data-* dirs are removed by cleanup() and
+    forgotten; a user-configured data_dir is never touched."""
+    reg = storage.registry
+    monkeypatch.setitem(reg._CONF, "data_dir", None)
+    saved_owned = list(reg._OWNED_DIRS)
+    reg._OWNED_DIRS[:] = []
+    try:
+        lazy = reg.data_dir()            # lazy init -> registry-owned
+        assert lazy.exists() and lazy.name.startswith("fm-data-")
+        assert lazy in reg._OWNED_DIRS
+        removed = storage.cleanup()
+        assert lazy in removed
+        assert not lazy.exists()
+        assert reg._OWNED_DIRS == []
+        assert reg._CONF["data_dir"] is None  # forgotten, re-inits fresh
+
+        # User-supplied dirs are never owned, never removed.
+        user = tmp_path / "user-data"
+        fm.set_conf(data_dir=str(user))
+        assert reg.data_dir() == user
+        assert storage.cleanup() == []
+        assert user.exists()
+        assert reg._CONF["data_dir"] == user  # a user dir is not forgotten
+    finally:
+        reg._OWNED_DIRS[:] = saved_owned
+
+
+def test_engine_close_release_storage(tmp_path, monkeypatch):
+    """Engine.close(release_storage=True) routes to registry.cleanup()."""
+    reg = storage.registry
+    monkeypatch.setitem(reg._CONF, "data_dir", None)
+    saved_owned = list(reg._OWNED_DIRS)
+    reg._OWNED_DIRS[:] = []
+    try:
+        lazy = reg.data_dir()
+        assert lazy.exists()
+        eng = fm.serve(window_ms=1)
+        eng.close(release_storage=True)
+        assert not lazy.exists()
+    finally:
+        reg._OWNED_DIRS[:] = saved_owned
+
+
+@pytest.mark.slow
+def test_registry_cleanup_runs_at_interpreter_exit():
+    """The atexit hook removes a lazily-created data dir when the process
+    exits normally — repeated runs no longer accumulate fm-data-* litter."""
+    import subprocess, sys, os
+    code = (
+        "import json\n"
+        "from repro.storage import registry\n"
+        "d = registry.data_dir()\n"
+        "assert d.exists()\n"
+        "print(json.dumps(str(d)))\n")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          capture_output=True, text=True, env=env,
+                          timeout=120, cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    import json
+    leaked = pathlib.Path(json.loads(proc.stdout.strip().splitlines()[-1]))
+    assert not leaked.exists(), f"atexit cleanup left {leaked}"
+
+
+# ---------------------------------------------------------------------------
+# Prefetcher shutdown on interrupted streams (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_interrupted_stream_leaks_no_prefetcher_state(data_dir):
+    """A staging fault mid-stream must tear the prefetch pipeline down
+    completely: worker thread joined, queued staged partitions drained
+    (not pinned on device), TLS residents cleared — thread count and
+    pinned-partition census return to baseline."""
+    import threading, time
+    from helpers_cache import StagingFault
+    from repro.core import matrix as matrix_mod
+
+    old_budget = matrix_mod.IO_PARTITION_BYTES
+    fm.set_conf(io_partition_bytes=4096)  # force a real multi-partition sweep
+    try:
+        A = _arr(4096, 4)
+        X = fm.conv_store(fm.conv_R2FM(A), "disk")
+        store = X.m.store
+        orig_block, reads = store.block, {"n": 0}
+
+        def flaky_block(start, stop):
+            reads["n"] += 1
+            if reads["n"] > 2:
+                raise StagingFault("injected disk fault")
+            return orig_block(start, stop)
+
+        store.block = flaky_block  # instance attr shadows the method
+
+        n_threads0 = threading.active_count()
+        with pytest.raises((StagingFault, storage.PrefetchError)):
+            fm.materialize(fm.colSums(X * X), mode="ooc", prefetch=True)
+
+        deadline = time.time() + 10
+        while time.time() < deadline and (
+                storage.live_prefetchers()
+                or threading.active_count() > n_threads0):
+            time.sleep(0.02)
+        assert storage.live_prefetchers() == [], "worker thread still alive"
+        assert storage.staged_leaks() == [], "staged partitions pinned"
+        assert threading.active_count() <= n_threads0
+        assert mz._tls_residents() is None  # interrupted run pins nothing
+    finally:
+        matrix_mod.IO_PARTITION_BYTES = old_budget
+        mz.clear_plan_cache()
+
+
+def test_abandoned_prefetcher_close_drains_late_enqueue(data_dir):
+    """close() must win the race against a worker parked in the bounded
+    queue's put(): repeatedly abandon a stream mid-flight with a FULL
+    queue and assert no staged block survives shutdown."""
+    A = _arr(4096, 4)
+    X = fm.conv_store(fm.conv_R2FM(A), "disk")
+    pairs = [(0, X.m)]
+    for _ in range(10):
+        pf = storage.PartitionPrefetcher(pairs, 256, 4096, depth=1)
+        it = iter(pf)
+        next(it)          # worker now racing to refill the full queue
+        pf.close()
+        assert not pf.alive
+        assert pf.queued == 0, "block enqueued after shutdown drain"
+    assert storage.staged_leaks() == []
