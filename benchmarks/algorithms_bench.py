@@ -5,7 +5,10 @@ tracks in-memory" experiment over the full suite.
 
 Grid: algorithm (glm-logistic / pca / nmf / naive-bayes / kmeans)
       × mode (mem | stream | ooc-disk)
-      × backend (xla | pallas).
+      × backend (xla | pallas),
+plus the sparse track (ISSUE 10): glm-sparse — logistic regression on a
+one-hot CSR/ELL design matrix — over the same mode × backend grid, with
+the pallas cells gated on dispatching the spmm kernels.
 
 Each cell prints TWO lines:
 
@@ -127,6 +130,98 @@ def _workloads(fm, k):
         "naive-bayes": (run_nb, plan_nb),
         "kmeans": (run_kmeans, plan_kmeans),
     }
+
+
+def _sparse_glm_rows(fm, mz, args, on_tpu, rows):
+    """The Criteo-shaped track: logistic regression on a one-hot sparse
+    design matrix (ISSUE 10).  mem/stream cells read the in-RAM ELL tier,
+    ooc-disk reads a CSR .fmat; counters prove the bytes streamed are
+    nnz-proportional and (pallas) that the spmm kernels claimed the IRLS
+    contractions."""
+    import json as _json
+
+    import numpy as np
+
+    from repro.algorithms.glm import glm, glm_iteration_plan
+
+    levels = (24, 16, 8)
+    for backend in ("xla", "pallas"):
+        n = args.n if (backend == "xla" or on_tpu) else args.pallas_n
+        rng = np.random.default_rng(0)
+        codes = [rng.integers(0, lv, n) for lv in levels]
+        p = sum(levels)
+        dense = np.zeros((n, p), np.float32)
+        off = np.cumsum([0] + list(levels[:-1]))
+        for c, o in zip(codes, off):
+            dense[np.arange(n), c + o] = 1.0
+        beta = rng.normal(0, 0.5, p)
+        pv = 1.0 / (1.0 + np.exp(-(dense.astype(np.float64) @ beta)))
+        yb_n = (rng.uniform(size=n) < pv).astype(np.float32)[:, None]
+        oracle = None
+        for mode in ("mem", "stream", "ooc-disk"):
+            X = fm.one_hot(*[fm.as_factor(c, lv)
+                             for c, lv in zip(codes, levels)])
+            if mode == "ooc-disk":
+                X = fm.persist(X, tier="disk",
+                               name=f"bench_sparse_x_{backend}")
+            yb = _tiered(fm, yb_n, mode, f"bench_sparse_yb_{backend}")
+            mz.clear_plan_cache()
+            fm.set_conf(backend=backend)
+            exec_mode = _exec_mode(mode)
+
+            def work():
+                # ridge: a one-hot design is rank-deficient (each factor's
+                # columns sum to the ones vector) — unridged Newton
+                # diverges.
+                return glm(X, yb, family="logistic", max_iter=4,
+                           ridge=1e-3, mode=exec_mode,
+                           backend=backend).beta
+
+            mz.reset_exec_stats()
+            res = np.asarray(work())
+            st = mz.exec_stats()
+            us = time_call(work, iters=args.iters)
+            if oracle is None:
+                fm.set_conf(backend="xla")
+                oracle = np.asarray(
+                    glm(fm.conv_R2FM(dense), yb, family="logistic",
+                        max_iter=4, ridge=1e-3, mode="whole",
+                        backend="xla").beta)
+                fm.set_conf(backend=backend)
+            plan = glm_iteration_plan(X, yb, np.zeros(p), "logistic")
+            src_bytes = sum(m.nbytes() for _, m in plan.staged_sources())
+            err = float(np.max(np.abs(res.astype(np.float64)
+                                      - oracle.astype(np.float64))))
+            record = {
+                "bench": "algorithms",
+                "algo": "glm-sparse", "mode": mode, "backend": backend,
+                "n": n, "p": p, "us_per_call": round(us, 1),
+                # nnz-proportionality evidence: bytes_in counts the CSR/
+                # ELL payload, a small fraction of n·p dense bytes.
+                "bytes_in": plan.bytes_in(),
+                "passes": len(plan.passes),
+                "passes_over_sources": round(
+                    plan.bytes_in() / max(src_bytes, 1), 3),
+                "epilogue_nodes": len(plan.epilogue_nodes),
+                "epilogue_launches_per_materialize": round(
+                    st["epilogue_launches"]
+                    / max(st["materialize_calls"], 1), 3),
+                "partition_steps": st["partition_steps"],
+                "streams": st["streams"],
+                "maxerr_vs_xla_mem": err,
+            }
+            if backend == "pallas":
+                # The dispatch contract: the IRLS weighted-gram and
+                # moment contractions must ride the spmm kernels.
+                record["kernels"] = sorted(
+                    {u.kernel
+                     for u in plan.program("pallas").kernel_units})
+            print("BENCH " + _json.dumps(record, sort_keys=True))
+            rows.append(
+                (f"algorithms/glm-sparse/{mode}/{backend}", us,
+                 f"passes={record['passes_over_sources']};"
+                 f"bytes_in={record['bytes_in']:.2e};"
+                 f"maxerr={err:.2e}"))
 
 
 def run(argv=None):
@@ -254,6 +349,7 @@ def run(argv=None):
                          f"epilogue="
                          f"{record['epilogue_launches_per_materialize']};"
                          f"maxerr={err:.2e}"))
+        _sparse_glm_rows(fm, mz, args, on_tpu, rows)
     finally:
         fm.set_conf(backend="auto")
     return emit(rows)

@@ -97,7 +97,7 @@ def nmf(X: fm.FM, k: int = 8, *, max_iter: int = 30, tol: float = 1e-4,
         den = W @ HHt + _EPS                                # n × k row-local
         W_new = W * num / den
         if save:
-            fm.set_mate_level(W_new, save)
+            fm.persist(W_new, tier=save)
         prev_W = W
         (W,) = fm.materialize(W_new, mode=mode, fuse=fuse, backend=backend)
         # Reclaim the previous iteration's spill file (each save='disk'

@@ -37,6 +37,7 @@ import numpy as np
 
 from . import dtypes, vudf as vudf_mod
 from .matrix import FMMatrix, DenseStore
+from .sparse import SparseBlock
 
 _ids = itertools.count()
 
@@ -225,7 +226,17 @@ def _inner_prod_block(a_blk, b_small, mul: vudf_mod.BinaryVUDF,
     our analog is the MXU via jnp.matmul.  General semirings evaluate f1 on a
     broadcast (rows, k, ncol_out) tile; k and ncol_out are small by
     definition of this GenOp so the tile stays cache/VMEM-resident.
+
+    A sparse (ELL) left operand with the (mul, sum) semiring takes the
+    gather path — out[i,j] = Σ_k vals[i,k]·B[cols[i,k], j] — so ``X @ beta``
+    over a one-hot matrix does nnz-proportional work; other semirings
+    densify the block first (implicit zeros participate in e.g. a min
+    reduction, so the dense evaluation is the correct semantics).
     """
+    if isinstance(a_blk, SparseBlock):
+        if mul.name == "mul" and add.name == "sum":
+            return a_blk.matmul_small(b_small, out_dtype)
+        a_blk = a_blk.todense()
     if mul.name == "mul" and add.name == "sum" and dtypes.is_floating(out_dtype):
         return jnp.matmul(a_blk, b_small).astype(out_dtype)
     t = mul.fn(a_blk[:, :, None], b_small[None, :, :])

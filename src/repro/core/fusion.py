@@ -50,6 +50,7 @@ from . import dtypes, plan_ir
 from .dag import (LeafNode, Node, SinkNode, Small, as_node, long_dim_of,
                   schedule_passes)
 from .matrix import FMMatrix, io_partition_rows
+from .sparse import effective_ncol
 
 
 def shard_ranges(long_dim: int, partition_rows: int,
@@ -265,7 +266,11 @@ class PassSchedule:
                      + len(self.saves))
         widths = [1]
         for node, mat in self.sources:
-            widths.append(mat.ncol)
+            # Sparse sources budget at what actually streams (2·kmax
+            # scalars per row), not the logical ncol — a one-hot matrix
+            # with 2^20 columns would otherwise shrink the I/O partition
+            # to single-digit rows.
+            widths.append(effective_ncol(mat))
         for n in self.order:
             if (not is_src(n) and not n.is_sink
                     and n.id not in self.epilogue_ids):
@@ -516,6 +521,14 @@ class Plan:
             # and an epilogue one, nor between passes.
             if self._is_source(n):
                 role = "q" + "+".join(src_tag.get(n.id, []))
+                mat = n.mat if isinstance(n, LeafNode) \
+                    else getattr(n, "cached_store", None)
+                store = getattr(mat, "store", None)
+                if getattr(store, "sparse", False):
+                    # Sparse sources stage a (cols, vals) ELL pytree whose
+                    # structure depends on kmax: a dense cut with the same
+                    # shapes must not share the compiled step.
+                    role += f"~csr:{store.max_row_nnz}"
             elif self.roles[n.id] == "epi":
                 role = f"e{self.passno[n.id]}"
             elif n.is_sink:

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 from . import dtypes
 from .dag import (AggFullNode, GroupByRowNode, InnerProdContractNode,
                   MapNode, Node, Small)
+from .sparse import SparseBlock
 
 # ---------------------------------------------------------------------------
 # Backend registry + selection
@@ -312,10 +313,27 @@ class GenericUnit:
                 f"root={self.segment.root.name}")
 
     def run(self, values, partials, smalls, offset):
+        # Sparse (ELL) partition blocks densify lazily into a LOCAL cache:
+        # only node rules with no sparse path see the dense form, and the
+        # shared ``values`` dict keeps the SparseBlock so a kernel unit
+        # consuming the same staged leaf still gets nnz-proportional input.
+        # matmul_small keeps its sparse gather path (dag._inner_prod_block
+        # handles a SparseBlock left operand directly).
+        dense: dict[int, object] = {}
+
+        def block_of(n, pos, p):
+            v = values[p.id]
+            if isinstance(v, SparseBlock) and not (
+                    n.kind == "matmul_small" and pos == 0):
+                if p.id not in dense:
+                    dense[p.id] = v.todense()
+                v = dense[p.id]
+            return v
+
         for n in self.nodes:
             blocks = [smalls[self.plan._small_pos[id(p)]]
-                      if isinstance(p, Small) else values[p.id]
-                      for p in n.parents]
+                      if isinstance(p, Small) else block_of(n, i, p)
+                      for i, p in enumerate(n.parents)]
             if n.is_sink:
                 partials[n.id] = n.block_update(partials[n.id], blocks, offset)
             else:
@@ -444,6 +462,66 @@ class KMeansUnit(_KernelUnit):
             self._merge(partials, self.wss, wss.reshape(()))
 
 
+class SpmmUnit(_KernelUnit):
+    """A sparse-ELL contraction lowered onto the kernels.spmm family: the
+    staged SparseBlock flows straight into the kernel (nnz-proportional HBM
+    traffic — the paper's one-hot/Criteo tier), scatter-densified to a VMEM
+    tile inside the kernel only.  ``prefix`` holds an absorbed row-local
+    chain computing the dense right operand (the IRLS ``w·z`` feeding
+    XᵀWz), evaluated generically before the kernel call; it never touches
+    the sparse leaf (the matcher declines otherwise)."""
+
+    def __init__(self, kernel: str, node: InnerProdContractNode, *, plan,
+                 seg, x_id: int, y_id: int | None = None,
+                 w_id: int | None = None, absorb=()):
+        super().__init__(kernel, seg.block_rows)
+        self.plan = plan
+        self.node = node
+        self.x_id = x_id
+        self.y_id = y_id
+        self.w_id = w_id
+        # ``absorb``: segment nodes the KERNEL computes itself (the wgram
+        # reweighting mapply) — they must not be evaluated generically,
+        # since they read the sparse leaf.
+        self.prefix = tuple(n for n in seg.nodes
+                            if n is not node and n not in absorb)
+
+    def describe(self) -> str:
+        return f"pallas:{self.kernel} root={self.node.name}"
+
+    def run(self, values, partials, smalls, offset):
+        from ..kernels import spmm
+        for n in self.prefix:
+            blocks = [smalls[self.plan._small_pos[id(p)]]
+                      if isinstance(p, Small) else values[p.id]
+                      for p in n.parents]
+            values[n.id] = n.block_eval(blocks, offset)
+        x = values[self.x_id]
+        if not isinstance(x, SparseBlock):
+            # Densified between tracing and execution (a tier move): the
+            # plan cache keys on the source's sparse signature, so this is
+            # a defensive fallback, not a hot path.
+            part = self._dense_part(x, values)
+        elif self.kernel == "spmm_gram":
+            part = spmm.spmm_gram(x.cols, x.vals, ncol=x.ncol)
+        elif self.kernel == "spmm_xty":
+            y = values[self.y_id]
+            part = spmm.spmm_xty(x.cols, x.vals, y, ncol=x.ncol)
+        else:
+            w = values[self.w_id]
+            part = spmm.spmm_wgram(x.cols, x.vals, w, ncol=x.ncol)
+        self._merge(partials, self.node, part)
+
+    def _dense_part(self, x, values):
+        x = x.astype(jnp.float32)
+        if self.kernel == "spmm_gram":
+            return x.T @ x
+        if self.kernel == "spmm_xty":
+            return x.T @ values[self.y_id].astype(jnp.float32)
+        w = values[self.w_id].astype(jnp.float32).reshape(-1, 1)
+        return (x * w).T @ x
+
+
 # ---------------------------------------------------------------------------
 # xla backend
 # ---------------------------------------------------------------------------
@@ -467,6 +545,25 @@ class XlaBackend(Backend):
 
 def _f32_acc(node) -> bool:
     return dtypes.canon(node.acc_dtype) == jnp.dtype(jnp.float32)
+
+
+def _sparse_leaf(p) -> bool:
+    """True when an operand is a leaf over a sparse-tier store — its staged
+    partition block arrives as a SparseBlock, which the dense kernels must
+    never consume."""
+    mat = getattr(p, "mat", None)
+    return (mat is not None
+            and getattr(getattr(mat, "store", None), "sparse", False))
+
+
+def _decline(reasons, seg, msg: str):
+    """Record why a matcher passed on a segment it inspected (ISSUE 10):
+    ``dispatch_report`` replays the matchers with a ``reasons`` dict and
+    renders these next to the generic-trace fallback, so sparse-vs-dense
+    dispatch decisions are auditable in ``fm.explain``.  ``lower()`` calls
+    the matchers without the dict — declining stays free on the hot path."""
+    if reasons is not None:
+        reasons.setdefault(seg.sid, []).append(msg)
 
 
 def _source_key(node: Node):
@@ -498,7 +595,99 @@ def _is_pure_unary_chain(seg):
     return tuple(reversed(names))
 
 
-def _match_contractions(plan, ir, claimed):
+def _match_spmm(plan, ir, claimed, reasons=None):
+    """Sparse-ELL contraction → kernels.spmm — runs BEFORE the dense
+    contraction matchers so a SparseBlock operand is never fed to the dense
+    gram/xty/wgram kernels.  Three shapes:
+
+    * ``crossprod(Xs)``         — len-1 segment, both operands one sparse
+      leaf → ``spmm_gram``;
+    * ``crossprod(Xs * w, Xs)`` — the absorbed ``mapply_col`` reweighting
+      of the contraction's own sparse source → ``spmm_wgram`` (the sparse
+      IRLS XᵀWX hot spot);
+    * ``crossprod(Xs, Y)``      — sparse left against a dense right; the
+      segment may have absorbed a row-local prefix computing Y (IRLS
+      XᵀWz's ``w·z``), which the unit evaluates generically first.
+    """
+    units = {}
+    for seg in ir.segments:
+        if seg.sid in claimed or seg.kind != "contraction":
+            continue
+        node = seg.root
+        if not isinstance(node, InnerProdContractNode):
+            continue
+        left, right = node.parents
+        l_sp, r_sp = _sparse_leaf(left), _sparse_leaf(right)
+        if not (l_sp or r_sp):
+            continue
+        if node.mul.name != "mul" or node.add.name != "sum":
+            _decline(reasons, seg,
+                     f"sparse operand under a ({node.mul.name},"
+                     f"{node.add.name}) semiring: spmm covers (mul,sum) "
+                     "only")
+            continue
+        if not _f32_acc(node):
+            _decline(reasons, seg, "sparse operand with 64-bit "
+                     "accumulation: spmm kernels accumulate in f32")
+            continue
+        if len(seg.nodes) == 1:
+            if l_sp and r_sp and _same_source(left, right):
+                claimed.add(seg.sid)
+                units[seg.sid] = SpmmUnit("spmm_gram", node, plan=plan,
+                                          seg=seg, x_id=left.id)
+                continue
+            if l_sp and r_sp:
+                _decline(reasons, seg, "two distinct sparse operands: "
+                         "spmm expects one sparse source")
+                continue
+            if l_sp and not isinstance(right, Small) \
+                    and dtypes.is_floating(right.dtype):
+                claimed.add(seg.sid)
+                units[seg.sid] = SpmmUnit("spmm_xty", node, plan=plan,
+                                          seg=seg, x_id=left.id,
+                                          y_id=right.id)
+                continue
+            _decline(reasons, seg,
+                     "sparse right operand: spmm computes sparseᵀ·dense "
+                     "(put the sparse matrix on the left)" if r_sp else
+                     "sparse left against a non-float right operand")
+            continue
+        # Multi-node segment: the wgram shape, or an absorbed dense prefix
+        # computing the right operand of an xty.
+        if len(seg.nodes) == 2:
+            m = seg.nodes[0]
+            other = right if left is m else left if right is m else None
+            if (isinstance(m, MapNode) and m.kind == "mapply_col"
+                    and m.fn_info["vudf"].name == "mul"
+                    and other is not None
+                    and not isinstance(other, Small)):
+                xx, ww = m.parents
+                if (_sparse_leaf(xx) and not _sparse_leaf(ww)
+                        and not isinstance(ww, Small)
+                        and _same_source(xx, other)
+                        and dtypes.is_floating(ww.dtype)):
+                    claimed.add(seg.sid)
+                    units[seg.sid] = SpmmUnit("spmm_wgram", node, plan=plan,
+                                              seg=seg, x_id=xx.id,
+                                              w_id=ww.id, absorb=(m,))
+                    continue
+        if l_sp and not isinstance(right, Small):
+            prefix = [n for n in seg.nodes if n is not node]
+            if any(_sparse_leaf(p) for n in prefix for p in n.parents):
+                _decline(reasons, seg, "absorbed prefix reads the sparse "
+                         "source: spmm feeds the leaf to the kernel "
+                         "unseen")
+                continue
+            claimed.add(seg.sid)
+            units[seg.sid] = SpmmUnit("spmm_xty", node, plan=plan, seg=seg,
+                                      x_id=left.id, y_id=right.id)
+            continue
+        _decline(reasons, seg, "sparse contraction shape not covered by "
+                 "spmm (gram / xty / weighted-gram)")
+    return units
+
+
+def _match_contractions(plan, ir, claimed, reasons=None):
     from ..kernels import common as kcommon  # noqa: F401  (import check)
     units = {}
     for seg in ir.segments:
@@ -507,20 +696,31 @@ def _match_contractions(plan, ir, claimed):
         node = seg.root
         if len(seg.nodes) != 1 or not isinstance(node, InnerProdContractNode):
             continue
+        if any(_sparse_leaf(p) for p in node.parents):
+            _decline(reasons, seg, "sparse operand: dense gram/xty "
+                     "kernels read dense tiles")
+            continue
         if node.mul.name != "mul" or node.add.name != "sum":
+            _decline(reasons, seg,
+                     f"({node.mul.name},{node.add.name}) semiring: "
+                     "gram/xty cover (mul,sum) only")
             continue
         if not _f32_acc(node):
             continue  # f64 accumulation: the generic trace keeps full precision
         if any(isinstance(p, Small) for p in node.parents):
+            _decline(reasons, seg, "small broadcast operand: nothing to "
+                     "stream through the contraction kernel")
             continue
         if not all(dtypes.is_floating(p.dtype) for p in node.parents):
+            _decline(reasons, seg, "non-float operand: gram/xty are "
+                     "MXU (floating) kernels")
             continue
         claimed.add(seg.sid)
         units[seg.sid] = ContractionUnit(node, seg.block_rows)
     return units
 
 
-def _match_weighted_gram(plan, ir, claimed):
+def _match_weighted_gram(plan, ir, claimed, reasons=None):
     """crossprod(X * w, X) — a contraction segment that absorbed exactly one
     ``mapply_col(·, ·, mul)`` reweighting of the contraction's own source —
     → kernels.wgram.  XᵀWX is symmetric in which operand carries the
@@ -535,9 +735,15 @@ def _match_weighted_gram(plan, ir, claimed):
         if not isinstance(node, InnerProdContractNode) or \
                 not isinstance(m, MapNode) or m.kind != "mapply_col":
             continue
+        if any(_sparse_leaf(p) for p in node.parents + m.parents):
+            _decline(reasons, seg, "sparse operand: the dense wgram "
+                     "kernel reads dense tiles")
+            continue
         if node.mul.name != "mul" or node.add.name != "sum":
             continue
         if m.fn_info["vudf"].name != "mul":
+            _decline(reasons, seg, "absorbed mapply_col is not a mul "
+                     "reweighting: not the XᵀWX shape")
             continue
         if not _f32_acc(node):
             continue
@@ -549,6 +755,8 @@ def _match_weighted_gram(plan, ir, claimed):
         if isinstance(xx, Small) or isinstance(ww, Small):
             continue
         if not _same_source(xx, other):
+            _decline(reasons, seg, "reweighted matrix differs from the "
+                     "contraction's other operand: not XᵀWX")
             continue  # weights against a different matrix: not XᵀWX
         if not all(dtypes.is_floating(p.dtype) for p in (xx, ww, other)):
             continue
@@ -579,7 +787,7 @@ def _chain_source_ok(source) -> bool:
     return dt.kind in ("i", "f") and dt.itemsize <= 4
 
 
-def _match_apply_agg(plan, ir, claimed):
+def _match_apply_agg(plan, ir, claimed, reasons=None):
     _AGG_MAP = {"sum": "sum", "min": "min", "max": "max",
                 "count": "count", "count_nonzero": "count_nonzero"}
     from ..kernels.fused_apply_agg import CHAIN_UNARIES
@@ -601,6 +809,11 @@ def _match_apply_agg(plan, ir, claimed):
             continue
         source = seg.nodes[0].parents[0]
         if isinstance(source, Small) or not _chain_source_ok(source):
+            continue
+        if _sparse_leaf(source):
+            _decline(reasons, seg, "sparse source: fused_apply_agg "
+                     "streams dense tiles (implicit zeros participate "
+                     "in the reduction via the generic trace)")
             continue
         by_source.setdefault(_source_key(source), []).append(
             (seg, source.id, (unaries, _AGG_MAP[node.agg.name], acc)))
@@ -624,7 +837,7 @@ def _single_node_seg(ir, node, kind=None):
     return None
 
 
-def _match_kmeans(plan, ir, claimed):
+def _match_kmeans(plan, ir, claimed, reasons=None):
     """distances (squared_diff,sum) → which.min labels → groupby sums
     [+ counts, + wss] → kernels.kmeans_assign."""
     units = {}
@@ -649,6 +862,10 @@ def _match_kmeans(plan, ir, claimed):
         if (isinstance(x, Small) or not isinstance(centers, Small)
                 or not dtypes.is_floating(x.dtype)
                 or dtypes.canon(x.dtype) == jnp.dtype(jnp.float64)):
+            continue
+        if _sparse_leaf(x):
+            _decline(reasons, seg, "sparse source: kmeans_assign reads "
+                     "dense tiles")
             continue
         d_seg = _single_node_seg(ir, d)
         if d_seg is None or d_seg.sid in claimed:
@@ -733,10 +950,11 @@ def dispatch_report(plan, ir, backend: str) -> dict[int, str]:
     backend = resolve_backend(backend)
     report: dict[int, str] = {}
     claimed: set[int] = set()
+    reasons: dict[int, list] = {}
     if backend == "pallas":
         for matcher in PallasBackend.MATCHERS:
             before = set(claimed)
-            placed = matcher(plan, ir, claimed)
+            placed = matcher(plan, ir, claimed, reasons=reasons)
             kernels = sorted({u.kernel for u in placed.values()})
             mname = matcher.__name__.lstrip("_")
             for sid, unit in placed.items():
@@ -757,6 +975,11 @@ def dispatch_report(plan, ir, backend: str) -> dict[int, str]:
         elif dtypes.canon(seg.dtype).itemsize >= 8:
             report[seg.sid] = ("generic trace (64-bit dtype: kernels keep "
                                "full precision on the XLA path)")
+        elif seg.sid in reasons:
+            # ISSUE 10: say WHY every matcher that inspected the segment
+            # passed on it — auditable sparse-vs-dense dispatch.
+            why = "; ".join(dict.fromkeys(reasons[seg.sid]))
+            report[seg.sid] = f"generic trace (declined: {why})"
         else:
             report[seg.sid] = "generic trace (no kernel pattern matched)"
     return report
@@ -767,8 +990,11 @@ class PallasBackend(Backend):
     for the rest.  Matchers run in order and claim segments by sid."""
 
     name = "pallas"
-    MATCHERS = [_match_kmeans, _match_weighted_gram, _match_contractions,
-                _match_apply_agg]
+    # _match_spmm runs before the dense contraction matchers: a sparse
+    # segment either lowers onto the spmm kernels or records why not —
+    # the dense kernels never see a SparseBlock operand.
+    MATCHERS = [_match_kmeans, _match_spmm, _match_weighted_gram,
+                _match_contractions, _match_apply_agg]
 
     def lower(self, plan, ir) -> LoweredProgram:
         claimed: set[int] = set()

@@ -558,6 +558,14 @@ def _run_whole_group(members, mesh=None):
         metrics.inc("shards", n_shards)
     blocks = {}
     for key, mat in group_pairs:
+        if getattr(mat.store, "sparse", False):
+            # Sparse source: stage the whole matrix as one ELL partition
+            # (stage_block owns the leaf-wise device_put).  No sharded
+            # commit — mesh parity for sparse runs through the sharded
+            # stream path, which stages per-shard row ranges instead.
+            from ..storage.prefetch import stage_block
+            blocks[key] = stage_block(mat, 0, mat.shape[0], donate=False)
+            continue
         data = mat.logical_data()
         arr = jnp.asarray(np.asarray(data)) if mat.on_host else data
         if mesh is not None and mat.shape[0] == long_dim:

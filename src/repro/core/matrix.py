@@ -237,7 +237,20 @@ class FMMatrix:
     def on_disk(self) -> bool:
         return self.store is not None and self.store.on_disk
 
+    @property
+    def is_sparse(self) -> bool:
+        """True for a physical matrix on the sparse (CSR/ELL) tier."""
+        return self.store is not None and getattr(self.store, "sparse", False)
+
     def nbytes(self) -> int:
+        """Bytes the streaming executor actually moves for this matrix.
+
+        Physical matrices ask the store — on the sparse tier that is the
+        nnz-proportional section size, not nrow·ncol·itemsize (dense
+        stores report exactly the dense formula, so this is a pure
+        delegation, not a behavior change)."""
+        if self.store is not None:
+            return int(self.store.nbytes())
         return self.nrow * self.ncol * dtypes.nbytes(self.dtype)
 
     # -- construction helpers -------------------------------------------------
@@ -370,7 +383,18 @@ def conv_store(mat: FMMatrix, where: str, *, name: str = "") -> FMMatrix:
     name) and returns a handle backed by ``MmapStore``."""
     if where == "disk":
         from ..storage import registry as _registry  # lazy: avoid cycle
+        if getattr(mat.store, "sparse", False):
+            return _registry.save_sparse_matrix(mat, name or mat.name or None)
         return _registry.save_dense_matrix(mat, name or mat.name or None)
+    if getattr(mat.store, "sparse", False) and where in ("host", "device"):
+        # Tier moves keep the sparse representation: only cols/vals migrate.
+        from ..storage.sparse import SparseEllStore  # lazy: avoid cycle
+        blk = mat.store.block(0, mat.nrow)
+        conv = (np.asarray if where == "host"
+                else (lambda a: jnp.asarray(np.asarray(a))))
+        store = SparseEllStore(conv(blk.cols), conv(blk.vals), mat.ncol,
+                               nnz=getattr(mat.store, "nnz", None))
+        return FMMatrix(mat.shape, mat.dtype, store=store, name=mat.name)
     data = mat.logical_data()
     if where == "host":
         return FMMatrix.from_array(np.asarray(data), name=mat.name)

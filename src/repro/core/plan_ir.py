@@ -33,6 +33,7 @@ from typing import List
 from . import dtypes
 from .dag import LeafNode, Node, Small
 from .matrix import proc_partition_rows
+from .sparse import effective_ncol, is_sparse_mat
 
 
 def _is_source(n: Node) -> bool:
@@ -52,13 +53,21 @@ class Segment:
     flops_per_row: float
     n_live: int               # live arrays per row while the segment runs
     block_rows: int = 0       # processor-level (VMEM/cache) tile rows
+    # nnz / (nrow·ncol) of the sparsest sparse-tier source feeding the
+    # segment; 1.0 when every input is dense.  Lowering matchers use it to
+    # pick SpMM kernels; explain renders it so sparse-vs-dense dispatch is
+    # auditable.
+    density: float = 1.0
 
     def describe(self) -> str:
-        return (f"seg#{self.sid} [{self.kind}] root={self.root.name} "
+        base = (f"seg#{self.sid} [{self.kind}] root={self.root.name} "
                 f"nodes={len(self.nodes)} width={self.width} "
                 f"dtype={dtypes.canon(self.dtype).name} "
                 f"flops/row={self.flops_per_row:.1f} "
                 f"block_rows={self.block_rows}")
+        if self.density < 1.0:
+            base += f" density={self.density:.2e}"
+        return base
 
 
 @dataclasses.dataclass
@@ -174,6 +183,7 @@ def _with_metadata(seg: Segment) -> Segment:
     ext_inputs: set[int] = set()
     widest = seg.root.dtype
     flops = 0.0
+    density = 1.0
     for n in seg.nodes:
         flops += n.flops_per_row()
         if dtypes.rank(n.dtype) > dtypes.rank(widest):
@@ -185,10 +195,20 @@ def _with_metadata(seg: Segment) -> Segment:
                 continue
             if dtypes.rank(p.dtype) > dtypes.rank(widest):
                 widest = p.dtype
-            widths.append(p.ncol)
+            if isinstance(p, LeafNode) and is_sparse_mat(p.mat):
+                # A sparse source streams 2·kmax scalars per row, not ncol
+                # — budget the tile on what actually moves.
+                widths.append(effective_ncol(p.mat))
+                nnz = getattr(p.mat.store, "nnz", None)
+                if nnz is not None and p.mat.nrow * p.mat.ncol:
+                    density = min(density,
+                                  nnz / float(p.mat.nrow * p.mat.ncol))
+            else:
+                widths.append(p.ncol)
             if p.id not in inside:
                 ext_inputs.add(p.id)
     seg.width = max(widths)
+    seg.density = density
     seg.dtype = dtypes.canon(widest)
     seg.flops_per_row = flops
     # Live rows while the segment streams: every external input partition

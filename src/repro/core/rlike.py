@@ -21,6 +21,7 @@ All functions accept and return `FM`.  `conv_FM2R` drops to numpy.
 from __future__ import annotations
 
 import math
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -393,7 +394,7 @@ def scale(x, center=True, scale=True, save: Optional[str] = None) -> FM:
     if scale:
         z = mapply_row(z, colSds(x), "div")
     if save is not None and z.m.is_virtual:
-        set_mate_level(z, save)
+        persist(z, tier=save)
     return z
 
 
@@ -474,9 +475,122 @@ def conv_FM2R(x) -> np.ndarray:
     return matrix_mod.conv_FM2R(_fm(x))
 
 
+class Factor:
+    """A factor vector (paper Table III ``fm.as.factor``): integer codes
+    in ``[0, num_levels)`` plus the level count — what ``fm.one_hot``
+    consumes to build the sparse design-matrix columns."""
+
+    __slots__ = ("codes", "num_levels")
+
+    def __init__(self, codes: np.ndarray, num_levels: int):
+        self.codes = codes
+        self.num_levels = int(num_levels)
+
+    def __len__(self):
+        return int(self.codes.shape[0])
+
+    def __repr__(self):
+        return f"Factor(n={len(self)}, num_levels={self.num_levels})"
+
+
+def as_factor(x, num_levels: Optional[int] = None) -> Factor:
+    """fm.as.factor: integer labels → a factor vector.
+
+    ``x`` is an FM, FMMatrix or array of integer-valued labels (one
+    column); ``num_levels`` defaults to ``max(code) + 1``.  Codes must be
+    in ``[0, num_levels)`` — the hashed-categorical convention of the
+    Criteo workload, where each of the 26 hash columns becomes a factor."""
+    if isinstance(x, Factor):
+        return x if num_levels is None else Factor(x.codes, num_levels)
+    arr = np.asarray(conv_FM2R(x) if isinstance(x, (FM, FMMatrix)) else x)
+    codes = arr.reshape(-1)
+    if not np.issubdtype(codes.dtype, np.integer):
+        rounded = np.rint(codes)
+        if not np.array_equal(rounded, codes):
+            raise ValueError(
+                "as_factor needs integer-valued labels; got non-integer "
+                "values (bin or hash continuous features first)")
+        codes = rounded
+    codes = codes.astype(np.int64)
+    if codes.size and codes.min() < 0:
+        raise ValueError("as_factor: negative label codes")
+    if num_levels is None:
+        num_levels = int(codes.max()) + 1 if codes.size else 1
+    elif codes.size and codes.max() >= num_levels:
+        raise ValueError(
+            f"as_factor: label code {int(codes.max())} out of range for "
+            f"num_levels={num_levels}")
+    return Factor(codes, num_levels)
+
+
+def one_hot(*factors, dtype=np.float32, host: bool = True) -> FM:
+    """One-hot encode factor(s) into ONE sparse matrix (the ELL tier).
+
+    Each argument is a ``Factor`` (from ``fm.as_factor``) or raw integer
+    labels; k factors cbind with running column offsets, so every row has
+    exactly k ones — the Criteo design matrix (26 factor columns → a CSR
+    row of 26 ones among ~2^20 columns) without ever densifying.
+    ``host=False`` places the slab on device.  Persist with
+    ``fm.persist(X, tier='disk')`` to write the CSR ``.fmat``."""
+    if not factors:
+        raise ValueError("one_hot needs at least one factor")
+    fs = [as_factor(f) for f in factors]
+    n = len(fs[0])
+    if any(len(f) != n for f in fs):
+        raise ValueError(
+            f"one_hot: factor lengths differ ({[len(f) for f in fs]})")
+    ncol, offset = 0, []
+    for f in fs:
+        offset.append(ncol)
+        ncol += f.num_levels
+    cols = np.stack([f.codes + off for f, off in zip(fs, offset)],
+                    axis=1).astype(np.int32)
+    vals = np.ones(cols.shape, np.dtype(dtype))
+    from ..storage.sparse import SparseEllStore  # lazy: avoid cycle
+    if not host:
+        cols, vals = jnp.asarray(cols), jnp.asarray(vals)
+    store = SparseEllStore(cols, vals, ncol, nnz=n * len(fs))
+    return FM(FMMatrix((n, ncol), vals.dtype, store=store))
+
+
+def persist(x, tier: str = "device", *, name: Optional[str] = None) -> FM:
+    """fm.persist: the ONE entry point for keeping a matrix on a tier.
+
+    ``tier`` is 'device' (HBM analog), 'host' (RAM), or 'disk' (the SSD
+    tier — FlashR's ``in.mem=FALSE``).  Dense and sparse matrices both
+    route here; a sparse matrix persists in its sparse representation
+    (ELL slab in RAM, CSR ``.fmat`` on disk) — it is never densified.
+
+      * VIRTUAL ``x``: marks the lazy result so the NEXT materialization
+        keeps it on ``tier`` — ``tier='disk'`` write-through-spills the
+        streaming output (no extra pass), subsuming the old
+        ``materialize(..., save='disk')`` / ``set_mate_level`` spellings.
+      * PHYSICAL ``x``: moves the data now — ``tier='disk'`` writes it
+        into the configured data directory under ``name`` (or the
+        matrix's own name) and returns the reopened mmap-backed handle,
+        subsuming the old ``conv_store`` spelling.
+
+    Returns an FM either way (the same lazy handle for virtuals, the new
+    tier's handle for physicals)."""
+    if tier not in ("device", "host", "disk"):
+        raise ValueError(
+            f"unknown tier {tier!r}: expected 'device', 'host' or 'disk'")
+    m = _fm(x)
+    if m.is_virtual:
+        genops.set_mate_level(m, tier)
+        if name:
+            m.name = name
+        return x if isinstance(x, FM) else FM(m)
+    return FM(matrix_mod.conv_store(m, tier, name=name or ""))
+
+
 def conv_store(x, where: str, *, name: str = "") -> FM:
-    """fm.conv.store: 'device' | 'host' | 'disk' (FlashR in.mem=FALSE)."""
-    return FM(matrix_mod.conv_store(_fm(x), where, name=name))
+    """Deprecated spelling of ``fm.persist(x, tier=where, name=...)``."""
+    warnings.warn(
+        "fm.conv_store(x, where, name=...) is deprecated; use "
+        "fm.persist(x, tier=..., name=...)", DeprecationWarning,
+        stacklevel=2)
+    return persist(x, tier=where, name=name or None)
 
 
 # -- the disk tier / EM-matrix registry (repro/storage/) ----------------------
@@ -484,9 +598,25 @@ def set_conf(**kw) -> dict:
     """fm.set.conf: data_dir / prefetch / prefetch_depth /
     io_partition_bytes / vmem_partition_bytes / backend / direct_io /
     mesh (a jax Mesh from launch.mesh.make_host_mesh — installs sharded
-    execution engine-wide; ``mesh=False`` clears it)."""
+    execution engine-wide; ``mesh=False`` clears it).  Unknown knobs
+    raise with a did-you-mean hint (``storage.registry.KNOWN_KNOBS`` is
+    the authoritative table); for a scoped override use ``fm.conf``."""
     from ..storage import registry
     return registry.set_conf(**kw)
+
+
+def conf(**kw):
+    """fm.conf: scoped configuration override (a context manager).
+
+        with fm.conf(backend='pallas', prefetch=False):
+            fm.materialize(G)          # runs under the override
+        # prior values restored here, even on error
+
+    Validates knob names exactly like ``fm.set_conf`` and snapshots the
+    prior values on entry — replacing the manual save/restore dance in
+    tests and benchmarks."""
+    from ..storage import registry
+    return registry.conf(**kw)
 
 
 def get_dense_matrix(name: str) -> FM:
@@ -499,6 +629,15 @@ def load_dense_matrix(src, name: str, **kw) -> FM:
     """fm.load.dense.matrix: ingest CSV/binary/npy/array → on-disk matrix."""
     from ..storage import registry
     return FM(registry.load_dense_matrix(src, name, **kw))
+
+
+def load_factor_matrix(src, name: str, *, num_levels, **kw) -> FM:
+    """fm.load.factor.matrix: stream a CSV of integer factor columns into
+    a CSR on-disk matrix of one-hot rows (the Criteo design matrix) and
+    reopen it on the sparse tier."""
+    from ..storage import registry
+    return FM(registry.load_factor_matrix(src, name, num_levels=num_levels,
+                                          **kw))
 
 
 def save_dense_matrix(x, name: Optional[str] = None, **kw) -> FM:
@@ -515,8 +654,11 @@ def conv_layout(x, layout: str) -> FM:
 
 
 def set_mate_level(x, level: str) -> FM:
-    genops.set_mate_level(_fm(x), level)
-    return x
+    """Deprecated spelling of ``fm.persist(x, tier=level)``."""
+    warnings.warn(
+        "fm.set_mate_level(x, level) is deprecated; use "
+        "fm.persist(x, tier=...)", DeprecationWarning, stacklevel=2)
+    return persist(x, tier=level)
 
 
 def materialize(*xs, **kw) -> list[FM]:

@@ -1,0 +1,176 @@
+"""Sparse row blocks (the CSR tier's in-flight representation).
+
+FlashR's flagship workload — logistic regression over the one-hot Criteo
+set (``fm.as.factor`` on 26 hash columns) — is sparse: a row of the design
+matrix has 26 ones among ~2^20 columns.  Storing it dense is 5 orders of
+magnitude of wasted SSD bandwidth, and the paper's whole premise is that
+these workloads are I/O bound.
+
+The disk format is CSR (storage/sparse.py: indptr/indices/data sections,
+row-partition addressable).  What flows through the engine per partition
+is this module's ``SparseBlock``: a fixed-width ELL slab —
+
+    cols  int32  (rows, kmax)     column index of each stored element
+    vals  dtype  (rows, kmax)     the element values
+    ncol  static                  the logical column count
+
+padded per row with (col=0, val=0) entries, which are NEUTRAL for every
+implicit-zero GenOp (sum-product contraction, colsum scatter, gather
+matmul).  ELL rather than raggedy CSR because the executor jit-compiles
+one partition step and reuses it for every partition: a fixed (rows, kmax)
+structure keeps the trace static, with ``kmax`` = the matrix-wide maximum
+row population so every partition shares one shape.
+
+``SparseBlock`` is a registered jax pytree, so it rides the existing
+staging machinery (device_put, donation, sharding-free mesh streams)
+without the executor special-casing anything but the math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dtypes
+
+
+@jax.tree_util.register_pytree_node_class
+class SparseBlock:
+    """One I/O-level partition of a sparse matrix in ELL layout."""
+
+    __slots__ = ("cols", "vals", "ncol")
+
+    def __init__(self, cols, vals, ncol: int):
+        self.cols = cols
+        self.vals = vals
+        self.ncol = int(ncol)
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.cols, self.vals), self.ncol
+
+    @classmethod
+    def tree_unflatten(cls, ncol, leaves):
+        return cls(leaves[0], leaves[1], ncol)
+
+    # -- array-ish surface (what the executor's bookkeeping touches) --------
+    @property
+    def shape(self) -> tuple:
+        return (int(self.cols.shape[0]), self.ncol)
+
+    @property
+    def kmax(self) -> int:
+        return int(self.cols.shape[1])
+
+    @property
+    def dtype(self):
+        return dtypes.canon(self.vals.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.cols.nbytes) + int(self.vals.nbytes)
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    def __repr__(self):
+        return (f"SparseBlock({self.shape[0]}x{self.ncol}, "
+                f"kmax={self.kmax}, {self.dtype.name})")
+
+    # -- densify (the generic-trace fallback's choke point) -----------------
+    def todense(self):
+        """Expand to a dense (rows, ncol) array.
+
+        Padding entries are (col=0, val=0): scatter-ADD is safe because a
+        zero value contributes nothing wherever it lands.  numpy in → numpy
+        out (host tier); jax in → jax out (traceable inside a jit step).
+        """
+        rows, kmax = self.cols.shape
+        if isinstance(self.vals, np.ndarray):
+            out = np.zeros((rows, self.ncol), self.vals.dtype)
+            r = np.repeat(np.arange(rows), kmax)
+            np.add.at(out, (r, np.asarray(self.cols).reshape(-1)),
+                      np.asarray(self.vals).reshape(-1))
+            return out
+        r = jax.lax.broadcasted_iota(jnp.int32, (rows, kmax), 0)
+        out = jnp.zeros((rows, self.ncol), self.vals.dtype)
+        return out.at[r, self.cols].add(self.vals)
+
+    def matmul_small(self, small, out_dtype=None):
+        """X @ B for a small dense B (ncol, q) WITHOUT densifying X: a
+        per-element gather of B's rows followed by a kmax-reduction —
+        out[i, j] = Σ_k vals[i, k] · B[cols[i, k], j].  nnz-proportional
+        work, the sparse fast path of ``matmul_small`` (eta = X @ beta)."""
+        acc = jnp.float32 if self.vals.dtype == jnp.bfloat16 else self.vals.dtype
+        gathered = jnp.take(small, self.cols, axis=0)        # (rows, kmax, q)
+        out = (self.vals[:, :, None].astype(acc)
+               * gathered.astype(acc)).sum(axis=1)
+        return out.astype(out_dtype) if out_dtype is not None else out
+
+
+def is_sparse(x) -> bool:
+    return isinstance(x, SparseBlock)
+
+
+def is_sparse_mat(mat) -> bool:
+    """True for a physical FMMatrix whose store serves SparseBlocks."""
+    store = getattr(mat, "store", None)
+    return bool(store is not None and getattr(store, "sparse", False))
+
+
+def effective_ncol(mat) -> int:
+    """The streaming width the partition planner should budget for.
+
+    A sparse source moves 2·kmax scalars per row (cols + vals), not ncol —
+    budgeting the one-hot Criteo matrix at ncol = 2^20 would shrink I/O
+    partitions to single-digit rows.  Dense matrices budget at ncol."""
+    store = getattr(mat, "store", None)
+    if store is not None and getattr(store, "sparse", False):
+        return max(1, 2 * int(store.max_row_nnz))
+    return mat.ncol
+
+
+# ---------------------------------------------------------------------------
+# Construction helpers (host-side numpy: ingest / stores / oracles)
+# ---------------------------------------------------------------------------
+
+def ell_from_csr_rows(indptr, indices, data, start: int, stop: int,
+                      kmax: int, ncol: int) -> SparseBlock:
+    """Slice CSR rows [start, stop) into an ELL SparseBlock (numpy)."""
+    rows = stop - start
+    rs, re = int(indptr[start]), int(indptr[stop])
+    counts = np.diff(indptr[start:stop + 1]).astype(np.int64)
+    cols = np.zeros((rows, kmax), np.int32)
+    vals = np.zeros((rows, kmax), data.dtype)
+    if re > rs:
+        row_of = np.repeat(np.arange(rows), counts)
+        pos = np.arange(re - rs) - np.repeat(indptr[start:stop] - rs, counts)
+        cols[row_of, pos] = indices[rs:re]
+        vals[row_of, pos] = data[rs:re]
+    return SparseBlock(cols, vals, ncol)
+
+
+def csr_from_dense(arr):
+    """Dense (n, p) numpy array → (indptr, indices, data) CSR triplet."""
+    arr = np.asarray(arr)
+    mask = arr != 0
+    counts = mask.sum(axis=1)
+    indptr = np.zeros(arr.shape[0] + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    r, c = np.nonzero(mask)
+    return indptr, c.astype(np.int32), np.ascontiguousarray(arr[r, c])
+
+
+def csr_from_ell(cols, vals):
+    """ELL slab → CSR triplet, dropping the (col=0, val=0) padding.
+    Boolean masking walks row-major, so entries stay grouped by row in
+    within-row ELL order."""
+    cols = np.asarray(cols)
+    vals = np.asarray(vals)
+    mask = vals != 0
+    counts = mask.sum(axis=1)
+    indptr = np.zeros(cols.shape[0] + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr, cols[mask].astype(np.int32), np.ascontiguousarray(
+        vals[mask])

@@ -30,6 +30,30 @@ def wgram_ref(x, w):
     return (xf * wf).T @ xf
 
 
+def spmm_dense_ref(cols, vals, ncol):
+    """ELL slab → dense f32 (rows, ncol): the densify every SpMM oracle
+    shares (padding entries are (col=0, val=0), neutral under add)."""
+    rows, kmax = cols.shape
+    r = jnp.repeat(jnp.arange(rows), kmax)
+    out = jnp.zeros((rows, ncol), jnp.float32)
+    return out.at[r, cols.reshape(-1)].add(
+        vals.reshape(-1).astype(jnp.float32))
+
+
+def spmm_gram_ref(cols, vals, ncol):
+    x = spmm_dense_ref(cols, vals, ncol)
+    return x.T @ x
+
+
+def spmm_xty_ref(cols, vals, y, ncol):
+    return spmm_dense_ref(cols, vals, ncol).T @ y.astype(jnp.float32)
+
+
+def spmm_wgram_ref(cols, vals, w, ncol):
+    x = spmm_dense_ref(cols, vals, ncol)
+    return (x * w.astype(jnp.float32).reshape(-1, 1)).T @ x
+
+
 def kmeans_assign_ref(x, centers):
     x = x.astype(jnp.float32)
     c = centers.astype(jnp.float32)

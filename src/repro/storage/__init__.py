@@ -11,22 +11,32 @@ Three pieces, mirroring FlashR's external-memory stack:
     stager that overlaps disk reads + host→device copies with compute.
   * `registry` — `fm.set.conf`-style data dir + named-matrix surface
     (`load_dense_matrix` / `get_dense_matrix` / `save_dense_matrix`).
+  * `sparse`   — the CSR variant of the .fmat container (ISSUE 10): row-
+    partition-addressable indptr/indices/data sections served as ELL
+    SparseBlocks (`CsrMmapStore`), plus the in-RAM `SparseEllStore` tier.
 """
-from . import format, prefetch, registry, store
-from .format import (MatrixHeader, create_matrix, open_matrix, read_header,
-                     save_matrix)
+from . import format, prefetch, registry, sparse, store
+from .format import (MatrixHeader, create_matrix, open_matrix, peek_format,
+                     read_header, save_matrix)
 from .prefetch import (PartitionPrefetcher, PrefetchError, live_prefetchers,
                        negotiate_depth, stage_block, staged_leaks)
-from .registry import (cleanup, get_conf, get_dense_matrix, list_matrices,
-                       load_dense_matrix, save_dense_matrix, set_conf,
-                       spill_path)
+from .registry import (KNOWN_KNOBS, cleanup, conf, get_conf,
+                       get_dense_matrix, list_matrices, load_dense_matrix,
+                       load_factor_matrix, save_dense_matrix,
+                       save_sparse_matrix, set_conf, spill_path)
+from .sparse import (CsrMmapStore, SparseEllStore, open_csr, read_csr_meta,
+                     save_csr_matrix)
 from .store import MmapStore
 
 __all__ = [
-    "format", "prefetch", "registry", "store",
-    "MatrixHeader", "MmapStore", "PartitionPrefetcher", "PrefetchError",
-    "cleanup", "create_matrix", "open_matrix", "read_header", "save_matrix",
-    "get_conf", "get_dense_matrix", "list_matrices", "live_prefetchers",
-    "load_dense_matrix", "negotiate_depth", "save_dense_matrix", "set_conf",
-    "spill_path", "stage_block", "staged_leaks",
+    "format", "prefetch", "registry", "sparse", "store",
+    "CsrMmapStore", "KNOWN_KNOBS", "MatrixHeader", "MmapStore",
+    "PartitionPrefetcher", "PrefetchError", "SparseEllStore",
+    "cleanup", "conf", "create_matrix", "get_conf", "get_dense_matrix",
+    "list_matrices", "live_prefetchers", "load_dense_matrix",
+    "load_factor_matrix", "negotiate_depth", "open_csr", "open_matrix",
+    "peek_format",
+    "read_csr_meta", "read_header", "save_csr_matrix", "save_dense_matrix",
+    "save_matrix", "save_sparse_matrix", "set_conf", "spill_path",
+    "stage_block", "staged_leaks",
 ]

@@ -85,6 +85,11 @@ def read_header(path: PathLike) -> MatrixHeader:
             raise ValueError(f"{path}: fmat version {version} > {VERSION}")
         json_len = int.from_bytes(fixed[12:16], "little")
         meta = json.loads(f.read(json_len).decode())
+    if meta.get("format", "dense") != "dense":
+        raise ValueError(
+            f"{path}: a {meta['format']!r} fmat file, not dense — open it "
+            f"through storage.open_matrix (which dispatches on the format) "
+            f"or storage.sparse.open_csr")
     if meta["layout"] not in ("row", "col"):
         raise ValueError(f"{path}: bad layout {meta['layout']!r}")
     return MatrixHeader(
@@ -134,9 +139,25 @@ def save_matrix(path: PathLike, arr, *, layout: str = "row",
     return header
 
 
+def peek_format(path: PathLike) -> str:
+    """The container variant of an ``.fmat`` file: 'dense' or 'csr'.
+    Reads only the header block."""
+    with open(path, "rb") as f:
+        fixed = f.read(16)
+        if len(fixed) < 16 or fixed[:8] != MAGIC:
+            raise ValueError(f"{path}: not an fmat file (bad magic)")
+        json_len = int.from_bytes(fixed[12:16], "little")
+        meta = json.loads(f.read(json_len).decode())
+    return meta.get("format", "dense")
+
+
 def open_matrix(path: PathLike, *, mode: str = "r"):
-    """Open an on-disk matrix as an ``MmapStore`` (no data is read)."""
+    """Open an on-disk matrix (no data is read): an ``MmapStore`` for the
+    dense format, a ``CsrMmapStore`` for the sparse CSR variant."""
     from .store import MmapStore
+    if peek_format(path) == "csr":
+        from .sparse import open_csr
+        return open_csr(path)
     return MmapStore(path, read_header(path), mode=mode)
 
 

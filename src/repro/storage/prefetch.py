@@ -85,6 +85,30 @@ def stage_block(mat, start: int, stop: int, *, donate: bool = True,
     """
     t0 = time.perf_counter()
     blk = mat.block(start, stop)
+    if type(blk).__name__ == "SparseBlock":
+        # Sparse (ELL) partition: a (cols, vals) pytree.  Same rules as the
+        # dense branches, applied leaf-wise — host slabs are the slow-tier
+        # read (contiguous + async device_put), device slabs are copied
+        # only when the consumer will donate them.
+        from ..core.sparse import SparseBlock
+        if isinstance(blk.vals, np.ndarray):
+            cols = np.ascontiguousarray(blk.cols)
+            vals = np.ascontiguousarray(blk.vals)
+            metrics.inc("stage_bytes_read", cols.nbytes + vals.nbytes)
+            metrics.inc("stage_read_seconds", time.perf_counter() - t0)
+            if to_device:
+                cols = jax.device_put(cols, device)
+                vals = jax.device_put(vals, device)
+            blk = SparseBlock(cols, vals, blk.ncol)
+        elif device is not None:
+            blk = SparseBlock(jax.device_put(blk.cols, device),
+                              jax.device_put(blk.vals, device), blk.ncol)
+        elif donate:
+            blk = SparseBlock(jnp.copy(blk.cols), jnp.copy(blk.vals),
+                              blk.ncol)
+        TRACER.record("stage", t0, time.perf_counter(),
+                      {"start": int(start), "stop": int(stop)})
+        return blk
     if isinstance(blk, np.ndarray):
         blk = np.ascontiguousarray(blk)
         # The slow-tier read is complete once the block is contiguous in

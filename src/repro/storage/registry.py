@@ -17,6 +17,8 @@ RAM beyond the mmap handles.
 from __future__ import annotations
 
 import atexit
+import contextlib
+import difflib
 import itertools
 import os
 import pathlib
@@ -57,16 +59,44 @@ _spill_ids = itertools.count()
 _CONF_LOCK = threading.Lock()
 
 
-def set_conf(*, data_dir: Optional[str] = None,
-             prefetch: Optional[bool] = None,
-             prefetch_depth: Optional[int] = None,
-             io_partition_bytes: Optional[int] = None,
-             vmem_partition_bytes: Optional[int] = None,
-             backend: Optional[str] = None,
-             direct_io: Optional[bool] = None,
-             mesh=None) -> dict:
+#: The full knob table ``set_conf`` validates against — one entry per
+#: accepted keyword, with a one-line meaning (rendered in the
+#: unknown-knob error and docs/api.md).
+KNOWN_KNOBS = {
+    "data_dir": "storage-tier directory for named .fmat matrices",
+    "prefetch": "async partition prefetch default for ooc execution",
+    "prefetch_depth": "bounded staging-queue depth (2 = double buffering)",
+    "io_partition_bytes": "I/O-level partition budget (streaming granule)",
+    "vmem_partition_bytes": "processor-level (VMEM tile) partition budget",
+    "backend": "lowering backend: 'auto' | 'xla' | 'pallas'",
+    "direct_io": "best-effort page-cache bypass on partition reads",
+    "mesh": "default jax Mesh for sharded execution (False clears)",
+}
+
+
+def _check_knobs(kw: dict):
+    unknown = [k for k in kw if k not in KNOWN_KNOBS]
+    if not unknown:
+        return
+    parts = []
+    for k in unknown:
+        close = difflib.get_close_matches(k, KNOWN_KNOBS, n=1)
+        parts.append(f"{k!r} (did you mean {close[0]!r}?)" if close
+                     else repr(k))
+    plural = "s" if len(parts) > 1 else ""
+    raise ValueError(
+        f"unknown config knob{plural} {', '.join(parts)}; known knobs: "
+        f"{', '.join(sorted(KNOWN_KNOBS))}")
+
+
+def set_conf(**kw) -> dict:
     """fm.set.conf: configure the storage tier + execution engine.
     Returns the live config.
+
+    Keywords are validated against `KNOWN_KNOBS` — a typo raises with a
+    did-you-mean suggestion instead of being silently dropped.  ``None``
+    always means "leave unchanged"; use ``fm.conf(...)`` (the context
+    manager) for a scoped override that restores prior values.
 
     ``io_partition_bytes`` adjusts the I/O-level partition budget engine-
     wide (core.matrix.IO_PARTITION_BYTES) — the knob the out-of-core
@@ -84,6 +114,15 @@ def set_conf(*, data_dir: Optional[str] = None,
     ``mesh=False`` to clear it (``None`` means "leave unchanged", like
     every other knob here).
     """
+    _check_knobs(kw)
+    data_dir = kw.get("data_dir")
+    prefetch = kw.get("prefetch")
+    prefetch_depth = kw.get("prefetch_depth")
+    io_partition_bytes = kw.get("io_partition_bytes")
+    vmem_partition_bytes = kw.get("vmem_partition_bytes")
+    backend = kw.get("backend")
+    direct_io = kw.get("direct_io")
+    mesh = kw.get("mesh")
     if data_dir is not None:
         p = pathlib.Path(data_dir)
         p.mkdir(parents=True, exist_ok=True)
@@ -129,6 +168,41 @@ def get_conf(key: str):
     if key == "backend":
         return lowering_mod.DEFAULT_BACKEND
     return _CONF[key]
+
+
+def _restore_conf(snapshot: dict):
+    """Put knobs back EXACTLY as snapshotted — bypasses ``set_conf``'s
+    "None means leave unchanged" convention so an unset ``data_dir`` or a
+    cleared ``mesh`` restores to unset, not to "unchanged"."""
+    for k, v in snapshot.items():
+        if k == "io_partition_bytes":
+            matrix_mod.IO_PARTITION_BYTES = v
+        elif k == "vmem_partition_bytes":
+            matrix_mod.VMEM_PARTITION_BYTES = v
+        elif k == "backend":
+            lowering_mod.DEFAULT_BACKEND = v
+        else:
+            with _CONF_LOCK:
+                _CONF[k] = v
+
+
+@contextlib.contextmanager
+def conf(**kw):
+    """fm.conf: scoped configuration override.
+
+        with fm.conf(backend='pallas', io_partition_bytes=1 << 20):
+            fm.materialize(...)     # runs under the overridden knobs
+        # prior values restored here, even on error
+
+    Same knob table and validation as ``set_conf``; yields the LIVE config
+    dict.  Replaces the manual save/apply/try/finally-restore dance in
+    tests and benchmarks."""
+    _check_knobs(kw)
+    snapshot = {k: get_conf(k) for k in kw}
+    try:
+        yield set_conf(**kw)
+    finally:
+        _restore_conf(snapshot)
 
 
 def data_dir() -> pathlib.Path:
@@ -194,16 +268,42 @@ def save_dense_matrix(mat, name: Optional[str] = None, *,
     return get_dense_matrix(name)
 
 
+def save_sparse_matrix(mat, name: Optional[str] = None) -> FMMatrix:
+    """Write a sparse-tier matrix (SparseEllStore / CsrMmapStore backed
+    FMMatrix, or any matrix worth storing sparse) to the data dir as a CSR
+    ``.fmat`` and return the disk-backed handle (``fm.persist(x,
+    tier='disk')`` routes sparse matrices here)."""
+    from ..core.sparse import csr_from_dense, csr_from_ell
+    from . import sparse as sp
+    if name is None:
+        name = getattr(mat, "name", "") or f"anon-{next(_spill_ids)}"
+    path = matrix_path(name)
+    store = getattr(mat, "store", None)
+    if isinstance(store, sp.CsrMmapStore):
+        triplet = (np.asarray(store._indptr), np.asarray(store._indices),
+                   np.asarray(store._data))
+    elif isinstance(store, sp.SparseEllStore):
+        triplet = csr_from_ell(np.asarray(store.cols),
+                               np.asarray(store.vals))
+    else:
+        triplet = csr_from_dense(np.asarray(mat.logical_data()))
+    sp.save_csr_matrix(path, *triplet, ncol=mat.shape[1])
+    return get_dense_matrix(name)
+
+
 def get_dense_matrix(name: str) -> FMMatrix:
-    """fm.get.dense.matrix: reopen a named on-disk matrix (O(1), mmap)."""
+    """fm.get.dense.matrix: reopen a named on-disk matrix (O(1), mmap).
+    Dispatches on the stored format — a CSR ``.fmat`` reopens as a
+    sparse-tier (CsrMmapStore-backed) matrix."""
     path = matrix_path(name)
     if not path.exists():
         raise KeyError(
             f"no on-disk matrix {name!r} under {os.fspath(data_dir())} "
             f"(have: {sorted(list_matrices())})")
     store = fmt.open_matrix(path)
-    return FMMatrix(store.header.shape, store.header.dtype,
-                    store=store, name=name)
+    shape = getattr(store, "shape", None) or store.header.shape
+    dtype = getattr(store, "dtype", None) or store.header.dtype
+    return FMMatrix(shape, dtype, store=store, name=name)
 
 
 def load_dense_matrix(src, name: str, *, ncol: Optional[int] = None,
@@ -242,6 +342,18 @@ def load_dense_matrix(src, name: str, *, ncol: Optional[int] = None,
     else:
         arr = np.asarray(src) if dtype is None else np.asarray(src, dtype=dtype)
         fmt.save_matrix(dest, arr, layout=layout)
+    return get_dense_matrix(name)
+
+
+def load_factor_matrix(src, name: str, *, num_levels, dtype=np.float32,
+                       delimiter: str = ",", **ingest_kw) -> FMMatrix:
+    """fm.load.factor.matrix: stream a CSV of integer factor columns into
+    the registry as a CSR ``.fmat`` of one-hot rows (the Criteo ingest —
+    see data.pipeline.ingest_factor_csv) and reopen it sparse."""
+    from ..data import pipeline as _pipeline  # lazy: data imports are heavy
+    _pipeline.ingest_factor_csv(src, matrix_path(name),
+                                num_levels=num_levels, dtype=dtype,
+                                delimiter=delimiter, **ingest_kw)
     return get_dense_matrix(name)
 
 

@@ -170,7 +170,7 @@ _MESH_GRID_TEST = textwrap.dedent("""
     for mode, mk in (("whole", "mem"), ("stream", "mem"), ("ooc", "disk")):
         X = fm.conv_R2FM(A)
         if mk == "disk":
-            X = fm.conv_store(X, "disk")
+            X = fm.persist(X, tier="disk")
         base[mode] = run_cases(X, mode)
 
     # Sharded runs: the engine-wide conf mesh (fm.set_conf) for stream/ooc,
@@ -179,7 +179,7 @@ _MESH_GRID_TEST = textwrap.dedent("""
     for mode, mk in (("whole", "mem"), ("stream", "mem"), ("ooc", "disk")):
         X = fm.conv_R2FM(A)
         if mk == "disk":
-            X = fm.conv_store(X, "disk")
+            X = fm.persist(X, tier="disk")
         if mode == "whole":
             got = [(nm, fm.as_np(fm.materialize(getattr(fm, nm)(X)
                                                 if nm != "scale"
@@ -213,7 +213,7 @@ _MESH_GRID_TEST = textwrap.dedent("""
     assert np.allclose(fm.as_np(g), A.T @ A, rtol=1e-4, atol=1e-3)
 
     # Write-through save='disk': every shard's rows land in ONE store.
-    D = fm.conv_store(fm.conv_R2FM(A), "disk")
+    D = fm.persist(fm.conv_R2FM(A), tier="disk")
     (S,) = fm.materialize(fm.scale(D, save="disk"), mode="ooc")
     ref = (A - A.mean(0)) / A.std(0, ddof=1)
     assert np.allclose(fm.as_np(S), ref, rtol=1e-3, atol=1e-3)

@@ -196,7 +196,7 @@ class TestDtypesAndLazy:
     def test_materialize_flag_reuse(self):
         Xn, X = make(False)
         Y = X * 2.0
-        fm.set_mate_level(Y, "device")
+        fm.persist(Y, tier="device")
         (s,) = fm.materialize(fm.colSums(Y))
         # Y is now cut: reusing it must not recompute from X
         assert Y.m.node.cached_store is not None

@@ -32,6 +32,13 @@ Knobs (used by CI):
                   per-shard drives + cross-shard combine merges must match
                   the oracle for every cell (under 1 forced device this
                   still exercises the sharded code path with one shard)
+  FUZZ_SPARSE     when set (the sparse CI arm), ~a third of the programs
+                  run over a SPARSE source: register 0 becomes a
+                  sparse-tier matrix (ELL slab for mem/stream, a CSR
+                  ``.fmat`` for ooc) whose densified values equal the
+                  oracle's input — every cell must match the same numpy
+                  dense oracle, driving the SpMM matchers AND the
+                  generic-trace densify fallback
 """
 from __future__ import annotations
 
@@ -51,6 +58,7 @@ BASE_SEED = int(os.environ.get("FUZZ_SEED", "0"))
 FUZZ_BATCH = os.environ.get("FUZZ_BATCH", "") not in ("", "0")
 FUZZ_SERVE = os.environ.get("FUZZ_SERVE", "") not in ("", "0")
 FUZZ_MESH = os.environ.get("FUZZ_MESH", "") not in ("", "0")
+FUZZ_SPARSE = os.environ.get("FUZZ_SPARSE", "") not in ("", "0")
 
 _HOST_MESH = None
 
@@ -107,10 +115,12 @@ class Program:
     dtype: str                       # 'f32' | 'i32'
     ops: List[Tuple]
     outputs: List[int]
+    sparse: bool = False             # register 0 is a sparse-tier source
 
     def __repr__(self):
         lines = [f"Program(seed={self.seed}, n={self.n}, p={self.p}, "
-                 f"dtype={self.dtype!r},"]
+                 f"dtype={self.dtype!r},"
+                 + (f" sparse={self.sparse!r}," if self.sparse else "")]
         lines.append("  ops=[")
         for k, op in enumerate(self.ops):
             lines.append(f"    {op!r},   # -> r{k + 1}")
@@ -132,8 +142,33 @@ def _mat(seed: int, w: int, q: int) -> np.ndarray:
 def _input(prog: Program) -> np.ndarray:
     r = np.random.default_rng(prog.seed)
     if prog.dtype == "i32":
-        return r.integers(-20, 21, size=(prog.n, prog.p)).astype(np.int32)
-    return (r.normal(size=(prog.n, prog.p)) * 2).astype(np.float32)
+        x = r.integers(-20, 21, size=(prog.n, prog.p)).astype(np.int32)
+    else:
+        x = (r.normal(size=(prog.n, prog.p)) * 2).astype(np.float32)
+    if prog.sparse:
+        # The sparse arm's source: mostly-zero rows whose DENSIFIED values
+        # are exactly what the oracle consumes.
+        x = x * (r.random(size=x.shape) < 0.35)
+    return x
+
+
+def _sparse_fm(xn: np.ndarray, *, disk: bool):
+    """Register 0 of a sparse program: the same values as the oracle's
+    dense input, on the sparse tier — an ELL slab (SparseEllStore), or a
+    CSR ``.fmat`` reopened through the registry for the ooc cell."""
+    from repro import storage
+    from repro.core.matrix import FMMatrix
+    from repro.core.sparse import csr_from_dense, ell_from_csr_rows
+    indptr, indices, data = csr_from_dense(xn)
+    kmax = max(1, int(np.diff(indptr).max()) if xn.shape[0] else 1)
+    blk = ell_from_csr_rows(indptr, indices, data, 0, xn.shape[0], kmax,
+                            xn.shape[1])
+    m = FMMatrix(xn.shape, xn.dtype,
+                 store=storage.SparseEllStore(blk.cols, blk.vals,
+                                              xn.shape[1]))
+    if disk:
+        m = storage.save_sparse_matrix(m, "fuzz_sparse")
+    return fm.FM(m)
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +188,9 @@ def generate(seed: int) -> Program:
     n = int(r.choice([48, 64, 96, 130]))
     p = int(r.choice([1, 2, 3, 4]))
     dtype = "i32" if r.random() < 0.25 else "f32"
+    # Always consume the draw so program generation is identical with and
+    # without the FUZZ_SPARSE arm enabled.
+    sparse = (r.random() < 0.35) and FUZZ_SPARSE
     cap = _EST_CAP[dtype]
     regs = [_Reg("tall", p, 25.0)]
     ops: List[Tuple] = []
@@ -309,7 +347,7 @@ def generate(seed: int) -> Program:
     if not outputs:
         outputs = [len(regs) - 1]
     return Program(seed=seed, n=n, p=p, dtype=dtype, ops=ops,
-                   outputs=outputs)
+                   outputs=outputs, sparse=sparse)
 
 
 # ---------------------------------------------------------------------------
@@ -370,7 +408,10 @@ def _lazy_outputs(prog: Program, mode: str) -> list:
     """Build the program's lazy output handles (shared by the fused-serial
     and batched evaluation arms)."""
     xn = _input(prog)
-    X = fm.conv_R2FM(xn, host=(mode == "ooc"))
+    if prog.sparse:
+        X = _sparse_fm(xn, disk=(mode == "ooc"))
+    else:
+        X = fm.conv_R2FM(xn, host=(mode == "ooc"))
     regs = [X]
 
     def f1(v, f):
@@ -769,6 +810,29 @@ def test_known_program_meshed_parity():
             assert err <= 2e-3, (
                 f"cell=({backend},{mode}) r{o}: meshed err {err:.2e}")
         mz.clear_plan_cache()
+
+
+def test_known_sparse_program_parity():
+    """Always-on anchor for the FUZZ_SPARSE arm: a hand-pinned program over
+    a sparse-tier source — the SpMM gram claim (crossprod), the gather
+    matmul (matmul_small), a sink and a multipass sweep all from ONE CSR/ELL
+    register — matches the dense numpy oracle on every cell, independent of
+    the FUZZ_SPARSE budget."""
+    prog = Program(
+        seed=1357, n=130, p=3, dtype="f32", sparse=True,
+        ops=[
+            ("crossprod", 0, None),        # -> r1  SpMM gram sink
+            ("matmul", 0, 42, 2),          # -> r2  sparse gather matmul
+            ("colsums", 0),                # -> r3  sink over the sparse leaf
+            ("escalar", 3, "div", 2.0),    # -> r4  epilogue
+            ("sweeprow", 0, 4, "sub"),     # -> r5  PASS-2 sweep (densify)
+            ("sapply", 2, "abs"),          # -> r6  chain off the matmul
+        ],
+        outputs=[1, 5, 6])
+    for backend, mode in CELLS:
+        err = check_cell(prog, backend, mode)
+        assert err is None, f"cell=({backend},{mode}): {err}"
+    mz.clear_plan_cache()
 
 
 def test_generator_emits_multipass_programs():

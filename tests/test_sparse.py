@@ -1,0 +1,398 @@
+"""Sparse CSR tier tests (ISSUE 10): format round-trip, factor/one-hot
+construction, engine parity over backend × mode × mesh, sparse glm, SpMM
+dispatch visibility, the unified ``fm.persist`` surface (+ deprecation
+shims), ``fm.conf`` scoping, and ingest failure hygiene.
+
+The contract under test is the paper's Criteo story: a one-hot design
+matrix never densifies on its way through the engine — CSR on disk, ELL
+slabs in flight, nnz-proportional bytes in the stream accounting — while
+every materialized value matches the dense oracle exactly.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import storage
+from repro.core import fm
+from repro.core import materialize as mz
+from repro.core.matrix import FMMatrix
+from repro.core.sparse import (SparseBlock, csr_from_dense, csr_from_ell,
+                               ell_from_csr_rows)
+
+
+@pytest.fixture()
+def data_dir(tmp_path, monkeypatch):
+    monkeypatch.setitem(storage.registry._CONF, "data_dir", None)
+    fm.set_conf(data_dir=str(tmp_path / "fmdata"))
+    return tmp_path / "fmdata"
+
+
+def _one_hot_case(seed=0, n=600, levels=(7, 5, 11)):
+    rng = np.random.default_rng(seed)
+    codes = [rng.integers(0, lv, n) for lv in levels]
+    X = fm.one_hot(*[fm.as_factor(c, lv) for c, lv in zip(codes, levels)])
+    dense = np.zeros((n, sum(levels)), np.float32)
+    off = np.cumsum([0] + list(levels[:-1]))
+    for c, o in zip(codes, off):
+        dense[np.arange(n), c + o] = 1.0
+    return X, dense
+
+
+# ---------------------------------------------------------------------------
+# Format + block round-trips
+# ---------------------------------------------------------------------------
+
+def test_csr_fmat_roundtrip(tmp_path):
+    rng = np.random.default_rng(1)
+    dense = rng.normal(size=(97, 13)).astype(np.float32)
+    dense *= rng.random(dense.shape) < 0.3
+    indptr, indices, data = csr_from_dense(dense)
+    path = tmp_path / "m.fmat"
+    meta = storage.save_csr_matrix(path, indptr, indices, data, ncol=13)
+    assert meta["format"] == "csr" and meta["nnz"] == int(indptr[-1])
+    st = storage.open_csr(path)
+    assert st.sparse and st.shape == (97, 13)
+    np.testing.assert_array_equal(st.logical(), dense)
+    # Partition reads slice rows exactly, at the matrix-wide kmax.
+    blk = st.block(10, 40)
+    assert isinstance(blk, SparseBlock) and blk.kmax == st.max_row_nnz
+    np.testing.assert_array_equal(blk.todense(), dense[10:40])
+    # open_matrix dispatches on the header's format field.
+    st2 = storage.open_matrix(path)
+    assert isinstance(st2, storage.CsrMmapStore)
+    assert storage.peek_format(path) == "csr"
+    # The dense reader refuses a CSR file with a pointed error.
+    with pytest.raises(ValueError, match="csr"):
+        storage.read_header(path)
+
+
+def test_ell_csr_conversions():
+    rng = np.random.default_rng(2)
+    dense = rng.normal(size=(31, 9)).astype(np.float32)
+    dense *= rng.random(dense.shape) < 0.4
+    indptr, indices, data = csr_from_dense(dense)
+    kmax = max(1, int(np.diff(indptr).max()))
+    blk = ell_from_csr_rows(indptr, indices, data, 0, 31, kmax, 9)
+    np.testing.assert_array_equal(blk.todense(), dense)
+    ip2, ix2, d2 = csr_from_ell(blk.cols, blk.vals)
+    np.testing.assert_array_equal(ip2, indptr)
+    np.testing.assert_array_equal(ix2, indices)
+    np.testing.assert_array_equal(d2, data)
+
+
+def test_sparse_nbytes_is_nnz_proportional(data_dir):
+    X, dense = _one_hot_case(n=400, levels=(1000, 1000))
+    # 2 ones per row among 2000 columns: the sparse tier moves ~2·8 bytes
+    # per row, not 2000·4.
+    assert X.m.nbytes() < dense.nbytes / 50
+    Xd = fm.persist(X, tier="disk", name="wide")
+    assert Xd.m.nbytes() < dense.nbytes / 50
+
+
+# ---------------------------------------------------------------------------
+# Factor / one-hot constructors (paper Table III: fm.as.factor)
+# ---------------------------------------------------------------------------
+
+def test_as_factor_validation():
+    f = fm.as_factor(np.array([0, 2, 1, 2]))
+    assert f.num_levels == 3 and len(f) == 4
+    with pytest.raises(ValueError, match="negative"):
+        fm.as_factor(np.array([0, -1]))
+    with pytest.raises(ValueError, match="out of range"):
+        fm.as_factor(np.array([0, 5]), num_levels=3)
+    with pytest.raises(ValueError, match="integer"):
+        fm.as_factor(np.array([0.5, 1.0]))
+
+
+def test_one_hot_matches_dense_oracle():
+    X, dense = _one_hot_case()
+    assert X.m.is_sparse
+    np.testing.assert_array_equal(fm.as_np(X), dense)
+    with pytest.raises(ValueError, match="lengths differ"):
+        fm.one_hot(fm.as_factor(np.arange(4)), fm.as_factor(np.arange(5)))
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: backend × mode (× mesh below), both sparse tiers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("mode", ["whole", "stream", "ooc"])
+def test_sparse_crossprod_parity(data_dir, backend, mode):
+    X, dense = _one_hot_case(seed=3)
+    src = fm.persist(X, tier="disk", name="par") if mode == "ooc" else X
+    (G,) = fm.materialize(fm.crossprod(src), mode=mode, backend=backend)
+    np.testing.assert_allclose(
+        fm.as_np(G), dense.T.astype(np.float64) @ dense, rtol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_sparse_rowlocal_and_sinks_parity(data_dir, backend):
+    """Generic-trace coverage: row-local chains and sinks densify the ELL
+    slab per partition without mutating the shared value cache."""
+    X, dense = _one_hot_case(seed=4)
+    Z = (X * 3.0 - 1.0)
+    (zm, s, m) = fm.materialize(Z, fm.colSums(X), X @ np.full((23, 2), 0.5,
+                                                             np.float32),
+                                mode="stream", backend=backend)
+    np.testing.assert_allclose(fm.as_np(zm), dense * 3.0 - 1.0, rtol=1e-5)
+    np.testing.assert_allclose(fm.as_np(s).reshape(-1), dense.sum(0),
+                               rtol=1e-5)
+    np.testing.assert_allclose(fm.as_np(m), dense @ np.full((23, 2), 0.5),
+                               rtol=1e-5)
+
+
+def test_sparse_glm_ooc_matches_dense_oracle(data_dir):
+    """The capstone: logistic regression out-of-core from a CSR .fmat
+    equals the dense-engine fit (both float32 IRLS; beta agrees within
+    float32 noise) on every backend."""
+    from repro.algorithms.glm import glm
+    rng = np.random.default_rng(5)
+    n = 2500
+    X, dense = _one_hot_case(seed=5, n=n, levels=(13, 7, 5))
+    true_b = rng.normal(0, 0.7, dense.shape[1])
+    p = 1.0 / (1.0 + np.exp(-(dense @ true_b)))
+    y = fm.conv_R2FM((rng.random(n) < p).astype(np.float32).reshape(-1, 1))
+    oracle = glm(fm.conv_R2FM(dense), y, "logistic", ridge=1e-3,
+                 mode="whole", backend="xla")
+    Xd = fm.persist(X, tier="disk", name="glm")
+    for backend in ("xla", "pallas"):
+        r = glm(Xd, y, "logistic", ridge=1e-3, mode="ooc", backend=backend)
+        assert np.abs(r.beta - oracle.beta).max() < 1e-2, backend
+        assert abs(r.loglik - oracle.loglik) < 1e-3 * abs(oracle.loglik)
+
+
+def test_sparse_mesh_parity_subprocess(data_dir):
+    """Sharded execution over a 4-device host mesh: sparse crossprod in
+    whole/stream/ooc matches the dense oracle (the mesh axis of the
+    acceptance grid)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.core import fm
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(4)
+        rng = np.random.default_rng(3)
+        codes = [rng.integers(0, 9, 2000), rng.integers(0, 6, 2000)]
+        X = fm.one_hot(*[fm.as_factor(c) for c in codes])
+        dense = fm.as_np(X).copy()
+        want = dense.T.astype(np.float64) @ dense
+        fm.set_conf(io_partition_bytes=4096)
+        Xd = fm.persist(X, tier="disk", name="mesh_oh")
+        (g,) = fm.materialize(fm.crossprod(X), mode="whole", mesh=mesh)
+        np.testing.assert_allclose(fm.as_np(g), want, rtol=1e-3)
+        with fm.conf(mesh=mesh):
+            for src, mode in ((X, "stream"), (Xd, "ooc")):
+                fm.reset_exec_stats()
+                (g,) = fm.materialize(fm.crossprod(src), mode=mode)
+                np.testing.assert_allclose(fm.as_np(g), want, rtol=1e-3)
+                assert fm.exec_stats()["shards"] == 4
+        print("SPARSE_MESH_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, env=env,
+                          timeout=600, cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SPARSE_MESH_OK" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Dispatch visibility: SpMM claims + decline reasons (fm.explain)
+# ---------------------------------------------------------------------------
+
+def test_explain_shows_spmm_claims(data_dir):
+    from repro.algorithms.glm import glm_irls_outputs
+    X, dense = _one_hot_case(seed=6, n=400)
+    y = fm.conv_R2FM(np.ones((400, 1), np.float32))
+    text = fm.explain(fm.crossprod(X), backend="pallas")
+    assert "pallas:spmm_gram (claimed by match_spmm)" in text
+    assert "density=" in text
+    beta0 = np.zeros(dense.shape[1])
+    b_fm, ll_fm, *_ = glm_irls_outputs(X, y, beta0, "logistic")
+    text = fm.explain(b_fm, ll_fm, backend="pallas")
+    assert "pallas:spmm_wgram" in text
+    assert "pallas:spmm_xty" in text
+
+
+def test_explain_reports_decline_reasons():
+    """Satellite: a fallback segment says WHY — here a (mul,max) semiring
+    over a sparse source declines both the spmm and dense matchers."""
+    X, _ = _one_hot_case(seed=7, n=200)
+    text = fm.explain(fm.inner_prod(X.T, X, "mul", "max"), backend="pallas")
+    assert "generic trace (declined:" in text
+    assert "spmm covers (mul,sum) only" in text
+    # The xla backend has no matchers: its line is unchanged (golden-pinned
+    # in test_observability).
+    text = fm.explain(fm.inner_prod(X.T, X, "mul", "max"), backend="xla")
+    assert "xla generic trace" in text
+
+
+# ---------------------------------------------------------------------------
+# The unified persistence surface (satellite: fm.persist + shims)
+# ---------------------------------------------------------------------------
+
+def test_persist_physical_tiers(data_dir):
+    A = np.arange(12, dtype=np.float32).reshape(4, 3)
+    X = fm.conv_R2FM(A)
+    Xh = fm.persist(X, tier="host")
+    assert Xh.m.on_host and not Xh.m.on_disk
+    Xd = fm.persist(Xh, tier="disk", name="p1")
+    assert Xd.m.on_disk
+    np.testing.assert_array_equal(fm.as_np(fm.get_dense_matrix("p1")), A)
+    with pytest.raises(ValueError, match="unknown tier"):
+        fm.persist(X, tier="ssd")
+
+
+def test_persist_virtual_marks_save(data_dir):
+    A = np.arange(20, dtype=np.float32).reshape(5, 4)
+    Z = fm.conv_R2FM(A) * 2.0
+    out = fm.persist(Z, tier="disk")
+    assert out is Z and Z.m.node.save == "disk"
+    (Zm,) = fm.materialize(Z)
+    assert Zm.m.on_disk
+    np.testing.assert_allclose(fm.as_np(Zm), A * 2.0, rtol=1e-6)
+
+
+def test_persist_sparse_roundtrips_sparse(data_dir):
+    X, dense = _one_hot_case(seed=8, n=150)
+    Xd = fm.persist(X, tier="disk", name="sp")
+    assert isinstance(Xd.m.store, storage.CsrMmapStore)
+    Xh = fm.persist(Xd, tier="host")
+    assert isinstance(Xh.m.store, storage.SparseEllStore)
+    np.testing.assert_array_equal(fm.as_np(Xh), dense)
+    # Reopen by name: format dispatch keeps it sparse.
+    assert fm.get_dense_matrix("sp").m.is_sparse
+
+
+def test_deprecated_spellings_warn_and_delegate(data_dir):
+    A = np.arange(12, dtype=np.float32).reshape(4, 3)
+    with pytest.warns(DeprecationWarning, match="fm.persist"):
+        Xd = fm.conv_store(fm.conv_R2FM(A), "disk", name="old1")
+    assert Xd.m.on_disk
+    Z = fm.conv_R2FM(A) + 1.0
+    with pytest.warns(DeprecationWarning, match="fm.persist"):
+        fm.set_mate_level(Z, "disk")
+    assert Z.m.node.save == "disk"
+    # The supported spellings stay warning-free.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        fm.persist(fm.conv_R2FM(A), tier="host")
+        fm.scale(fm.conv_R2FM(A), save="disk")
+
+
+# ---------------------------------------------------------------------------
+# Config surface (satellite: known-knob table + scoped fm.conf)
+# ---------------------------------------------------------------------------
+
+def test_set_conf_rejects_unknown_knob_with_hint():
+    with pytest.raises(ValueError, match="did you mean 'prefetch'"):
+        fm.set_conf(prefetsh=True)
+    with pytest.raises(ValueError, match="known knobs"):
+        fm.set_conf(not_even_close=1)
+
+
+def test_conf_scoped_override_restores():
+    from repro.core import lowering as lowering_mod
+    from repro.core import matrix as matrix_mod
+    old_backend = lowering_mod.DEFAULT_BACKEND
+    old_bytes = matrix_mod.IO_PARTITION_BYTES
+    with fm.conf(backend="pallas", io_partition_bytes=4096) as live:
+        assert live["backend"] == "pallas"
+        assert matrix_mod.IO_PARTITION_BYTES == 4096
+    assert lowering_mod.DEFAULT_BACKEND == old_backend
+    assert matrix_mod.IO_PARTITION_BYTES == old_bytes
+    # Restores on error too.
+    with pytest.raises(RuntimeError):
+        with fm.conf(io_partition_bytes=8192):
+            raise RuntimeError("boom")
+    assert matrix_mod.IO_PARTITION_BYTES == old_bytes
+    with pytest.raises(ValueError, match="unknown config knob"):
+        with fm.conf(backnd="xla"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# Streaming factor ingest + failure hygiene (satellite: no partial .fmat)
+# ---------------------------------------------------------------------------
+
+def test_ingest_factor_csv_roundtrip(data_dir, tmp_path):
+    rng = np.random.default_rng(9)
+    codes = np.stack([rng.integers(0, 6, 500), rng.integers(0, 4, 500)], 1)
+    csv = tmp_path / "f.csv"
+    np.savetxt(csv, codes, fmt="%d", delimiter=",")
+    X = fm.load_factor_matrix(str(csv), "criteo_mini", num_levels=[6, 4],
+                              chunk_rows=64)
+    assert X.m.is_sparse and X.shape == (500, 10)
+    dense = np.zeros((500, 10), np.float32)
+    dense[np.arange(500), codes[:, 0]] = 1.0
+    dense[np.arange(500), 6 + codes[:, 1]] = 1.0
+    np.testing.assert_array_equal(fm.as_np(X), dense)
+
+
+def test_ingest_factor_cardinality_overflow(data_dir, tmp_path):
+    codes = np.array([[0, 1], [2, 9]])
+    csv = tmp_path / "bad.csv"
+    np.savetxt(csv, codes, fmt="%d", delimiter=",")
+    with pytest.raises(ValueError, match="cardinality overflow"):
+        fm.load_factor_matrix(str(csv), "overflow", num_levels=[3, 4])
+    dest = storage.registry.matrix_path("overflow")
+    assert not dest.exists(), "partial .fmat left behind"
+    assert not list(dest.parent.glob("*.tmp")), "sidecar temp left behind"
+
+
+def test_ingest_csv_malformed_rows_no_partial(data_dir, tmp_path):
+    csv = tmp_path / "mal.csv"
+    csv.write_text("1.0,2.0\n3.0,not_a_number\n")
+    with pytest.raises(ValueError, match="malformed CSV"):
+        fm.load_dense_matrix(str(csv), "mal")
+    assert not storage.registry.matrix_path("mal").exists()
+
+
+def test_ingest_csv_ragged_rows_no_partial(data_dir, tmp_path):
+    csv = tmp_path / "rag.csv"
+    # Chunked so the ragged row is seen AFTER a chunk already wrote.
+    rows = ["1.0,2.0"] * 5 + ["1.0,2.0,3.0"]
+    csv.write_text("\n".join(rows) + "\n")
+    with pytest.raises(ValueError, match="ragged"):
+        fm.load_dense_matrix(str(csv), "rag", chunk_rows=2)
+    assert not storage.registry.matrix_path("rag").exists()
+
+
+def test_ingest_binary_dtype_mismatch_no_partial(data_dir, tmp_path):
+    raw = tmp_path / "odd.bin"
+    raw.write_bytes(b"\x00" * 10)  # not a whole number of 3-col f32 rows
+    with pytest.raises(ValueError, match="whole number"):
+        fm.load_dense_matrix(str(raw), "oddbin", ncol=3)
+    assert not storage.registry.matrix_path("oddbin").exists()
+
+
+# ---------------------------------------------------------------------------
+# Engine bookkeeping: signatures, stream accounting
+# ---------------------------------------------------------------------------
+
+def test_sparse_signature_differs_from_dense(data_dir):
+    from repro.core.fusion import Plan
+    X, dense = _one_hot_case(seed=10, n=100)
+    D = fm.conv_R2FM(dense)
+    assert (Plan([fm.crossprod(X).m]).signature()
+            != Plan([fm.crossprod(D).m]).signature())
+
+
+def test_sparse_stream_moves_nnz_bytes(data_dir):
+    """exec stats over an ooc sparse stream account the CSR/ELL bytes, not
+    the dense nrow·ncol·itemsize — the tier's whole point."""
+    X, dense = _one_hot_case(seed=11, n=3000, levels=(500, 400))
+    Xd = fm.persist(X, tier="disk", name="acct")
+    with fm.collect_stats() as sc:
+        fm.materialize(fm.crossprod(Xd), mode="ooc")
+    moved = sc.stats()["stage_bytes_read"]
+    assert 0 < moved < dense.nbytes / 10, (moved, dense.nbytes)

@@ -181,7 +181,7 @@ def test_registry_roundtrip(data_dir):
 def test_conv_store_disk(data_dir):
     A = _arr()
     X = fm.conv_R2FM(A)
-    Xd = fm.conv_store(X, "disk", name="spilled")
+    Xd = fm.persist(X, tier="disk", name="spilled")
     assert Xd.m.on_disk
     np.testing.assert_array_equal(fm.as_np(Xd), A)
     np.testing.assert_array_equal(fm.as_np(fm.get_dense_matrix("spilled")), A)
@@ -312,7 +312,7 @@ def test_spill_to_disk_output(data_dir):
     A = _arr(4000, 4)
     Xd = fm.load_dense_matrix(A, "base")
     Z = fm.abs_(Xd) * 2.0 - 1.0
-    fm.set_mate_level(Z, "disk")
+    fm.persist(Z, tier="disk")
     (Zm,) = fm.materialize(Z)
     assert Zm.m.on_disk
     np.testing.assert_allclose(fm.as_np(Zm), np.abs(A) * 2.0 - 1.0, rtol=1e-6)
@@ -320,7 +320,7 @@ def test_spill_to_disk_output(data_dir):
     # whole-mode spill of a device-resident computation
     W = fm.conv_R2FM(A)
     Z2 = fm.sqrt(fm.abs_(W))
-    fm.set_mate_level(Z2, "disk")
+    fm.persist(Z2, tier="disk")
     (Z2m,) = fm.materialize(Z2, mode="whole")
     assert Z2m.m.on_disk
     np.testing.assert_allclose(fm.as_np(Z2m), np.sqrt(np.abs(A)), rtol=1e-6)
@@ -331,9 +331,9 @@ def test_disk_source_disk_sink_pipeline(data_dir):
     A = _arr(3000, 3)
     Xd = fm.load_dense_matrix(A, "pipe_in")
     Z = (Xd - 1.0) / 2.0
-    fm.set_mate_level(Z, "disk")
+    fm.persist(Z, tier="disk")
     (Zm,) = fm.materialize(Z)
-    out = fm.conv_store(Zm, "disk", name="pipe_out")
+    out = fm.persist(Zm, tier="disk", name="pipe_out")
     np.testing.assert_allclose(fm.as_np(fm.get_dense_matrix("pipe_out")),
                                (A - 1.0) / 2.0, rtol=1e-6)
 
@@ -364,7 +364,7 @@ def test_spill_to_disk_survives_plan_cache(data_dir):
     for i in range(3):  # identical signature each round → cache hit on 2nd+
         Xd = fm.load_dense_matrix(A + i, f"sp{i}")
         Z = fm.abs_(Xd) * 2.0
-        fm.set_mate_level(Z, "disk")
+        fm.persist(Z, tier="disk")
         (Zm,) = fm.materialize(Z)
         assert Zm.m.on_disk, f"round {i} lost the disk spill target"
         np.testing.assert_allclose(fm.as_np(Zm), np.abs(A + i) * 2.0,
@@ -400,12 +400,12 @@ def test_plan_cache_hit_preserves_first_dag(data_dir):
     mz.clear_plan_cache()
     A = fm.conv_R2FM(np.full((64, 2), 2.0, np.float32))
     VA = A + 0.0
-    fm.set_mate_level(VA, "device")       # persisted cut point
+    fm.persist(VA, tier="device")       # persisted cut point
     VB = VA * 10.0                        # depends on VA's persisted value
     fm.materialize(VA)
     # structurally identical DAG over different data → cache hit
     VC = fm.conv_R2FM(np.full((64, 2), 5.0, np.float32)) + 0.0
-    fm.set_mate_level(VC, "device")
+    fm.persist(VC, tier="device")
     (VCm,) = fm.materialize(VC)
     np.testing.assert_allclose(fm.as_np(VCm), 5.0)
     (VBm,) = fm.materialize(VB)
@@ -535,7 +535,7 @@ def test_interrupted_stream_leaks_no_prefetcher_state(data_dir):
     fm.set_conf(io_partition_bytes=4096)  # force a real multi-partition sweep
     try:
         A = _arr(4096, 4)
-        X = fm.conv_store(fm.conv_R2FM(A), "disk")
+        X = fm.persist(fm.conv_R2FM(A), tier="disk")
         store = X.m.store
         orig_block, reads = store.block, {"n": 0}
 
@@ -570,7 +570,7 @@ def test_abandoned_prefetcher_close_drains_late_enqueue(data_dir):
     queue's put(): repeatedly abandon a stream mid-flight with a FULL
     queue and assert no staged block survives shutdown."""
     A = _arr(4096, 4)
-    X = fm.conv_store(fm.conv_R2FM(A), "disk")
+    X = fm.persist(fm.conv_R2FM(A), tier="disk")
     pairs = [(0, X.m)]
     for _ in range(10):
         pf = storage.PartitionPrefetcher(pairs, 256, 4096, depth=1)
